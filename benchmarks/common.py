@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: CSV emission + calibrated model access.
+
+Numbers come from two sources, always labeled:
+  - ``counts``  — exact operation counts from the functional PMem sim
+    (barriers, device blocks, same-line rewrites). Ground truth.
+  - ``modeled`` — nanoseconds via the cost model calibrated to the paper's
+    measured ratios (core/costmodel.py docstring lists every target).
+This container has no Optane hardware; wall-clock would measure the Python
+interpreter, not the algorithms.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Any, Iterable
+
+ROWS: list = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Print one CSV row: name,us_per_call,derived."""
+    row = f"{name},{us_per_call:.4f},{derived}"
+    ROWS.append(row)
+    print(row)
+    sys.stdout.flush()
+
+
+def check(name: str, ok: bool, detail: str = "") -> bool:
+    status = "PASS" if ok else "FAIL"
+    print(f"# CHECK {status}: {name}  {detail}")
+    return ok

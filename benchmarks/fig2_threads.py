@@ -1,0 +1,51 @@
+"""Paper Fig. 2: PMem bandwidth vs thread count (4 adjacent lines).
+
+Reproduces: streaming stores peak at ≈3 threads; store+clwb scales to
+≈12; bare stores stop write-combining beyond ≈4 threads; over-saturation
+degrades throughput past the peak (guideline G4).
+"""
+
+from __future__ import annotations
+
+from repro.core import COST_MODEL, FlushKind
+
+from benchmarks.common import check, emit
+
+
+def run() -> bool:
+    cm = COST_MODEL
+    curves = {}
+    for kind, label in ((FlushKind.NT, "nt"), (FlushKind.CLWB, "store+clwb"),
+                        (FlushKind.FLUSH, "store")):
+        curve = []
+        for t in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48):
+            bw = cm.store_bandwidth_gbps(4, t, kind)
+            curve.append((t, bw))
+            emit(f"fig2.store.pmem.{label}.t{t}", 256 / 1e9 / bw * 1e6,
+                 f"{bw:.2f}GB/s")
+        curves[label] = dict(curve)
+    for t in (1, 4, 12, 24, 48):
+        bw = cm.load_bandwidth_gbps(4, t)
+        emit(f"fig2.load.pmem.t{t}", 256 / 1e9 / bw * 1e6, f"{bw:.2f}GB/s")
+
+    ok = True
+    nt = curves["nt"]
+    clwb = curves["store+clwb"]
+    bare = curves["store"]
+    nt_peak = max(nt, key=nt.get)
+    clwb_peak = max(clwb, key=clwb.get)
+    ok &= check("fig2: nt stores peak at ~3 threads", 2 <= nt_peak <= 4,
+                f"peak at {nt_peak}")
+    ok &= check("fig2: clwb stores peak at ~12 threads", 8 <= clwb_peak <= 16,
+                f"peak at {clwb_peak}")
+    ok &= check("fig2: oversaturation degrades (G4)",
+                nt[48] < nt[nt_peak] and clwb[48] < clwb[clwb_peak],
+                f"nt {nt[48]:.1f}<{nt[nt_peak]:.1f}")
+    ok &= check("fig2: bare stores collapse past 4 threads",
+                bare[8] < 0.55 * clwb[8] and abs(bare[2] - clwb[2]) / clwb[2] < 0.2,
+                f"t8 {bare[8]:.1f} vs {clwb[8]:.1f}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,0 +1,40 @@
+"""Paper Fig. 3: random-access read latency.
+
+DRAM vs PMem (app direct) vs memory-mode with small (8 GB, DRAM-cached)
+and large (360 GB, cache-thrashing) working sets. PMem = 3.2× DRAM.
+"""
+
+from __future__ import annotations
+
+from repro.core import COST_MODEL
+
+from benchmarks.common import check, emit
+
+
+def run() -> bool:
+    cm = COST_MODEL
+    dram = cm.dram.load_latency_ns
+    pmem = cm.load_latency_ns
+    mm_small = dram * (1 + cm.memory_mode_hit_overhead)
+    # 360GB working set vs ~200GB DRAM cache: miss rate ~(360-200)/360
+    miss = (360 - 200) / 360
+    mm_large = (1 - miss) * mm_small + miss * pmem
+
+    emit("fig3.read_latency.dram", dram / 1000, f"{dram:.0f}ns")
+    emit("fig3.read_latency.pmem", pmem / 1000, f"{pmem:.0f}ns")
+    emit("fig3.read_latency.memmode_8gb", mm_small / 1000, f"{mm_small:.0f}ns")
+    emit("fig3.read_latency.memmode_360gb", mm_large / 1000, f"{mm_large:.0f}ns")
+
+    ok = True
+    ok &= check("fig3: PMem read latency 3.2x DRAM",
+                3.0 < pmem / dram < 3.4, f"{pmem / dram:.2f}")
+    ok &= check("fig3: memory mode ~10% overhead when cached",
+                1.05 < mm_small / dram < 1.15, f"{mm_small / dram:.2f}")
+    ok &= check("fig3: memory mode degrades when working set >> DRAM",
+                mm_large > 1.5 * dram and mm_large < pmem,
+                f"{mm_large:.0f}ns")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,0 +1,44 @@
+"""Paper Fig. 4: persistent-write latency — same / sequential / random
+cache line × flush / flushopt / clwb / streaming.
+
+Reproduces: same-line persists are the pathology (streaming strongly
+preferred there); clwb == flushopt because Cascade Lake implements clwb as
+flushopt; among non-streaming variants there is "no significant
+difference" within a pattern group.
+"""
+
+from __future__ import annotations
+
+from repro.core import COST_MODEL, AccessPattern, FlushKind
+
+from benchmarks.common import check, emit
+
+
+def run() -> bool:
+    cm = COST_MODEL
+    table = {}
+    for pat in AccessPattern:
+        for kind in FlushKind:
+            ns = cm.persist_latency_ns(kind, pat)
+            table[(pat, kind)] = ns
+            emit(f"fig4.persist.{pat.value}.{kind.value}", ns / 1000, f"{ns:.0f}ns")
+
+    ok = True
+    same, seq = AccessPattern.SAME_LINE, AccessPattern.SEQUENTIAL
+    ok &= check("fig4: streaming wins on same-line writes",
+                table[(same, FlushKind.NT)] < 0.4 * table[(same, FlushKind.CLWB)],
+                f"{table[(same, FlushKind.NT)]:.0f} vs {table[(same, FlushKind.CLWB)]:.0f}")
+    ok &= check("fig4: clwb == flushopt (Cascade Lake)",
+                all(abs(table[(p, FlushKind.CLWB)] - table[(p, FlushKind.FLUSHOPT)])
+                    / table[(p, FlushKind.FLUSHOPT)] < 0.05 for p in AccessPattern))
+    ok &= check("fig4: same-line >> sequential for cached flushes",
+                table[(same, FlushKind.CLWB)] > 3 * table[(seq, FlushKind.CLWB)],
+                f"{table[(same, FlushKind.CLWB)]:.0f} vs {table[(seq, FlushKind.CLWB)]:.0f}")
+    ok &= check("fig4: clflush never beats clwb/flushopt",
+                all(table[(p, FlushKind.FLUSH)] >= table[(p, FlushKind.CLWB)]
+                    for p in AccessPattern))
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

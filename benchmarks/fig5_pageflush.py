@@ -1,0 +1,150 @@
+"""Paper Fig. 5: failure-atomic page flush — 16 KB pages, CoW (all lines /
+dirty lines ☆) vs µLog vs Hybrid, across dirty-line counts and threads.
+
+Counts come from the functional PageStore sim (exact barriers / device
+blocks); time from the calibrated model incl. the multi-thread
+write-combining collapse that moves the µLog crossover from ≈119 dirty
+lines (1 thread) to ≈31 (7 threads). Also reproduces §3.2.1's ≈10 % win
+of pvn-CoW over invalidate-CoW, and Fig. 5(b)'s throughput peak at 7-11
+writer threads.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    COST_MODEL,
+    AccessPattern,
+    FlushKind,
+    HybridPolicy,
+    PMem,
+    PageStore,
+    PageStoreLayout,
+)
+
+from benchmarks.common import check, emit
+
+PAGE = 16384  # 256 cache lines, as in the paper
+
+
+def fresh_store():
+    layout = PageStoreLayout(base=0, page_size=PAGE, npages=2, nslots=4)
+    pm = PMem(layout.total_bytes + 64 * 4096)
+    pm.memset_zero()
+    return pm, PageStore(pm, layout)
+
+
+def measured_cost_ns(technique: str, dirty: int, threads: int) -> float:
+    """Run the real protocol in the sim; convert its op counts to time."""
+    pm, store = fresh_store()
+    page = np.arange(PAGE, dtype=np.uint8)
+    store.flush_cow(0, page)
+    store.flush_cow(0, page)  # establish current + shadow
+    page2 = page.copy()
+    lines = list(range(dirty))  # sequential dirty run (buffer-manager-like)
+    for li in lines:
+        page2[li * 64 : (li + 1) * 64] ^= 0xFF
+    before = pm.stats.snapshot()
+    if technique == "cow":
+        store.flush_cow(0, page2)
+    elif technique == "cow_dirty":
+        store.flush_cow(0, page2, dirty_lines=lines)
+    elif technique == "cow_invalidate":
+        store.flush_cow(0, page2, invalidate_first=True)
+    elif technique == "mulog":
+        store.flush_mulog(0, page2, lines)
+    delta = pm.stats.delta(before)
+    return COST_MODEL.time_ns(delta, kind=FlushKind.NT,
+                              pattern=AccessPattern.SEQUENTIAL, threads=threads)
+
+
+def run() -> bool:
+    layout = PageStoreLayout(base=0, page_size=PAGE, npages=2, nslots=4)
+    pol = HybridPolicy(layout)
+    ok = True
+
+    # --- (a)/(c): pages/s vs dirty lines at 1 and 7 threads -------------
+    for threads in (1, 7):
+        for dirty in (1, 8, 32, 64, 112, 128, 192, 256):
+            cow = pol.cow_cost_ns(threads)
+            mu = pol.mulog_cost_ns(dirty, threads)
+            hyb = min(cow, mu)
+            n_thr = threads
+            for name, ns in (("cow", cow), ("mulog", mu), ("hybrid", hyb)):
+                emit(f"fig5.t{threads}.d{dirty}.{name}", ns / 1000,
+                     f"{n_thr / ns * 1e9:.0f}pages/s/threadgroup")
+
+    x1, x7 = pol.crossover(1), pol.crossover(7)
+    emit("fig5.crossover.t1", 0, f"{x1}dirty_lines")
+    emit("fig5.crossover.t7", 0, f"{x7}dirty_lines")
+    ok &= check("fig5: 1-thread crossover ≈112 (96..136)", 96 <= x1 <= 136, str(x1))
+    ok &= check("fig5: 7-thread crossover ≈32 (24..40)", 24 <= x7 <= 40, str(x7))
+
+    # --- sim-backed spot checks (barriers & device bytes are exact) ------
+    # pvn-vs-invalidate: the exact claim is 3 barriers → 2 (§3.2.1); the
+    # throughput delta depends on how "hot" the old slot header still is in
+    # the WC buffer: flushing the same page back-to-back re-persists a hot
+    # line (paper's ≈10 % sits between our cold ≈4 % and hot ≈20 % bounds).
+    pm, store = fresh_store()
+    page = np.arange(PAGE, dtype=np.uint8)
+    store.flush_cow(0, page)
+    b0 = pm.stats.barriers
+    store.flush_cow(0, page)
+    pvn_barriers = pm.stats.barriers - b0
+    store.flush_cow(0, page, invalidate_first=True)
+    inv_barriers = pm.stats.barriers - b0 - pvn_barriers
+    ok &= check("fig5: pvn removes the 3rd barrier (exact count)",
+                pvn_barriers == 2 and inv_barriers == 3,
+                f"{inv_barriers}→{pvn_barriers}")
+    cow_ns = measured_cost_ns("cow", 256, 1)
+    inv_ns = measured_cost_ns("cow_invalidate", 256, 1)
+    hot_gain = (1 / cow_ns) / (1 / inv_ns) - 1
+
+    def cold_cost(invalidate: bool) -> float:
+        # round-robin over many pages: old headers are cold, as in the
+        # paper's background-flusher setting
+        layout = PageStoreLayout(base=0, page_size=PAGE, npages=8, nslots=16)
+        pm = PMem(layout.total_bytes + 64 * 4096)
+        pm.memset_zero()
+        store = PageStore(pm, layout)
+        page = np.arange(PAGE, dtype=np.uint8)
+        for pid in range(8):
+            store.flush_cow(pid, page)
+        before = pm.stats.snapshot()
+        for pid in range(8):
+            store.flush_cow(pid, page, invalidate_first=invalidate)
+        delta = pm.stats.delta(before)
+        return COST_MODEL.time_ns(delta, kind=FlushKind.NT,
+                                  pattern=AccessPattern.SEQUENTIAL, threads=1) / 8
+
+    cold_gain = cold_cost(True) / cold_cost(False) - 1
+    emit("fig5.cow_pvn.hot", cow_ns / 1000, f"+{hot_gain * 100:.1f}%_vs_invalidate")
+    emit("fig5.cow_pvn.cold", cold_cost(False) / 1000,
+         f"+{cold_gain * 100:.1f}%_vs_invalidate")
+    ok &= check("fig5: pvn gain brackets the paper's ≈10% (cold..hot)",
+                0.005 < cold_gain < 0.12 and 0.08 < hot_gain < 0.40,
+                f"cold={cold_gain * 100:.1f}% hot={hot_gain * 100:.1f}%")
+
+    mu8 = measured_cost_ns("mulog", 8, 1)
+    ok &= check("fig5: µLog beats CoW for few dirty lines (sim-backed)",
+                mu8 < cow_ns, f"{mu8:.0f} < {cow_ns:.0f}")
+    mu256 = measured_cost_ns("mulog", 256, 1)
+    ok &= check("fig5: CoW beats µLog for fully-dirty pages (sim-backed)",
+                cow_ns < mu256, f"{cow_ns:.0f} < {mu256:.0f}")
+
+    # --- (b): thread scaling, full-page CoW ------------------------------
+    best_t, best_rate = 0, 0.0
+    for t in (1, 2, 4, 7, 9, 11, 16, 24):
+        ns = pol.cow_cost_ns(t)
+        rate = t / ns * 1e9
+        emit(f"fig5.scaling.t{t}", ns / 1000, f"{rate:.0f}pages/s")
+        if rate > best_rate:
+            best_t, best_rate = t, rate
+    ok &= check("fig5: aggregate throughput peaks at 7-11 threads",
+                7 <= best_t <= 11, f"peak at {best_t}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

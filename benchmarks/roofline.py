@@ -1,0 +1,121 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, three terms in seconds per step:
+
+  compute    = HLO_FLOPs / peak_FLOP/s            (197 TFLOP/s bf16 / chip)
+  memory     = HLO_bytes / HBM_bw                 (819 GB/s / chip)
+  collective = collective_bytes / link_bw         (~50 GB/s/link ICI)
+
+All three inputs are *per-device* quantities extracted from the compiled
+partitioned HLO by launch/hlo_analysis.py (scan bodies × trip counts).
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N(_active)
+per token for decode — the ratio MODEL/HLO exposes remat & padding waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.configs import ALIASES, get_config
+from repro.launch.specs import SHAPES
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
+HBM_BW = 819e9          # B/s / chip
+LINK_BW = 50e9          # B/s / ICI link
+
+
+def model_flops_per_device(arch: str, shape: str, ndev: int, kind: str) -> float:
+    cfg = get_config(arch)
+    n_active = cfg.active_param_count()
+    info = SHAPES[shape]
+    if kind == "train":
+        tokens = info["seq"] * info["batch"]
+        return 6.0 * n_active * tokens / ndev
+    if kind == "prefill":
+        tokens = info["seq"] * info["batch"]
+        return 2.0 * n_active * tokens / ndev
+    # decode: one token per sequence
+    return 2.0 * n_active * info["batch"] / ndev
+
+
+def load_cells(art_dir: str) -> List[Dict[str, Any]]:
+    cells = []
+    for fn in sorted(os.listdir(art_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(art_dir, fn)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def analyze_cell(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if cell["status"] != "ok":
+        return None
+    h = cell["hlo_analysis"]
+    ndev = cell["ndev"]
+    t_comp = h["flops"] / PEAK_FLOPS
+    t_mem = h["traffic_bytes"] / HBM_BW
+    t_coll = h["collective_bytes"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(
+        ALIASES.get(cell["arch"], cell["arch"]), cell["shape"], ndev,
+        cell.get("kind", "train"))
+    bound = max(terms.values())
+    # roofline fraction: useful model flops at peak vs the modeled step time
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "kind": cell.get("kind"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops": h["flops"],
+        "useful_ratio": mf / h["flops"] if h["flops"] else 0.0,
+        "roofline_fraction": frac,
+        "temp_bytes": cell["memory"]["temp_bytes"],
+    }
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def run(art_dir: str = "artifacts/dryrun") -> List[Dict[str, Any]]:
+    cells = load_cells(art_dir)
+    rows = []
+    print("arch,shape,mesh,kind,t_compute_s,t_memory_s,t_collective_s,"
+          "dominant,useful_ratio,roofline_fraction,temp_GiB")
+    skipped, errors = 0, 0
+    for cell in cells:
+        if cell["status"] == "skipped":
+            skipped += 1
+            print(f"{cell['arch']},{cell['shape']},{cell['mesh']},skipped,,,,,,,")
+            continue
+        if cell["status"] == "error":
+            errors += 1
+            print(f"{cell['arch']},{cell['shape']},{cell['mesh']},ERROR,,,,,,,")
+            continue
+        r = analyze_cell(cell)
+        rows.append(r)
+        print(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['kind']},"
+            f"{_fmt(r['t_compute_s'])},{_fmt(r['t_memory_s'])},"
+            f"{_fmt(r['t_collective_s'])},{r['dominant']},"
+            f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+            f"{(r['temp_bytes'] or 0) / 2**30:.1f}")
+    print(f"# cells: {len(rows)} ok, {skipped} skipped, {errors} errors")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        coll = max(rows, key=lambda r: r["t_collective_s"] /
+                   max(r["t_compute_s"] + r["t_memory_s"], 1e-12))
+        print(f"# worst roofline fraction: {worst['arch']}|{worst['shape']}|"
+              f"{worst['mesh']} ({worst['roofline_fraction']:.3f})")
+        print(f"# most collective-bound: {coll['arch']}|{coll['shape']}|"
+              f"{coll['mesh']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")

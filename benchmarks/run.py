@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark plus
+``# CHECK PASS/FAIL`` lines for every claim validated against the paper.
+Exit code is non-zero if any check fails.
+
+Roofline/dry-run results (benchmarks/roofline.py) are included when
+artifacts/dryrun/*.json exist (produced by ``python -m repro.launch.dryrun
+--all --mesh both --out artifacts/dryrun``).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_bandwidth,
+        fig2_threads,
+        fig3_read_latency,
+        fig4_persist_latency,
+        fig5_pageflush,
+        fig6_logging,
+        tab_ycsb,
+    )
+
+    ok = True
+    for mod, title in (
+        (fig1_bandwidth, "Fig.1 bandwidth vs access granularity"),
+        (fig2_threads, "Fig.2 bandwidth vs thread count"),
+        (fig3_read_latency, "Fig.3 read latency"),
+        (fig4_persist_latency, "Fig.4 persistent-write latency"),
+        (fig5_pageflush, "Fig.5 failure-atomic page flush"),
+        (fig6_logging, "Fig.6 transaction log throughput"),
+        (tab_ycsb, "§3.3.2 YCSB validation"),
+    ):
+        print(f"\n### {title}")
+        ok &= mod.run()
+
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):
+        print("\n### Roofline (from dry-run artifacts)")
+        from benchmarks import roofline
+        roofline.run(art)
+
+    print("\n### kernel sanity (interpret mode vs oracle)")
+    from benchmarks import kernels_bench
+    ok &= kernels_bench.run()
+
+    print(f"\n=== {'ALL CHECKS PASS' if ok else 'SOME CHECKS FAILED'} ===")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end training driver example: a TinyLlama-family model trained on
+the synthetic pipeline for a few hundred steps with the full persistence
+stack (Zero-log WAL each step, async hybrid CoW/µLog checkpoints).
+
+Default runs a ~25M-param model sized for this CPU container; pass
+--full100m for the ~100M variant (same code path, longer wall time).
+
+  PYTHONPATH=src python examples/train_tinyllama.py [--steps 200] [--full100m]
+"""
+
+import argparse
+import dataclasses
+import json
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import Trainer, TrainerConfig
+import repro.configs.tinyllama_1_1b as tl
+
+
+def model_cfg(full100m: bool):
+    base = tl.CONFIG
+    if full100m:
+        return dataclasses.replace(
+            base, name="tinyllama-100m", num_layers=10, d_model=640,
+            num_heads=10, num_kv_heads=2, head_dim=64, d_ff=1792,
+            vocab_size=32000, tp_heads_multiple=1)
+    return dataclasses.replace(
+        base, name="tinyllama-25m", num_layers=6, d_model=384,
+        num_heads=6, num_kv_heads=2, head_dim=64, d_ff=1024,
+        vocab_size=8192, tp_heads_multiple=1, vocab_pad=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full100m", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = model_cfg(args.full100m)
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M")
+    out = args.out or tempfile.mkdtemp(prefix="repro_train_")
+    tc = TrainerConfig(arch="tinyllama-1.1b", reduced=True, steps=args.steps,
+                       batch=args.batch, seq=args.seq, ckpt_every=50,
+                       out=out, lr=1e-3)
+    t = Trainer(tc)
+    t.cfg = cfg                     # swap in the example config
+    from repro.launch.steps import build_train_step
+    from repro.optim import AdamWConfig, adamw_init
+    from repro.models import init_params
+    from repro.data import SyntheticPipeline
+    import jax
+    t.pipeline = SyntheticPipeline(cfg, tc.batch, tc.seq)
+    t.step_fn = jax.jit(build_train_step(cfg, AdamWConfig(lr=tc.lr),
+                                         total_steps=args.steps))
+    t.params = init_params(cfg, jax.random.key(0))
+    t.opt_state = adamw_init(t.params)
+    report = t.run()
+    losses = report["losses"]
+    k = max(1, len(losses) // 10)
+    print(json.dumps({
+        "steps": report["steps"], "wall_s": round(report["wall_s"], 1),
+        "loss_first": round(float(np.mean(losses[:k])), 4),
+        "loss_last": round(float(np.mean(losses[-k:])), 4),
+        "wal_barriers_per_step": report["wal_barriers_per_step"],
+    }, indent=1))
+    assert np.mean(losses[-k:]) < np.mean(losses[:k]) - 0.3, \
+        "loss did not improve"
+    print("loss improved  OK")
+
+
+if __name__ == "__main__":
+    main()

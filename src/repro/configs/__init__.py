@@ -1,0 +1,55 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Each module defines ``CONFIG`` (the exact published configuration) and
+``reduced()`` (a small same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "recurrentgemma_9b",
+    "phi35_moe_42b",
+    "deepseek_v2_236b",
+    "tinyllama_1_1b",
+    "stablelm_12b",
+    "codeqwen15_7b",
+    "deepseek_coder_33b",
+    "mamba2_130m",
+    "qwen2_vl_7b",
+    "whisper_large_v3",
+]
+
+#: assignment-sheet name → module id
+ALIASES: Dict[str, str] = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "stablelm-12b": "stablelm_12b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "mamba2-130m": "mamba2_130m",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

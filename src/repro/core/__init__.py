@@ -1,0 +1,38 @@
+"""The paper's primary contribution: PMem I/O primitives.
+
+- :mod:`repro.core.pmem`      — functional PMem model (cache/WC semantics,
+  crash simulation, exact op accounting)
+- :mod:`repro.core.log`       — Classic / Header(±dancing) / Zero logging
+- :mod:`repro.core.pageflush` — CoW(+pvn) / µLog / Hybrid page flushing
+- :mod:`repro.core.recovery`  — minimal buffer-managed KV engine (YCSB
+  validation target)
+- :mod:`repro.core.costmodel` — counts → time, calibrated to the paper
+"""
+
+from repro.core.blocks import (  # noqa: F401
+    BlockGeometry,
+    CACHE_LINE,
+    PAPER_GEOMETRY,
+    PMEM_BLOCK,
+    TPU_GEOMETRY,
+    TPU_TILE,
+)
+from repro.core.costmodel import COST_MODEL, DRAMCostModel, PMemCostModel  # noqa: F401
+from repro.core.log import (  # noqa: F401
+    ClassicLog,
+    HeaderLog,
+    LOG_TECHNIQUES,
+    LogConfig,
+    RecoveredLog,
+    ZeroLog,
+)
+from repro.core.pageflush import (  # noqa: F401
+    HybridPolicy,
+    MicroLog,
+    PageStore,
+    PageStoreLayout,
+    recover_page_table,
+)
+from repro.core.persist import AccessPattern, FlushKind, INVALID_PID  # noqa: F401
+from repro.core.pmem import CrashImage, PMem, PMemStats  # noqa: F401
+from repro.core.recovery import KVConfig, PersistentKV  # noqa: F401

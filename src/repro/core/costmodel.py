@@ -1,0 +1,225 @@
+"""Cost model calibrated to the paper's measured PMem characteristics.
+
+This container has no Optane DIMMs (and the deploy target, TPU v5e hosts,
+never will); wall-clock here measures nothing about the algorithms. The
+functional layer (`core.pmem`) therefore records *exact operation counts*,
+and this module converts counts → modeled nanoseconds with constants
+calibrated so that every ratio the paper reports is reproduced:
+
+  - read latency: PMem 3.2× DRAM                     (Fig. 3)
+  - read bandwidth: PMem 2.6× below DRAM             (§2.2)
+  - write bandwidth: PMem 7.5× below DRAM            (§2.2)
+  - peak write BW only at 256 B granularity          (Fig. 1)
+  - nt stores peak ≈3 threads, clwb ≈12, regular
+    stores stop combining beyond ≈4 threads          (Fig. 2)
+  - persist latency: same-line ≫ sequential/random,
+    streaming ≫ cheaper on same-line, clwb==flushopt (Fig. 4)
+  - log-entry padding → ≈8× throughput               (Fig. 6)
+  - Zero ≈2× Classic log throughput                  (Fig. 6, §5)
+  - CoW with pvn ≈10 % over CoW-invalidate           (§3.2.1)
+  - µLog/CoW crossover ≈112 dirty CLs @1 thread,
+    ≈32 @7 threads (16 KB pages)                     (Fig. 5)
+
+Absolute constants are representative of published Optane measurements; the
+*ratios* are the calibrated quantity and are what benchmarks assert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.blocks import CACHE_LINE, PMEM_BLOCK
+from repro.core.persist import AccessPattern, FlushKind
+from repro.core.pmem import PMemStats
+
+__all__ = ["PMemCostModel", "DRAMCostModel", "COST_MODEL"]
+
+GiB = float(1 << 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMCostModel:
+    """DRAM reference numbers (per socket, 24 threads) — paper Fig. 1-4."""
+
+    load_latency_ns: float = 81.0
+    load_bw_gbps: float = 68.3          # random 64 B-granular loads, 24 thr
+    store_bw_nt_gbps: float = 52.0      # streaming stores
+    store_bw_regular_gbps: float = 38.0  # regular stores (RFO traffic)
+
+
+@dataclasses.dataclass(frozen=True)
+class PMemCostModel:
+    dram: DRAMCostModel = dataclasses.field(default_factory=DRAMCostModel)
+
+    # Latency (Fig. 3): PMem random read = 3.2 × DRAM.
+    load_latency_ns: float = 81.0 * 3.2
+    # Memory-mode L4 miss penalty (§2.3): ≈10 % overhead when cached,
+    # degrading toward raw PMem latency as the working set outgrows DRAM.
+    memory_mode_hit_overhead: float = 0.10
+
+    # Bandwidth peaks (§2.2 summary): read 2.6× / write 7.5× below DRAM.
+    load_bw_gbps: float = 68.3 / 2.6
+    store_bw_nt_gbps: float = 52.0 / 7.5
+    # Regular stores WITH clwb reach streaming performance (Fig. 1a);
+    # without clwb they peak ≈40 % of it once threads > 4 (Fig. 2a).
+    store_bw_regular_clwb_gbps: float = 52.0 / 7.5
+    store_bw_regular_noclwb_frac: float = 0.40
+
+    # Persist-write latency (Fig. 4), ns per persist() on one line.
+    # Columns: flush, flushopt, clwb, nt. clwb==flushopt on Cascade Lake
+    # ("Intel ... implement it as flush_opt for now").
+    persist_ns_same: dict = dataclasses.field(
+        default_factory=lambda: {
+            FlushKind.FLUSH: 800.0,
+            FlushKind.FLUSHOPT: 780.0,
+            FlushKind.CLWB: 780.0,
+            FlushKind.NT: 180.0,
+        }
+    )
+    persist_ns_seq: dict = dataclasses.field(
+        default_factory=lambda: {
+            FlushKind.FLUSH: 450.0,
+            FlushKind.FLUSHOPT: 130.0,
+            FlushKind.CLWB: 130.0,
+            FlushKind.NT: 105.0,
+        }
+    )
+    persist_ns_rand: dict = dataclasses.field(
+        default_factory=lambda: {
+            FlushKind.FLUSH: 470.0,
+            FlushKind.FLUSHOPT: 170.0,
+            FlushKind.CLWB: 170.0,
+            FlushKind.NT: 160.0,
+        }
+    )
+
+    # Extra stall when a line is persisted again while still in flight in
+    # the DIMM's write-combining buffer (the §2.3 pathology). Calibrated so
+    # that unpadded log writing (which re-persists the boundary line of
+    # every entry) is ≈8× slower than padded (Fig. 6).
+    same_line_stall_ns: float = 6500.0
+
+    # Fixed barrier cost: sfence waiting for the ADR domain to ack.
+    barrier_ns: float = 100.0
+
+    # Device-side service time per 256 B block write (1/peak-block-rate).
+    # peak nt store BW 6.93 GB/s / 256 B ≈ 27.1 M blocks/s → ~36.9 ns, but
+    # a single thread cannot saturate the DIMMs; single-thread streaming
+    # lands near 2.1 GB/s (Fig. 2a at 1 thread) → ≈122 ns per block.
+    block_write_ns_single: float = 122.0
+
+    # Thread scaling (Fig. 2): throughput peaks then degrades slightly.
+    nt_peak_threads: int = 3
+    clwb_peak_threads: int = 12
+    oversaturation_decay: float = 0.015  # per thread past peak
+    # Large sequential bursts (16 KB page flushes) saturate later than the
+    # 256 B random-store microbench: Fig. 5(b) peaks at 7-11 threads.
+    burst_peak_threads: int = 9
+
+    # ----------------------------------------------------------- helpers
+
+    def persist_latency_ns(
+        self, kind: FlushKind, pattern: AccessPattern
+    ) -> float:
+        table = {
+            AccessPattern.SAME_LINE: self.persist_ns_same,
+            AccessPattern.SEQUENTIAL: self.persist_ns_seq,
+            AccessPattern.RANDOM: self.persist_ns_rand,
+        }[pattern]
+        return table[kind]
+
+    def thread_scale(self, threads: int, kind: FlushKind) -> float:
+        """Aggregate-throughput multiplier vs a single thread (Fig. 2)."""
+        peak = self.nt_peak_threads if kind == FlushKind.NT else self.clwb_peak_threads
+        # Near-linear up to the peak, then mild oversaturation decay (G4).
+        if threads <= peak:
+            return float(threads) * (1.0 - 0.04 * (threads - 1))
+        at_peak = float(peak) * (1.0 - 0.04 * (peak - 1))
+        return at_peak * (1.0 - self.oversaturation_decay * (threads - peak))
+
+    def thread_scale_burst(self, threads: int) -> float:
+        """Aggregate-throughput multiplier for large sequential bursts
+        (page flushing, Fig. 5(b)): peaks at 7-11 threads."""
+        peak = self.burst_peak_threads
+        if threads <= peak:
+            return float(threads) * (1.0 - 0.03 * (threads - 1))
+        at_peak = float(peak) * (1.0 - 0.03 * (peak - 1))
+        return at_peak * (1.0 - self.oversaturation_decay * (threads - peak))
+
+    def store_bandwidth_gbps(
+        self, adjacent_lines: int, threads: int, kind: FlushKind
+    ) -> float:
+        """Fig. 1(a)/2(a): store bandwidth vs granularity and threads."""
+        lines_per_block = PMEM_BLOCK // CACHE_LINE
+        dev_blocks = math.ceil(adjacent_lines / lines_per_block)
+        granularity_eff = adjacent_lines / (dev_blocks * lines_per_block)
+        peak = self.store_bw_nt_gbps
+        if kind in (FlushKind.NT, FlushKind.CLWB):
+            # Normalize the thread curve so its best point hits `peak`.
+            best = max(self.thread_scale(t, kind) for t in range(1, 49))
+            scale = self.thread_scale(threads, kind) / best
+        else:
+            # Regular stores without write-back: WC combining works while
+            # few threads keep eviction order; beyond ~4 threads lines
+            # arrive out of order and blocks are written piecemeal (Fig. 2a).
+            best = max(self.thread_scale(t, FlushKind.CLWB) for t in range(1, 49))
+            scale = self.thread_scale(threads, FlushKind.CLWB) / best
+            if threads > 4:
+                scale *= self.store_bw_regular_noclwb_frac
+        return peak * granularity_eff * scale
+
+    def load_bandwidth_gbps(self, adjacent_lines: int, threads: int) -> float:
+        """Fig. 1(c)/2(c): load bandwidth vs granularity and threads."""
+        lines_per_block = PMEM_BLOCK // CACHE_LINE
+        dev_blocks = math.ceil(adjacent_lines / lines_per_block)
+        granularity_eff = adjacent_lines / (dev_blocks * lines_per_block)
+        # Hardware prefetcher kicks in at ≥10 adjacent lines and wastes
+        # bandwidth on lines we never use (Fig. 1c/d note).
+        prefetch_penalty = 0.85 if adjacent_lines >= 10 else 1.0
+        # Loads saturate near ~12 threads and stay flat (Fig. 2c/d).
+        scale = min(1.0, 0.25 + threads / 12.0) if threads >= 1 else 0.0
+        return self.load_bw_gbps * granularity_eff * prefetch_penalty * scale
+
+    # ------------------------------------------------------ count → time
+
+    def time_ns(
+        self,
+        stats: PMemStats,
+        *,
+        kind: FlushKind = FlushKind.NT,
+        pattern: AccessPattern = AccessPattern.SEQUENTIAL,
+        threads: int = 1,
+    ) -> float:
+        """Convert an operation-count delta into modeled nanoseconds.
+
+        Model: time = barriers × (flush+fence latency for the pattern)
+                     + device block writes × per-block service time
+                     + same-line stalls
+                     + uncached device reads at load bandwidth.
+        Block service time scales with the aggregate-throughput curve of
+        Fig. 2 (per-thread view: service/thread_scale×threads).
+        """
+        t = 0.0
+        t += stats.barriers * (
+            self.persist_latency_ns(kind, pattern) + self.barrier_ns
+        )
+        per_block = self.block_write_ns_single / (
+            self.thread_scale(threads, kind) / threads
+        )
+        t += stats.blocks_written * per_block
+        t += stats.same_line_flushes * self.same_line_stall_ns
+        t += stats.same_line_nt * (self.same_line_stall_ns * 0.35)
+        if stats.device_read_bytes:
+            bw = self.load_bandwidth_gbps(4, threads) * GiB
+            t += stats.device_read_bytes / bw * 1e9
+        return t
+
+    def throughput_per_s(self, stats: PMemStats, n_ops: int, **kw) -> float:
+        total_ns = self.time_ns(stats, **kw)
+        if total_ns <= 0:
+            return float("inf")
+        return n_ops / (total_ns * 1e-9)
+
+
+COST_MODEL = PMemCostModel()

@@ -1,0 +1,319 @@
+"""Functional PMem model: region + CPU-cache/WC-buffer semantics + crash sim.
+
+This is the substrate the paper's primitives (log writers, page flushers) run
+on. Two concerns are deliberately separated:
+
+1. **Functional semantics** (this module) — which bytes are durable when.
+   Stores land in a modeled CPU cache; they reach the persistent domain only
+   via (a) an explicit flush (``clflush``/``clflushopt``/``clwb``) followed by
+   an ``sfence``, (b) a non-temporal store drained by an ``sfence``, or (c)
+   *spontaneous eviction*, which the hardware may perform AT ANY TIME
+   (paper §3.1: "programs cannot prevent the eviction"). Crash simulation
+   therefore makes an *arbitrary subset* of unflushed dirty lines durable —
+   failure-atomic algorithms must be correct for every such subset, which is
+   exactly what the hypothesis property tests assert.
+
+2. **Cost accounting** — exact counts of barriers, flushed lines, device
+   block writes (after write combining), same-line rewrites, and bytes moved.
+   ``core.costmodel`` converts these counts into modeled time using constants
+   calibrated to the paper's measured ratios. The counts themselves are
+   ground truth of the algorithms (e.g. "Zero logging issues exactly one
+   barrier per entry") and are asserted in unit tests.
+
+The region is optionally file-backed (``np.memmap``) so the training
+checkpoint/WAL layer gets real on-disk persistence; crash simulation then
+operates on the in-memory cache layers only.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+from typing import Callable, Dict, Iterable, Optional, Set
+
+import numpy as np
+
+from repro.core.blocks import (
+    BlockGeometry,
+    PAPER_GEOMETRY,
+    blocks_covering,
+    lines_covering,
+)
+from repro.core.persist import FlushKind
+
+__all__ = ["PMem", "PMemStats", "CrashImage"]
+
+#: How many most-recently-flushed lines count as "temporally close" for the
+#: same-line-rewrite penalty (paper §2.3 / Fig. 4 "same cache line" group).
+_RECENCY_WINDOW = 8
+
+
+@dataclasses.dataclass
+class PMemStats:
+    """Exact operation counts. All fields are monotonic counters."""
+
+    stores: int = 0
+    store_bytes: int = 0
+    nt_stores: int = 0
+    nt_store_bytes: int = 0
+    loads: int = 0
+    load_bytes: int = 0
+    device_read_bytes: int = 0  # loads that bypass the cache (cold page reads)
+
+    flushes: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k.value: 0 for k in FlushKind}
+    )
+    lines_flushed: int = 0
+    sfences: int = 0
+    barriers: int = 0  # sfences that actually had pending persistent work
+
+    blocks_written: int = 0       # 256 B device writes after WC combining
+    partial_block_writes: int = 0  # device writes covering < lines_per_block
+    same_line_flushes: int = 0    # flush of a line flushed very recently
+    same_line_nt: int = 0         # nt store to a line nt-stored very recently
+
+    def snapshot(self) -> "PMemStats":
+        return dataclasses.replace(self, flushes=dict(self.flushes))
+
+    def delta(self, since: "PMemStats") -> "PMemStats":
+        d = PMemStats()
+        for f in dataclasses.fields(PMemStats):
+            if f.name == "flushes":
+                d.flushes = {
+                    k: self.flushes[k] - since.flushes.get(k, 0)
+                    for k in self.flushes
+                }
+            else:
+                setattr(d, f.name, getattr(self, f.name) - getattr(since, f.name))
+        return d
+
+
+@dataclasses.dataclass
+class CrashImage:
+    """The durable bytes after a simulated crash, plus what got evicted."""
+
+    durable: np.ndarray
+    evicted_lines: Set[int]
+    dropped_lines: Set[int]
+
+
+class PMem:
+    """A byte-addressable persistent region with modeled cache semantics."""
+
+    def __init__(
+        self,
+        size: int,
+        *,
+        path: Optional[str] = None,
+        geometry: BlockGeometry = PAPER_GEOMETRY,
+    ) -> None:
+        self.size = int(size)
+        self.geometry = geometry
+        if path is not None:
+            exists = os.path.exists(path) and os.path.getsize(path) == self.size
+            mode = "r+" if exists else "w+"
+            self._durable = np.memmap(path, dtype=np.uint8, mode=mode, shape=(self.size,))
+        else:
+            self._durable = np.zeros(self.size, dtype=np.uint8)
+        self.path = path
+        # Program-visible contents (cache + durable merged).
+        self._logical = np.array(self._durable, dtype=np.uint8, copy=True)
+        # Dirty cache lines: line index -> None (data lives in _logical).
+        self._dirty: Set[int] = set()
+        # Lines flushed (clwb/clflush/clflushopt) but not yet fenced. The
+        # *data at flush time* is what the fence makes durable — a store
+        # after the flush but before the fence is NOT covered (§3.1).
+        self._staged: Dict[int, np.ndarray] = {}
+        # Non-temporal stores buffered in the WC buffer, awaiting sfence.
+        self._wc: Dict[int, np.ndarray] = {}
+        # Recently flushed / nt-stored lines for the same-line penalty.
+        self._recent_flushed: collections.deque = collections.deque(maxlen=_RECENCY_WINDOW)
+        self._recent_nt: collections.deque = collections.deque(maxlen=_RECENCY_WINDOW)
+        self.stats = PMemStats()
+
+    # ------------------------------------------------------------------ io
+
+    def _check(self, off: int, size: int) -> None:
+        if off < 0 or size < 0 or off + size > self.size:
+            raise ValueError(f"access [{off}, {off + size}) outside region of {self.size} B")
+
+    def _lines(self, off: int, size: int) -> range:
+        """Cache-line indices covering [off, off+size) under this region's
+        geometry (64 B in paper mode, 4 KiB in checkpoint/TPU mode)."""
+        cl = self.geometry.cache_line
+        if size <= 0:
+            return range(0)
+        return range(off // cl, (off + size - 1) // cl + 1)
+
+    def store(self, off: int, data: bytes | np.ndarray, *, streaming: bool = False) -> None:
+        """Store bytes at ``off``. Regular stores dirty cache lines;
+        streaming (non-temporal) stores go to the WC buffer and become
+        durable at the next ``sfence`` without a flush instruction."""
+        buf = np.frombuffer(bytes(data), dtype=np.uint8) if not isinstance(data, np.ndarray) else data.astype(np.uint8, copy=False).ravel()
+        n = buf.size
+        self._check(off, n)
+        if n == 0:
+            return
+        self._logical[off : off + n] = buf
+        lines = self._lines(off, n)
+        if streaming:
+            self.stats.nt_stores += 1
+            self.stats.nt_store_bytes += n
+            for li in lines:
+                if li in self._recent_nt:
+                    self.stats.same_line_nt += 1
+                self._recent_nt.append(li)
+                lo = li * self.geometry.cache_line
+                hi = min(lo + self.geometry.cache_line, self.size)
+                self._wc[li] = self._logical[lo:hi].copy()
+                self._dirty.discard(li)
+        else:
+            self.stats.stores += 1
+            self.stats.store_bytes += n
+            self._dirty.update(lines)
+
+    def load(self, off: int, size: int, *, uncached: bool = False) -> np.ndarray:
+        """Read bytes (program order — sees un-persisted stores).
+        ``uncached=True`` marks a read that must come from the device
+        (e.g. CoW reading the old page version) for cost accounting."""
+        self._check(off, size)
+        self.stats.loads += 1
+        self.stats.load_bytes += size
+        if uncached:
+            self.stats.device_read_bytes += size
+        return self._logical[off : off + size].copy()
+
+    # --------------------------------------------------------------- flush
+
+    def flush(self, off: int, size: int, kind: FlushKind = FlushKind.CLWB) -> None:
+        """Issue a flush instruction for every cache line covering the range.
+        Data is *staged*; durability requires a subsequent ``sfence``."""
+        if kind == FlushKind.NT:
+            raise ValueError("NT is a store attribute, not a flush instruction")
+        self._check(off, size)
+        self.stats.flushes[kind.value] += 1
+        for li in self._lines(off, size):
+            self.stats.lines_flushed += 1
+            if li in self._recent_flushed:
+                self.stats.same_line_flushes += 1
+            self._recent_flushed.append(li)
+            lo = li * self.geometry.cache_line
+            hi = min(lo + self.geometry.cache_line, self.size)
+            self._staged[li] = self._logical[lo:hi].copy()
+            if kind in (FlushKind.FLUSH, FlushKind.FLUSHOPT):
+                # clflush/clflushopt invalidate; clwb keeps the line cached.
+                self._dirty.discard(li)
+            else:
+                self._dirty.discard(li)
+
+    def sfence(self) -> None:
+        """Commit all staged flushes and WC-buffered streaming stores to the
+        durable domain. Counts as a *barrier* iff there was pending work."""
+        self.stats.sfences += 1
+        pending = {}
+        pending.update(self._staged)
+        pending.update(self._wc)  # nt data wins for lines in both (later store)
+        if pending:
+            self.stats.barriers += 1
+            self._commit(pending)
+        self._staged.clear()
+        self._wc.clear()
+
+    def persist(self, off: int, size: int, kind: FlushKind = FlushKind.CLWB) -> None:
+        """The paper's ``persist()``: flush covering lines, then sfence.
+        For data written with streaming stores pass ``kind=FlushKind.NT``:
+        no flush instruction is needed, only the fence."""
+        if kind != FlushKind.NT:
+            self.flush(off, size, kind)
+        self.sfence()
+
+    # -------------------------------------------------------------- commit
+
+    def _commit(self, lines: Dict[int, np.ndarray]) -> None:
+        """Write staged lines into the durable image, accounting device
+        block writes after write combining: lines committed *together* that
+        fall in the same 256 B block combine into one block write."""
+        blocks: Dict[int, int] = {}
+        lpb = self.geometry.lines_per_block
+        for li, data in lines.items():
+            lo = li * self.geometry.cache_line
+            self._durable[lo : lo + data.size] = data
+            blocks[li // lpb] = blocks.get(li // lpb, 0) + 1
+        for _, nlines in blocks.items():
+            self.stats.blocks_written += 1
+            if nlines < lpb:
+                self.stats.partial_block_writes += 1
+
+    # --------------------------------------------------------------- crash
+
+    def crash(
+        self,
+        *,
+        evict: Optional[Callable[[int], bool]] = None,
+        rng: Optional[np.random.Generator] = None,
+        evict_prob: float = 0.5,
+    ) -> CrashImage:
+        """Simulate a power failure.
+
+        Every line that was dirty, staged-but-not-fenced, or WC-buffered may
+        or may not have reached the durable domain (spontaneous eviction is
+        legal at any time; a fence was never issued so nothing is promised).
+        ``evict`` (or Bernoulli(evict_prob) under ``rng``) decides per line.
+        Returns the durable image; the region object itself is reset to it.
+        """
+        if evict is None:
+            gen = rng or np.random.default_rng(0)
+            evict = lambda li: bool(gen.random() < evict_prob)  # noqa: E731
+        candidates: Dict[int, np.ndarray] = {}
+        for li in self._dirty:
+            lo = li * self.geometry.cache_line
+            hi = min(lo + self.geometry.cache_line, self.size)
+            candidates[li] = self._logical[lo:hi].copy()
+        candidates.update(self._staged)
+        candidates.update(self._wc)
+        evicted: Set[int] = set()
+        dropped: Set[int] = set()
+        survivors: Dict[int, np.ndarray] = {}
+        for li, data in sorted(candidates.items()):
+            if evict(li):
+                evicted.add(li)
+                survivors[li] = data
+            else:
+                dropped.add(li)
+        if survivors:
+            self._commit(survivors)
+        self._dirty.clear()
+        self._staged.clear()
+        self._wc.clear()
+        self._logical = np.array(self._durable, dtype=np.uint8, copy=True)
+        return CrashImage(
+            durable=np.array(self._durable, copy=True),
+            evicted_lines=evicted,
+            dropped_lines=dropped,
+        )
+
+    # ---------------------------------------------------------------- misc
+
+    def durable_view(self) -> np.ndarray:
+        """The current durable image (what recovery would see)."""
+        return np.array(self._durable, copy=True)
+
+    def fsync(self) -> None:
+        """For file-backed regions: push the durable image to stable media."""
+        if isinstance(self._durable, np.memmap):
+            self._durable.flush()
+
+    def memset_zero(self) -> None:
+        """Pre-zero the region (Zero logging requires a zeroed file; the
+        paper notes DBs do this anyway to force file-system allocation)."""
+        self._logical[:] = 0
+        self._durable[:] = 0
+        self._dirty.clear()
+        self._staged.clear()
+        self._wc.clear()
+
+    def reset_stats(self) -> PMemStats:
+        old = self.stats
+        self.stats = PMemStats()
+        return old

@@ -1,0 +1,206 @@
+"""A minimal buffer-managed storage engine tying the primitives together.
+
+This is the validation vehicle of paper §3.3.2 (HyMem + YCSB): a DRAM
+"buffer pool" of fixed-size pages over a PMem :class:`PageStore`, with a
+write-ahead log using any of the three logging techniques. It exists to
+
+  * demonstrate the I/O primitives composing into a correct engine,
+  * run the YCSB-style 100 %-write validation (``benchmarks/tab_ycsb.py``),
+  * provide the crash-recovery property-test target (arbitrary eviction
+    subsets at crash time must never lose a committed put).
+
+Commit protocol per ``put``: modify the DRAM page (track dirty lines),
+append a redo record to the WAL, persist per the technique. Background
+``checkpoint()`` flushes dirty pages (hybrid CoW/µLog) and then advances a
+failure-atomic *root* (ping-pong slots, max-generation rule — same
+line-atomicity argument as the pvn) recording the checkpoint LSN. Recovery
+= page table scan + µlog replay + redo of WAL entries past the checkpoint
+LSN (puts are idempotent, so the §3.2.1 "log entries might be reapplied"
+caveat is benign here — noted where it would not be).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, List, Optional, Set, Tuple, Type
+
+import numpy as np
+
+from repro.core.blocks import BlockGeometry, PAPER_GEOMETRY, align_up
+from repro.core.log import LOG_TECHNIQUES, LogConfig, _LogBase
+from repro.core.pageflush import PageStore, PageStoreLayout
+from repro.core.pmem import PMem
+
+__all__ = ["PersistentKV", "KVConfig"]
+
+_ROOT = struct.Struct("<QQ")  # generation, checkpoint_lsn
+_REC = struct.Struct("<II")   # key, value_len   (redo record header)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVConfig:
+    npages: int = 16
+    page_size: int = 4096
+    value_size: int = 64
+    log_capacity: int = 1 << 20
+    technique: str = "zero"              # classic | header | zero
+    log: LogConfig = dataclasses.field(default_factory=LogConfig)
+    geometry: BlockGeometry = PAPER_GEOMETRY
+    auto_checkpoint: bool = True
+
+    @property
+    def recs_per_page(self) -> int:
+        return self.page_size // self.value_size
+
+    @property
+    def nkeys(self) -> int:
+        return self.npages * self.recs_per_page
+
+
+class PersistentKV:
+    """Fixed-size-record KV store: DRAM buffer pool + PMem pages + WAL."""
+
+    def __init__(self, pmem: PMem, cfg: KVConfig, *, _recover: bool = False) -> None:
+        self.pmem = pmem
+        self.cfg = cfg
+        g = cfg.geometry
+        # --- layout: [root | page slots + µlogs | wal] ---------------------
+        self.root_off = 0
+        root_bytes = align_up(2 * g.cache_line, g.block)
+        self.layout = PageStoreLayout(
+            base=root_bytes,
+            page_size=cfg.page_size,
+            npages=cfg.npages,
+            nslots=cfg.npages + max(2, cfg.npages // 4),
+            geometry=g,
+        )
+        log_cls: Type[_LogBase] = LOG_TECHNIQUES[cfg.technique]
+        if _recover:
+            self.store = PageStore.open(pmem, self.layout)
+        else:
+            self.store = PageStore(pmem, self.layout)
+        self.log_base = align_up(self.store.total_end, g.block)
+        if self.log_base + cfg.log_capacity > pmem.size:
+            raise ValueError("region too small for layout")
+        self._log_cls = log_cls
+        self.checkpoint_lsn = 0
+        self._root_gen = 0
+        # --- volatile state -------------------------------------------------
+        self.pool = np.zeros((cfg.npages, cfg.page_size), dtype=np.uint8)
+        self.dirty: Dict[int, Set[int]] = {}
+
+        if _recover:
+            self._recover_state()
+        else:
+            self.wal = log_cls(pmem, self.log_base, cfg.log_capacity, cfg.log)
+
+    # ------------------------------------------------------------- sizing
+
+    @staticmethod
+    def region_bytes(cfg: KVConfig) -> int:
+        g = cfg.geometry
+        root = align_up(2 * g.cache_line, g.block)
+        layout = PageStoreLayout(
+            base=root, page_size=cfg.page_size, npages=cfg.npages,
+            nslots=cfg.npages + max(2, cfg.npages // 4), geometry=g,
+        )
+        slots = layout.total_bytes
+        mulog = align_up(cfg.page_size * 2, g.block)  # generous µlog bound
+        return root + slots + mulog + cfg.log_capacity + g.block
+
+    # --------------------------------------------------------------- api
+
+    def _locate(self, key: int) -> Tuple[int, int]:
+        if not (0 <= key < self.cfg.nkeys):
+            raise KeyError(key)
+        return key // self.cfg.recs_per_page, (key % self.cfg.recs_per_page) * self.cfg.value_size
+
+    def put(self, key: int, value: bytes) -> int:
+        """Durable upsert; returns the commit LSN (absolute across WAL
+        generations; WAL-internal LSNs restart at 1 after a checkpoint)."""
+        if len(value) != self.cfg.value_size:
+            raise ValueError("fixed-size values only")
+        pid, off = self._locate(key)
+        self.pool[pid, off : off + len(value)] = np.frombuffer(value, dtype=np.uint8)
+        cl = self.cfg.geometry.cache_line
+        lines = self.dirty.setdefault(pid, set())
+        lines.update(range(off // cl, (off + len(value) - 1) // cl + 1))
+        try:
+            lsn = self.wal.append(_REC.pack(key, len(value)) + value)
+        except RuntimeError:
+            if not self.cfg.auto_checkpoint:
+                raise
+            self.checkpoint()
+            lsn = self.wal.append(_REC.pack(key, len(value)) + value)
+        return self.checkpoint_lsn + lsn
+
+    def get(self, key: int) -> bytes:
+        pid, off = self._locate(key)
+        return self.pool[pid, off : off + self.cfg.value_size].tobytes()
+
+    # -------------------------------------------------------- checkpoint
+
+    def checkpoint(self) -> None:
+        """Flush all dirty pages (hybrid), advance the root, reset the WAL.
+
+        Page flushes precede the root update; a crash in between merely
+        replays redo records onto already-flushed pages (idempotent puts).
+        """
+        for pid, lines in sorted(self.dirty.items()):
+            self.store.flush(pid, self.pool[pid], dirty_lines=sorted(lines))
+        self.dirty.clear()
+        ckpt_lsn = self.checkpoint_lsn + (self.wal.next_lsn - 1)
+        self._root_gen += 1
+        slot = self._root_gen % 2
+        g = self.cfg.geometry
+        self.pmem.store(
+            self.root_off + slot * g.cache_line,
+            _ROOT.pack(self._root_gen, ckpt_lsn),
+            streaming=True,
+        )
+        self.pmem.persist(self.root_off + slot * g.cache_line, _ROOT.size)
+        self.checkpoint_lsn = ckpt_lsn
+        # New WAL generation: re-zero the log region (Zero logging requires
+        # it; the others tolerate it) and restart the writer. The zeroing
+        # itself is bulk streaming traffic, not barrier-bound.
+        zero = np.zeros(self.cfg.log_capacity, dtype=np.uint8)
+        self.pmem.store(self.log_base, zero, streaming=True)
+        self.pmem.sfence()
+        self.wal = self._log_cls(self.pmem, self.log_base, self.cfg.log_capacity, self.cfg.log)
+
+    # ----------------------------------------------------------- recovery
+
+    def _read_root(self) -> Tuple[int, int]:
+        img = self.pmem.durable_view()
+        best = (0, 0)
+        g = self.cfg.geometry
+        for slot in range(2):
+            gen, lsn = _ROOT.unpack_from(img, self.root_off + slot * g.cache_line)
+            if gen > best[0]:
+                best = (gen, lsn)
+        return best
+
+    def _recover_state(self) -> None:
+        self._root_gen, self.checkpoint_lsn = self._read_root()
+        # load persistent pages into the pool
+        for pid in range(self.cfg.npages):
+            if pid in self.store.table:
+                self.pool[pid] = self.store.read_page(pid)
+        # redo WAL entries past the checkpoint
+        rec = self._log_cls.recover(self.pmem, self.log_base, self.cfg.log_capacity, self.cfg.log)
+        cl = self.cfg.geometry.cache_line
+        for entry in rec.entries:
+            key, vlen = _REC.unpack_from(entry, 0)
+            value = entry[_REC.size : _REC.size + vlen]
+            pid, off = self._locate(key)
+            self.pool[pid, off : off + vlen] = np.frombuffer(value, dtype=np.uint8)
+            lines = self.dirty.setdefault(pid, set())
+            lines.update(range(off // cl, (off + vlen - 1) // cl + 1))
+        self.wal, _ = self._log_cls.open_for_append(
+            self.pmem, self.log_base, self.cfg.log_capacity, self.cfg.log
+        )
+
+    @classmethod
+    def open(cls, pmem: PMem, cfg: KVConfig) -> "PersistentKV":
+        return cls(pmem, cfg, _recover=True)

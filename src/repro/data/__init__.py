@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticPipeline, synthetic_batch  # noqa: F401

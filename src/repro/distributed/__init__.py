@@ -1,0 +1,2 @@
+"""Distribution: mesh/sharding rules, activation-sharding hooks,
+fault tolerance, straggler mitigation, gradient compression."""

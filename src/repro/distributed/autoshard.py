@@ -1,0 +1,67 @@
+"""Activation-sharding constraints that degrade gracefully off-mesh.
+
+``constrain(x, ("model", "fsdp", None))`` applies a
+``with_sharding_constraint`` when tracing under a mesh, mapping the logical
+axis name "fsdp" to whichever data axes the active mesh has
+(("pod","data") multi-pod, ("data",) single-pod), and is a no-op when no
+mesh is active (smoke tests on a single CPU device).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def _active_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    try:  # legacy `with mesh:` context (thread resources)
+        from jax._src import mesh as _mesh_lib
+        phys = _mesh_lib.thread_resources.env.physical_mesh
+        if phys is not None and not phys.empty:
+            return phys
+    except Exception:
+        pass
+    return None
+
+
+def resolve_axes(mesh_axes: Sequence[str], logical: Axis) -> Axis:
+    """Map logical axis names to the mesh's physical axes."""
+    if logical is None:
+        return None
+    names = (logical,) if isinstance(logical, str) else tuple(logical)
+    out = []
+    for n in names:
+        if n == "fsdp":
+            out.extend(a for a in ("pod", "data") if a in mesh_axes)
+        elif n in mesh_axes:
+            out.append(n)
+    if not out:
+        return None
+    return out[0] if len(out) == 1 else tuple(out)
+
+
+def spec_for(mesh_axes: Sequence[str], logical_spec: Sequence[Axis]) -> P:
+    return P(*(resolve_axes(mesh_axes, ax) for ax in logical_spec))
+
+
+def constrain(x: jax.Array, logical_spec: Sequence[Axis]) -> jax.Array:
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    if len(logical_spec) != x.ndim:
+        return x
+    spec = spec_for(mesh.axis_names, logical_spec)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

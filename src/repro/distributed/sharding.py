@@ -1,0 +1,199 @@
+"""Parameter / batch / cache sharding rules (DP + FSDP + TP + EP).
+
+Logical scheme on the production mesh (pod, data, model):
+  - "fsdp"  = (pod, data): ZeRO-3 storage sharding of parameters and
+    optimizer moments along a contraction dimension; XLA re-materializes
+    per-layer full weights with all-gathers inside the scan (the standard
+    FSDP lowering) and reduce-scatters gradients.
+  - "model" = tensor parallelism: attention heads / FFN width / MoE experts
+    (EP) / LRU width.
+  - Activations: batch over (pod, data); MoE dispatch buffers over
+    (model=experts, fsdp=capacity).
+
+Every rule degrades gracefully: an axis is only used when the dimension is
+divisible by its mesh extent (e.g. KV heads with kv < 16 replicate across
+``model``; batch=1 decode replicates the batch axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axis = Optional[str | Tuple[str, ...]]
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _extent(mesh: Mesh, axes: Axis) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes: Axis) -> Axis:
+    """Use `axes` only if `dim` divides evenly; otherwise replicate."""
+    if axes is None or dim <= 0:
+        return None
+    ext = _extent(mesh, axes)
+    return axes if dim % ext == 0 and ext > 1 else None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, by pytree path."""
+    names = _path_names(path)
+    name = names[-1]
+    fs: Axis = fsdp_axes(mesh) or None
+    stacked = any(n.startswith("seg") for n in names)  # scanned stacks: (n, ...)
+    lead: Tuple[Axis, ...] = (None,) if stacked else ()
+    shape = leaf.shape[1:] if stacked else leaf.shape
+
+    def spec(*axes: Axis) -> P:
+        fitted = tuple(_fit(mesh, d, a) for d, a in zip(shape, axes))
+        return P(*lead, *fitted)
+
+    # ---- embeddings / head: (V, D) — never stacked
+    if name in ("embed", "head"):
+        return P(_fit(mesh, leaf.shape[0], "model"), _fit(mesh, leaf.shape[1], fs))
+
+    # ---- MoE ----
+    if "moe" in names or name == "router":
+        if name in ("gate", "up"):       # (E, D, F)
+            return spec("model", fs, None)
+        if name == "down":               # (E, F, D)
+            return spec("model", fs, None)
+        if name == "router":             # (D, E)
+            return spec(fs, None)
+        if len(shape) == 2:              # shared-expert ffn leaves (D,F)/(F,D)
+            if name in ("gate", "up"):
+                return spec(fs, "model")
+            return spec("model", fs)
+
+    # ---- attention ----
+    if name in ("wq", "wk", "wv"):       # (D, H*hd)
+        return spec(fs, "model")
+    if name == "wo":                     # (H*hd, D)
+        return spec("model", fs)
+    if name in ("wq_a", "wkv_a"):        # (D, lora)
+        return spec(fs, None)
+    if name in ("wq_b", "wkv_b"):        # (lora, H*x)
+        return spec(fs, "model")
+
+    # ---- shared-expert / dense FFN ----
+    if name in ("gate", "up"):           # (D, F)
+        return spec(fs, "model")
+    if name == "down":                   # (F, D)
+        return spec("model", fs)
+
+    # ---- RG-LRU ----
+    if name in ("wx", "wg"):             # (D, W)
+        return spec(fs, "model")
+    if name in ("wa", "wi"):             # (W, W)
+        return spec(None, "model")
+    if name == "lam":                    # (W,)
+        return spec("model")
+    if name == "conv_w" and "rec" in names:   # (k, W)
+        return spec(None, "model")
+    if name == "conv_b" and "rec" in names:
+        return spec("model")
+
+    # ---- SSD (mamba2) ----
+    if name == "w_in":                   # (D, 2di+2N+H) — fused; shard D only
+        return spec(fs, None)
+    if name == "w_out":                  # (di, D)
+        return spec("model", fs)
+
+    # ---- everything else (norms, conv stacks, scalars): replicate ----
+    return P(*lead, *(None,) * len(shape))
+
+
+def state_specs(params, mesh: Mesh):
+    """Specs for a parameter pytree (and reusable for adam moments)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh), params)
+
+
+def opt_specs(opt_state, param_specs_tree, mesh: Mesh):
+    return {
+        "m": param_specs_tree,
+        "v": param_specs_tree,
+        "count": P(),
+    }
+
+
+def batch_specs(batch: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    fs = fsdp_axes(mesh) or None
+    out = {}
+    for k, v in batch.items():
+        shape = v.shape
+        if k == "positions":             # (3, B, S)
+            out[k] = P(None, _fit(mesh, shape[1], fs), None)
+        elif k in ("frames", "vis_embeds"):  # (B, S, D)
+            out[k] = P(_fit(mesh, shape[0], fs), None, None)
+        else:                            # tokens/labels (B, S)
+            out[k] = P(_fit(mesh, shape[0], fs), *(None,) * (len(shape) - 1))
+    return out
+
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    """Decode-cache sharding: batch over fsdp; heads/width over model when
+    divisible. Leading scan-stack axis is replicated."""
+    names = _path_names(path)
+    name = names[-1]
+    fs: Axis = fsdp_axes(mesh) or None
+    shape = leaf.shape[1:]               # strip scan-stack axis
+    b_ax = _fit(mesh, shape[0], fs) if shape else None
+
+    if name in ("k", "v") and len(shape) == 4:      # (B, T, KV, hd)
+        head_ax = _fit(mesh, shape[2], "model")
+        if head_ax is not None:
+            return P(None, b_ax, None, head_ax, None)
+        # KV heads don't divide the model axis (GQA kv<16): shard the TIME
+        # axis over `model` instead — sequence-sharded KV cache. Attention
+        # over T is a reduction, so scores psum across the axis; this cuts
+        # the per-device cache footprint 16× vs replication.
+        return P(None, b_ax, _fit(mesh, shape[1], "model"), None, None)
+    if name in ("ckv", "k_rope"):                   # (B, T, d) — MLA latent
+        return P(None, b_ax, _fit(mesh, shape[1], "model"), None)
+    if name == "h" and len(shape) == 2:             # rec state (B, W)
+        return P(None, b_ax, _fit(mesh, shape[1], "model"))
+    if name == "h" and len(shape) == 4:             # ssd state (B, H, P, N)
+        return P(None, b_ax, _fit(mesh, shape[1], "model"), None, None)
+    if name == "conv":                              # (B, k-1, C)
+        return P(None, b_ax, None, None)
+    if name == "pos":                               # (1, T)
+        return P(None, None, None)
+    return P(*(None,) * (len(shape) + 1))
+
+
+def cache_specs(caches, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(path, leaf, mesh), caches)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

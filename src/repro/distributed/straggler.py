@@ -1,0 +1,72 @@
+"""Straggler mitigation for synchronous data-parallel training.
+
+At 1000+ nodes the slowest worker sets the step time. Two composable
+policies, both simulated deterministically in tests (no real cluster in
+this container — the *decision logic* is what's tested):
+
+  - ``BackupStepPolicy``: track an EWMA of per-host step times; hosts
+    slower than ``threshold × median`` are flagged; after ``patience``
+    consecutive flags the host is cordoned (training continues on the
+    survivors via elastic re-shard — see fault_tolerance).
+  - ``QuorumPolicy``: proceed when K of N microbatch gradients arrived;
+    late gradients are dropped and the contribution renormalized by K/N
+    (unbiased in expectation for i.i.d. microbatches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BackupStepPolicy:
+    threshold: float = 1.8       # × median EWMA step time
+    patience: int = 3
+    ewma: float = 0.3
+
+    def __post_init__(self) -> None:
+        self._t: Dict[int, float] = {}
+        self._flags: Dict[int, int] = {}
+        self.cordoned: Set[int] = set()
+
+    def observe(self, host: int, step_time: float) -> None:
+        prev = self._t.get(host, step_time)
+        self._t[host] = (1 - self.ewma) * prev + self.ewma * step_time
+
+    def evaluate(self) -> List[int]:
+        """Returns hosts newly cordoned this round."""
+        active = {h: t for h, t in self._t.items() if h not in self.cordoned}
+        if len(active) < 2:
+            return []
+        med = float(np.median(list(active.values())))
+        newly = []
+        for h, t in active.items():
+            if t > self.threshold * med:
+                self._flags[h] = self._flags.get(h, 0) + 1
+                if self._flags[h] >= self.patience:
+                    self.cordoned.add(h)
+                    newly.append(h)
+            else:
+                self._flags[h] = 0
+        return newly
+
+
+@dataclasses.dataclass(frozen=True)
+class QuorumPolicy:
+    quorum_frac: float = 0.9
+
+    def required(self, n_workers: int) -> int:
+        return max(1, int(np.ceil(self.quorum_frac * n_workers)))
+
+    def combine(self, grads: Sequence[Optional[np.ndarray]]) -> np.ndarray:
+        """Average the gradients that arrived; renormalize by the count.
+        ``None`` = missing (straggler past deadline)."""
+        present = [g for g in grads if g is not None]
+        n = len(present)
+        if n < self.required(len(grads)):
+            raise TimeoutError(
+                f"quorum not met: {n}/{len(grads)} < {self.required(len(grads))}")
+        return np.mean(np.stack(present), axis=0)

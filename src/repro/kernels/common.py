@@ -1,0 +1,62 @@
+"""Shared geometry for the persistence kernels.
+
+The paper's guideline G1 ("optimize for PMem blocks, not cache lines")
+becomes, on TPU: track checkpoint-delta dirtiness at the granularity of a
+device-native tile. One float32 (8, 128) VREG tile = 4096 bytes = the
+``TPU_TILE`` block. All kernels view a flat parameter buffer as
+``(nblocks, rows, 128)`` where ``rows × 128 × itemsize = block_bytes``,
+so every block is a whole number of hardware tiles and the MXU/VPU lane
+dimension stays 128-aligned.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import TPU_TILE
+
+LANES = 128
+
+#: blocks per kernel tile along the block axis (VMEM working set:
+#: 8 blocks × 4 KiB = 32 KiB per operand — comfortably inside the
+#: ~16 MiB VMEM even with double buffering and 3 operands).
+TILE_BLOCKS = 8
+
+
+def block_rows(dtype, block_bytes: int = TPU_TILE) -> int:
+    """Rows of 128 lanes per block for ``dtype``."""
+    itemsize = jnp.dtype(dtype).itemsize
+    if block_bytes % (LANES * itemsize) != 0:
+        raise ValueError(f"block_bytes={block_bytes} not a multiple of "
+                         f"{LANES}*{itemsize} for dtype {dtype}")
+    return block_bytes // (LANES * itemsize)
+
+
+def as_blocks(flat: jax.Array, block_bytes: int = TPU_TILE) -> Tuple[jax.Array, int]:
+    """Reshape a flat buffer to (nblocks, rows, 128), zero-padding the tail.
+
+    Returns (blocked, original_length). Zero padding is semantically safe
+    for every kernel here: padded regions are identical in cur/snap (never
+    dirty) and contribute 0 to popcounts.
+    """
+    flat = flat.reshape(-1)
+    rows = block_rows(flat.dtype, block_bytes)
+    elems = rows * LANES
+    n = flat.shape[0]
+    nblocks = -(-n // elems) if n else 1
+    padded = nblocks * elems
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(nblocks, rows, LANES), n
+
+
+def from_blocks(blocked: jax.Array, orig_len: int) -> jax.Array:
+    return blocked.reshape(-1)[:orig_len]
+
+
+def pad_blocks_to_tile(nblocks: int, tile: int = TILE_BLOCKS) -> int:
+    return -(-nblocks // tile) * tile

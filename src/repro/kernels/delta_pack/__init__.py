@@ -1,0 +1,1 @@
+from repro.kernels.delta_pack.ops import apply_delta, pack_delta  # noqa: F401

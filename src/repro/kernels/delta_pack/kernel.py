@@ -1,0 +1,84 @@
+"""Pallas TPU kernels: pack/apply dirty blocks (the µLog delta path, §3.2.2).
+
+``delta_pack`` gathers the dirty 4 KiB blocks of a parameter buffer into a
+compact staging buffer — only this compacted delta crosses the HBM→host
+link during a delta checkpoint. ``delta_apply`` is the recovery inverse:
+scatter packed blocks back into a base buffer (µLog replay on restore).
+
+Both use a scalar-prefetched index vector to drive the BlockSpec index_map
+— the canonical Pallas TPU gather/scatter: the index arrives in SMEM before
+the grid runs, so each grid step's DMA source/destination block is known in
+time to pipeline HBM↔VMEM copies. The kernel body is a pure VMEM copy; the
+interesting work IS the data movement, which is exactly the paper's point
+(page flushing is bandwidth-critical, not compute-critical).
+
+``delta_apply`` aliases the base buffer into the output (in-place scatter,
+no second copy of a multi-GiB parameter buffer).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import LANES
+
+
+def _copy_kernel(idx_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+def _apply_kernel(idx_ref, upd_ref, base_ref, out_ref):
+    out_ref[...] = upd_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_pack_blocked(src: jax.Array, idx: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Gather: out[i] = src[idx[i]].  src (nblocks, rows, 128), idx (k,)."""
+    nblocks, rows, lanes = src.shape
+    assert lanes == LANES
+    k = idx.shape[0]
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k,),
+            in_specs=[pl.BlockSpec((1, rows, LANES), lambda i, idx: (idx[i], 0, 0))],
+            out_specs=pl.BlockSpec((1, rows, LANES), lambda i, idx: (i, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((k, rows, LANES), src.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), src)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_apply_blocked(
+    base: jax.Array, upd: jax.Array, idx: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """Scatter: out = base with out[idx[i]] = upd[i]. In-place via aliasing.
+
+    ``idx`` must not contain duplicates (each block written once)."""
+    nblocks, rows, lanes = base.shape
+    k = upd.shape[0]
+    assert lanes == LANES and upd.shape[1:] == (rows, lanes)
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k,),
+            in_specs=[
+                pl.BlockSpec((1, rows, LANES), lambda i, idx: (i, 0, 0)),
+                pl.BlockSpec((1, rows, LANES), lambda i, idx: (idx[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, rows, LANES), lambda i, idx: (idx[i], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        input_output_aliases={2: 0},  # base (after the scalar operand) → out
+        interpret=interpret,
+    )(idx.astype(jnp.int32), upd, base)
+    return out

@@ -1,0 +1,61 @@
+"""Public ops: pack dirty blocks to a compact delta / apply a delta.
+
+The flusher decides CoW-vs-µLog per page on the host (HybridPolicy), after
+which the dirty-block index vector is host-known; these ops therefore take a
+concrete index array. Index vectors are bucketed to power-of-two lengths by
+the persistence layer to bound the number of compiled shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import TPU_TILE
+from repro.kernels.common import as_blocks, from_blocks
+from repro.kernels.delta_pack.kernel import delta_apply_blocked, delta_pack_blocked
+from repro.kernels.delta_pack.ref import (
+    delta_apply_blocked_ref,
+    delta_pack_blocked_ref,
+)
+
+Impl = Literal["auto", "pallas", "ref"]
+
+
+def _use_ref(impl: Impl) -> bool:
+    return impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu")
+
+
+def pack_delta(
+    buf: jax.Array,
+    idx: jax.Array,
+    *,
+    block_bytes: int = TPU_TILE,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """Gather blocks ``idx`` of a flat buffer → (k, rows, 128) compact delta."""
+    blocked, _ = as_blocks(buf, block_bytes)
+    if _use_ref(impl):
+        return delta_pack_blocked_ref(blocked, idx)
+    return delta_pack_blocked(blocked, idx, interpret=jax.default_backend() != "tpu")
+
+
+def apply_delta(
+    buf: jax.Array,
+    delta: jax.Array,
+    idx: jax.Array,
+    *,
+    block_bytes: int = TPU_TILE,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """Scatter a packed delta back into a flat buffer; returns the new buffer
+    (same shape/dtype as ``buf``)."""
+    blocked, n = as_blocks(buf, block_bytes)
+    if _use_ref(impl):
+        out = delta_apply_blocked_ref(blocked, delta, idx)
+    else:
+        out = delta_apply_blocked(blocked, delta, idx,
+                                  interpret=jax.default_backend() != "tpu")
+    return from_blocks(out, n).reshape(buf.shape)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for delta pack/apply."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_pack_blocked_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(src, idx, axis=0)
+
+
+def delta_apply_blocked_ref(base: jax.Array, upd: jax.Array, idx: jax.Array) -> jax.Array:
+    return base.at[idx].set(upd)

@@ -1,0 +1,1 @@
+from repro.kernels.dirty_diff.ops import dirty_blocks  # noqa: F401

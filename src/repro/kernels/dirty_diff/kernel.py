@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: block-granular dirty bitmap (cur vs snapshot).
+
+This is the on-device realization of the paper's "the page is required to
+track modified areas since its last flush" (§3.2.2) — a training loop has no
+write interception, so dirtiness is *computed* by diffing live parameters
+against the last-flushed snapshot, at TPU-block (4 KiB tile) granularity.
+
+Grid: one program per TILE_BLOCKS blocks. Each program streams two
+(TILE_BLOCKS, rows, 128) tiles from HBM into VMEM, reduces ``any(cur !=
+snap)`` per block on the VPU, and writes a (TILE_BLOCKS, 1) int32 flag
+vector. Arithmetic intensity is ~1 op/byte ⇒ the kernel is HBM-bandwidth
+bound by design; the win over the naive jnp composition is fusing compare +
+reduce in one pass (no materialized boolean array in HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, TILE_BLOCKS
+
+
+def _dirty_diff_kernel(cur_ref, snap_ref, out_ref):
+    neq = cur_ref[...] != snap_ref[...]
+    out_ref[...] = jnp.any(neq, axis=(1, 2)).astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dirty_diff_blocked(cur: jax.Array, snap: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """(nblocks, rows, 128) ×2 → (nblocks,) int32 dirty flags.
+
+    ``nblocks`` must be a multiple of TILE_BLOCKS (ops.py pads).
+    """
+    nblocks, rows, lanes = cur.shape
+    assert lanes == LANES and cur.shape == snap.shape
+    assert nblocks % TILE_BLOCKS == 0
+    grid = (nblocks // TILE_BLOCKS,)
+    spec = pl.BlockSpec((TILE_BLOCKS, rows, LANES), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        _dirty_diff_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((TILE_BLOCKS, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, 1), jnp.int32),
+        interpret=interpret,
+    )(cur, snap)
+    return out[:, 0]

@@ -1,0 +1,1 @@
+from repro.kernels.flush_scan.ops import flush_scan  # noqa: F401

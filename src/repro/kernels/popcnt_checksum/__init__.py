@@ -1,0 +1,4 @@
+from repro.kernels.popcnt_checksum.ops import (  # noqa: F401
+    popcount_blocks,
+    popcount_checksum,
+)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: popcount checksum (Zero-logging validity word, §3.3.1).
+
+The paper validates a Zero-log entry by storing the entry's bit population
+count next to it: a cache line (here: a 4 KiB TPU block) is either fully
+durable or still all-zero, so a dropped block changes the popcount — unless
+the block was all-zero, in which case the recovered bytes are identical
+anyway. The same argument holds mod 2³²: dropping a block with popcount
+0 < c < 2³² always changes the modular sum.
+
+Grid: one program per TILE_BLOCKS blocks; each program popcounts a
+(TILE_BLOCKS, rows, 128) uint32 tile on the VPU (``lax.population_count``)
+and emits per-block partial sums; ops.py does the final modular reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, TILE_BLOCKS
+
+
+def _popcnt_kernel(x_ref, out_ref):
+    counts = jax.lax.population_count(x_ref[...])
+    out_ref[...] = jnp.sum(counts, axis=(1, 2), dtype=jnp.uint32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def popcnt_blocked(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """(nblocks, rows, 128) uint32 → (nblocks,) uint32 per-block popcounts."""
+    nblocks, rows, lanes = x.shape
+    assert lanes == LANES and x.dtype == jnp.uint32
+    assert nblocks % TILE_BLOCKS == 0
+    grid = (nblocks // TILE_BLOCKS,)
+    out = pl.pallas_call(
+        _popcnt_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_BLOCKS, rows, LANES), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((TILE_BLOCKS, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, 1), jnp.uint32),
+        interpret=interpret,
+    )(x)
+    return out[:, 0]

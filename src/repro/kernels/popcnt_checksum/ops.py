@@ -1,0 +1,53 @@
+"""Public op: popcount checksum of an arbitrary-dtype flat buffer.
+
+Used by the persistence layer as the Zero-log validity word for checkpoint
+manifests and WAL records computed on device (the host never has to stream
+the data just to checksum it)."""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import TPU_TILE
+from repro.kernels.common import TILE_BLOCKS, as_blocks, pad_blocks_to_tile
+from repro.kernels.popcnt_checksum.kernel import popcnt_blocked
+from repro.kernels.popcnt_checksum.ref import popcnt_blocked_ref
+
+Impl = Literal["auto", "pallas", "ref"]
+
+
+def _as_u32(x: jax.Array) -> jax.Array:
+    """Bitcast any dtype to uint32 (pad to 4-byte multiple via uint8)."""
+    if x.dtype == jnp.uint32:
+        return x.reshape(-1)
+    b = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint8).reshape(-1)
+    pad = (-b.shape[0]) % 4
+    if pad:
+        b = jnp.pad(b, (0, pad))
+    return jax.lax.bitcast_convert_type(b.reshape(-1, 4), jnp.uint32).reshape(-1)
+
+
+def popcount_blocks(x: jax.Array, *, block_bytes: int = TPU_TILE,
+                    impl: Impl = "auto") -> jax.Array:
+    """(nblocks,) uint32 per-block popcounts of a flat buffer."""
+    u32 = _as_u32(x)
+    xb, _ = as_blocks(u32, block_bytes)
+    nblocks = xb.shape[0]
+    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return popcnt_blocked_ref(xb)
+    interpret = jax.default_backend() != "tpu"
+    padded = pad_blocks_to_tile(nblocks, TILE_BLOCKS)
+    if padded != nblocks:
+        xb = jnp.pad(xb, ((0, padded - nblocks), (0, 0), (0, 0)))
+    return popcnt_blocked(xb, interpret=interpret)[:nblocks]
+
+
+def popcount_checksum(x: jax.Array, *, impl: Impl = "auto") -> jax.Array:
+    """uint32 scalar: modular popcount checksum (Zero-log validity word).
+    Returned value is popcount(x) + 1 (mod 2³²) so 0 always means
+    "never written" — the paper's cnt==0 convention."""
+    per_block = popcount_blocks(x, impl=impl)
+    return (jnp.sum(per_block, dtype=jnp.uint32) + jnp.uint32(1))

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the popcount-checksum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def popcnt_blocked_ref(x: jax.Array) -> jax.Array:
+    """(nblocks, rows, 128) uint32 → (nblocks,) uint32 per-block popcounts."""
+    return jnp.sum(jax.lax.population_count(x), axis=(1, 2), dtype=jnp.uint32)

@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, jitted steps, dry-run, train/serve."""

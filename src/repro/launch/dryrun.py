@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, WITHOUT allocating any real state:
+  - compiled.memory_analysis()  → bytes/device (proves it fits)
+  - compiled.cost_analysis()    → HLO FLOPs / bytes accessed
+  - collective byte totals parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute), with
+    while-loop (scan) bodies multiplied by their trip counts
+  → the three roofline terms (benchmarks/roofline.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh multi           # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    SHAPES,
+    cell_supported,
+    caches_abstract,
+    input_specs,
+    opt_state_abstract,
+    params_abstract,
+)
+from repro.launch.steps import (
+    shard_prefill_step,
+    shard_serve_step,
+    shard_train_step,
+)
+
+# ---------------------------------------------------------------- HLO scan
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result/operand string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, Any]:
+    """Parse optimized HLO text: per-collective byte totals, with while-loop
+    bodies scaled by trip count.
+
+    Strategy: split into computations; find trip counts from while loops
+    (XLA names bodies `while_body` / region annotations; robust fallback =
+    constant comparison in the loop condition); attribute each collective's
+    *result* bytes (shape of its output) to its computation; multiply by
+    the computation's execution count.
+    """
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->", line)
+        if m and ("{" in line or line.rstrip().endswith("{")):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+
+    # trip counts: find `while` ops and their condition computations
+    trip: Dict[str, int] = {}
+    body_of: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln or "= while " in ln or re.search(r"=\s*\w*\[?.*\bwhile\b", ln):
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb:
+                    body_of[mb.group(1)] = mc.group(1) if mc else ""
+
+    def cond_trip_count(cond_name: str) -> Optional[int]:
+        lines = comps.get(cond_name, [])
+        consts = []
+        for ln in lines:
+            for m in re.finditer(r"constant\((-?\d+)\)", ln):
+                consts.append(int(m.group(1)))
+        pos = [c for c in consts if c > 0]
+        return max(pos) if pos else None
+
+    exec_count: Dict[str, int] = {}
+    for body, cond in body_of.items():
+        tc = cond_trip_count(cond) if cond else None
+        exec_count[body] = tc if tc else 1
+
+    per_op: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    details = []
+    for cname, lines in comps.items():
+        mult = exec_count.get(cname, 1)
+        for ln in lines:
+            for cop in _COLLECTIVES:
+                m = re.search(rf"=\s*(.*?)\b{cop}(?:-start)?\(", ln)
+                if m:
+                    # result shape(s) sit between '=' and the opcode
+                    nbytes = _shape_bytes(m.group(1))
+                    per_op[cop] += nbytes * mult
+                    details.append({"op": cop, "comp": cname, "bytes": nbytes,
+                                    "mult": mult})
+                    break
+    total = sum(per_op.values())
+    return {"per_op": per_op, "total_bytes": total, "ops": len(details),
+            "details": details[:50]}
+
+
+# ---------------------------------------------------------------- one cell
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             save_hlo_to: Optional[str] = None,
+             opt_overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if opt_overrides:
+        cfg = dataclasses.replace(cfg, **opt_overrides)
+    ok, why = cell_supported(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    base = {
+        "arch": cfg.name, "shape": shape, "mesh": mesh_name,
+        "family": cfg.family,
+    }
+    if not ok:
+        return dict(base, status="skipped", reason=why)
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = input_specs(cfg, shape)
+    params_abs = params_abstract(cfg)
+
+    try:
+        with jax.set_mesh(mesh):
+            if spec["kind"] == "train":
+                opt_abs = opt_state_abstract(params_abs)
+                step, _ = shard_train_step(cfg, mesh, params_abs, opt_abs,
+                                           spec["batch"])
+                lowered = step.lower(params_abs, opt_abs, spec["batch"])
+            elif spec["kind"] == "prefill":
+                step, _ = shard_prefill_step(cfg, mesh, params_abs, spec["batch"])
+                lowered = step.lower(params_abs, spec["batch"])
+            else:
+                batch = spec["tokens"].shape[0]
+                step, _ = shard_serve_step(cfg, mesh, params_abs,
+                                           spec["caches"], batch)
+                lowered = step.lower(params_abs, spec["tokens"],
+                                     spec["caches"], spec["cache_pos"])
+            compiled = lowered.compile()
+    except Exception as e:
+        return dict(base, status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-2000:])
+
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    from repro.launch.hlo_analysis import analyze
+    rep = analyze(hlo)
+    if save_hlo_to:
+        with open(save_hlo_to, "w") as f:
+            f.write(hlo)
+
+    def _mem_field(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    result = dict(
+        base,
+        status="ok",
+        compile_s=round(t1 - t0, 1),
+        ndev=int(np.prod(list(mesh.shape.values()))),
+        memory={
+            "argument_bytes": _mem_field("argument_size_in_bytes"),
+            "output_bytes": _mem_field("output_size_in_bytes"),
+            "temp_bytes": _mem_field("temp_size_in_bytes"),
+            "alias_bytes": _mem_field("alias_size_in_bytes"),
+        },
+        cost={
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        },
+        hlo_analysis={
+            "flops": rep.flops,
+            "traffic_bytes": rep.traffic_bytes,
+            "collective_bytes": rep.collective_bytes,
+            "collective_per_op": rep.collective_per_op,
+            "scan_trip_counts": rep.exec_counts,
+            "dot_count": rep.dot_count,
+        },
+        collectives=dict(coll, details=None),
+        hlo_lines=hlo.count("\n"),
+    )
+    result["kind"] = spec["kind"]
+    return result
+
+
+# ------------------------------------------------------------------- main
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="arch id (assignment-sheet name ok)")
+    ap.add_argument("--shape", choices=list(SHAPES), default="train_4k")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="all 40 cells")
+    ap.add_argument("--out", default=None, help="dir for per-cell JSON")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch:
+            ap.error("--arch or --all required")
+        cells.append((args.arch, args.shape))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            res = run_cell(arch, shape, multi_pod=mp, save_hlo_to=args.save_hlo)
+            tag = f"{res['arch']}|{shape}|{res['mesh']}"
+            print(f"[{res['status']:7s}] {tag}  "
+                  + (f"flops={res['cost']['flops']:.3e} "
+                     f"coll={res['collectives']['total_bytes']:.3e}B "
+                     f"temp={res['memory']['temp_bytes']}B "
+                     f"({res['compile_s']}s)" if res["status"] == "ok"
+                     else res.get("reason", res.get("error", ""))[:200]))
+            sys.stdout.flush()
+            if res["status"] == "error":
+                failures += 1
+            if args.out:
+                fn = f"{ALIASES.get(arch, arch).replace('.', '_')}_{shape}_{res['mesh']}.json"
+                with open(os.path.join(args.out, fn), "w") as f:
+                    json.dump(res, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

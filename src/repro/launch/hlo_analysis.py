@@ -1,0 +1,257 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits each instruction once, so everything
+inside a ``jax.lax.scan`` (→ ``while``) body is under-counted by its trip
+count. This module rebuilds the numbers from the HLO text itself:
+
+  1. split the module into computations,
+  2. build the call graph (fusion/call/to_apply edges inline; while
+     body/condition edges carry a trip count recovered from the loop
+     condition's comparison constant),
+  3. propagate execution counts from ENTRY,
+  4. per executed computation, accumulate
+       - matmul FLOPs: 2 × |result| × |contracting dims| per ``dot``,
+       - memory traffic: operand + result bytes of top-level materializing
+         instructions (fusion internals excluded — they don't touch HBM),
+       - collective bytes: result bytes of all-gather / all-reduce /
+         reduce-scatter / all-to-all / collective-permute.
+
+All numbers are per-device (post-partitioning shapes) and multiplied by
+execution counts. They are estimates of the *steady-state* device work —
+exact for FLOPs, a good proxy for HBM traffic (fusions write their result
+once and read their operands once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+#: top-level ops that materialize their result in memory
+_MATERIALIZING = (
+    "fusion", "dot", "copy", "convert", "dynamic-update-slice", "gather",
+    "scatter", "dynamic-slice", "broadcast", "transpose", "reshape",
+    "reduce", "sort", "iota", "concatenate", "pad", "slice", "select",
+) + _COLLECTIVES
+
+
+def _shape_list(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_shapes: list
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class HloReport:
+    flops: float
+    traffic_bytes: float
+    collective_bytes: float
+    collective_per_op: Dict[str, float]
+    exec_counts: Dict[str, int]
+    dot_count: int
+    notes: List[str]
+
+
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+
+
+def parse_computations(hlo: str):
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and ("{" in line):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None and line.strip() and line.strip() != "}":
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _parse_instr(line: str) -> Optional[Instruction]:
+    m = _INSTR.match(line)
+    if not m:
+        return None
+    name, result_txt, opcode, rest = m.groups()
+    operands = re.findall(r"%([\w\.\-]+)", rest.split("),")[0] + ")")
+    return Instruction(name, opcode, _shape_list(result_txt), operands, line)
+
+
+def analyze(hlo: str, *, include_traffic: bool = True) -> HloReport:
+    comps, entry = parse_computations(hlo)
+    notes: List[str] = []
+
+    # --- parse instructions, build shape table -------------------------
+    instrs: Dict[str, List[Instruction]] = {}
+    shape_of: Dict[str, list] = {}
+    for cname, lines in comps.items():
+        out = []
+        for ln in lines:
+            ins = _parse_instr(ln)
+            if ins is None:
+                # parameters: "%p = f32[..] parameter(0)"
+                pm = re.match(r"^\s*%([\w\.\-]+)\s*=\s*(.*?)\sparameter\(", ln)
+                if pm:
+                    shape_of[pm.group(1)] = _shape_list(pm.group(2))
+                continue
+            out.append(ins)
+            shape_of[ins.name] = ins.result_shapes
+        instrs[cname] = out
+
+    # --- call graph + trip counts ---------------------------------------
+    body_cond: List[Tuple[str, str, str]] = []   # (caller, body, cond)
+    call_edges: List[Tuple[str, str]] = []       # inline calls (count x1)
+    for cname, ins_list in instrs.items():
+        for ins in ins_list:
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.raw)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.raw)
+                if mb:
+                    body_cond.append((cname, mb.group(1),
+                                      mc.group(1) if mc else ""))
+            else:
+                for kw in ("calls=", "to_apply=", "body="):
+                    for m in re.finditer(kw + r"%?([\w\.\-]+)", ins.raw):
+                        call_edges.append((cname, m.group(1)))
+
+    def trip_count(cond: str) -> int:
+        # loop condition compares the induction variable against a constant
+        best = 0
+        for ln in comps.get(cond, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+        return best if best > 0 else 1
+
+    exec_count: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None:
+        entry = next(iter(comps), None)
+        notes.append("no ENTRY found; using first computation")
+    if entry is None:
+        return HloReport(0, 0, 0, {}, {}, 0, ["empty HLO"])
+    exec_count[entry] = 1.0
+
+    # propagate in call order (HLO text lists callees before callers, so
+    # iterate a few times to reach a fixed point; graphs are shallow)
+    for _ in range(8):
+        changed = False
+        for caller, body, cond in body_cond:
+            t = trip_count(cond)
+            want_b = exec_count[caller] * t
+            if body in exec_count and exec_count[body] < want_b:
+                exec_count[body] = want_b
+                changed = True
+            if cond in exec_count and exec_count[cond] < want_b + exec_count[caller]:
+                exec_count[cond] = want_b + exec_count[caller]
+                changed = True
+        for caller, callee in call_edges:
+            if callee in exec_count and exec_count[callee] < exec_count[caller]:
+                exec_count[callee] = exec_count[caller]
+                changed = True
+        if not changed:
+            break
+
+    # computations reached only via fusion/call are *inlined*: their
+    # instruction traffic must not be double counted. Executed-standalone =
+    # entry + while bodies/conditions.
+    standalone = {entry}
+    standalone.update(b for _, b, _ in body_cond)
+    standalone.update(c for _, _, c in body_cond if c)
+
+    # --- accumulate ------------------------------------------------------
+    flops = 0.0
+    traffic = 0.0
+    coll_bytes = 0.0
+    per_op = {c: 0.0 for c in _COLLECTIVES}
+    dot_count = 0
+
+    def dot_flops(ins: Instruction) -> float:
+        out_elems = 1
+        for dt, dims in ins.result_shapes:
+            for d in dims:
+                out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+        lhs = ins.operands[0] if ins.operands else None
+        if not m or lhs is None or lhs not in shape_of or not shape_of[lhs]:
+            return 2.0 * out_elems  # fallback: unknown contraction
+        lhs_dims = shape_of[lhs][0][1]
+        k = 1
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+        return 2.0 * out_elems * k
+
+    for cname, ins_list in instrs.items():
+        mult = exec_count.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        for ins in ins_list:
+            if ins.opcode == "dot":
+                flops += dot_flops(ins) * mult
+                dot_count += 1
+            if ins.opcode in _COLLECTIVES or (
+                    ins.opcode.endswith("-start")
+                    and ins.opcode[:-6] in _COLLECTIVES):
+                op = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+                b = _nbytes(ins.result_shapes)
+                per_op[op] += b * mult
+                coll_bytes += b * mult
+        if include_traffic and cname in standalone:
+            for ins in ins_list:
+                base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+                if base in _MATERIALIZING:
+                    w = _nbytes(ins.result_shapes)
+                    r = sum(_nbytes(shape_of.get(o, [])) for o in ins.operands)
+                    traffic += (w + r) * mult
+
+    # dots inside fusion computations: count their flops with the *caller's*
+    # multiplicity — handled above because fusion comps inherit exec_count
+    # via call_edges; their traffic is excluded (not standalone). ✓
+
+    return HloReport(
+        flops=flops,
+        traffic_bytes=traffic,
+        collective_bytes=coll_bytes,
+        collective_per_op=per_op,
+        exec_counts={k: int(v) for k, v in exec_count.items() if v > 1},
+        dot_count=dot_count,
+        notes=notes,
+    )

@@ -1,0 +1,23 @@
+"""Production mesh definition.
+
+A function (not a module-level constant) so importing never touches jax
+device state. Single pod: 16×16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the leading
+``pod`` axis carries pure data parallelism across the inter-pod DCN links,
+so its collectives are gradient reduce-scatter/all-gathers only.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1×1 mesh for CPU smoke runs of the launch path."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,95 @@
+"""Input/state ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+``input_specs`` mirrors the synthetic pipeline's batch structure; the
+dry-run lowers against these without allocating anything. Assigned shapes:
+
+  train_4k     seq 4096,    global_batch 256   → train_step
+  prefill_32k  seq 32768,   global_batch 32    → prefill (full forward)
+  decode_32k   seq 32768,   global_batch 128   → serve_step (1 token, KV@32k)
+  long_500k    seq 524288,  global_batch 1     → serve_step; ONLY for
+               sub-quadratic mixers (ssm/hybrid) — skipped for pure
+               full-attention archs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_caches, init_params
+from repro.models.config import ModelConfig
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": {"seq": 4096, "batch": 256, "mode": 0},
+    "prefill_32k": {"seq": 32768, "batch": 32, "mode": 1},
+    "decode_32k": {"seq": 32768, "batch": 128, "mode": 2},
+    "long_500k": {"seq": 524288, "batch": 1, "mode": 2},
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("full-attention arch: a 512k dense KV cache is the "
+                       "quadratic cost this shape excludes (DESIGN.md §5)")
+    return True, ""
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs_abstract(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs matching data.synthetic_batch."""
+    out = {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == "audio_frames":
+        out["frames"] = _sds((batch, seq, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "vision_patches":
+        out["vis_embeds"] = _sds((batch, max(1, seq // 4), cfg.d_model), cfg.dtype)
+        out["positions"] = _sds((3, batch, seq), jnp.int32)
+    return out
+
+
+def params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def opt_state_abstract(params_abs):
+    from repro.optim import adamw_init
+    return jax.eval_shape(adamw_init, params_abs)
+
+
+def caches_abstract(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_caches(cfg, batch, max_len, enc_len))
+
+
+def decode_inputs_abstract(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    out = {"tokens": _sds((batch, 1), jnp.int32)}
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """The complete abstract input bundle for one cell."""
+    info = SHAPES[shape]
+    seq, batch = info["seq"], info["batch"]
+    mode = info["mode"]
+    if mode in (0, 1):
+        return {
+            "kind": "train" if mode == 0 else "prefill",
+            "batch": batch_specs_abstract(cfg, batch, seq),
+        }
+    enc_len = seq if cfg.encoder_layers else 0
+    return {
+        "kind": "decode",
+        "tokens": _sds((batch, 1), jnp.int32),
+        "caches": caches_abstract(cfg, batch, seq, enc_len),
+        "cache_pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

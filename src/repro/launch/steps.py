@@ -1,0 +1,103 @@
+"""Jitted step builders: train_step / prefill_step / serve_step.
+
+Built per (config, mesh): in/out shardings come from the rule tables in
+``distributed.sharding``; params and optimizer moments are donated so the
+updated state reuses the same buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import decode_step as model_decode
+from repro.models import forward, lm_loss
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update, warmup_cosine
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                     *, remat: bool = True, total_steps: int = 10_000):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch, remat=remat), has_aux=True)(params)
+        lr_scale = warmup_cosine(opt_state["count"], total=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale)
+        metrics = dict(metrics, **opt_metrics, lr_scale=lr_scale)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = forward(params, cfg, batch)
+        # serving returns only the last position's logits
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, caches, cache_pos):
+        logits, new_caches = model_decode(params, cfg, tokens, caches, cache_pos)
+        return logits[:, 0], new_caches
+
+    return serve_step
+
+
+# -----------------------------------------------------------------------
+# sharded jit wrappers
+# -----------------------------------------------------------------------
+
+
+def shard_train_step(cfg: ModelConfig, mesh: Mesh, params_abs, opt_abs,
+                     batch_abs, **kw):
+    """jit train_step with explicit in/out shardings for `mesh`."""
+    pspecs = shd.state_specs(params_abs, mesh)
+    ospecs = shd.opt_specs(opt_abs, pspecs, mesh)
+    bspecs = shd.batch_specs(batch_abs, mesh)
+    named = functools.partial(shd.to_named, mesh=mesh)
+    metric_sharding = NamedSharding(mesh, P())
+    step = build_train_step(cfg, **kw)
+    return jax.jit(
+        step,
+        in_shardings=(named(pspecs), named(ospecs), named(bspecs)),
+        out_shardings=(named(pspecs), named(ospecs), None),
+        donate_argnums=(0, 1),
+    ), (pspecs, ospecs, bspecs)
+
+
+def shard_prefill_step(cfg: ModelConfig, mesh: Mesh, params_abs, batch_abs):
+    pspecs = shd.state_specs(params_abs, mesh)
+    bspecs = shd.batch_specs(batch_abs, mesh)
+    named = functools.partial(shd.to_named, mesh=mesh)
+    step = build_prefill_step(cfg)
+    return jax.jit(
+        step,
+        in_shardings=(named(pspecs), named(bspecs)),
+    ), (pspecs, bspecs)
+
+
+def shard_serve_step(cfg: ModelConfig, mesh: Mesh, params_abs, caches_abs,
+                     batch: int):
+    pspecs = shd.state_specs(params_abs, mesh)
+    cspecs = shd.cache_specs(caches_abs, mesh)
+    fs = shd.fsdp_axes(mesh) or None
+    tok_spec = P(shd._fit(mesh, batch, fs), None)
+    named = functools.partial(shd.to_named, mesh=mesh)
+    step = build_serve_step(cfg)
+    return jax.jit(
+        step,
+        in_shardings=(named(pspecs), NamedSharding(mesh, tok_spec),
+                      named(cspecs), NamedSharding(mesh, P())),
+        out_shardings=(None, named(cspecs)),
+        donate_argnums=(2,),
+    ), (pspecs, cspecs)

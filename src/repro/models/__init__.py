@@ -1,0 +1,11 @@
+"""Model definitions: unified multi-family transformer/SSM stack."""
+
+from repro.models.config import ModelConfig, Segment  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    encode,
+    forward,
+    init_caches,
+    init_params,
+    lm_loss,
+)

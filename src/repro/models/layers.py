@@ -1,0 +1,128 @@
+"""Shared neural building blocks (self-contained functional style).
+
+Params are nested dicts of jnp arrays. Every ``init_*`` has a matching
+``apply``-style function; init works under ``jax.eval_shape`` so the
+dry-run never materializes weights.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ RMSNorm
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- RoPE
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) int → cos/sin (..., dim/2) in f32."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., H, hd) rotated pairwise; cos/sin broadcastable (..., hd/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(dt)
+
+
+def mrope_angles(positions: jax.Array, dim: int, theta: float,
+                 sections: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE. positions (3, B, S) — temporal / height / width ids.
+    ``sections`` split the dim/2 frequency bands among the 3 position kinds
+    (text tokens carry identical ids in all three → reduces to 1-D RoPE)."""
+    assert positions.shape[0] == len(sections) == 3
+    half = dim // 2
+    assert sum(sections) == half
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(theta) / half))
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (3, B, S, half)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, ..., start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ------------------------------------------------------------------- SwiGLU
+
+def ffn_init(key, d: int, f: int, dtype, kind: str = "swiglu") -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "gelu":
+        return {"up": dense_init(k2, d, f, dtype),
+                "down": dense_init(k3, f, d, dtype)}
+    return {
+        "gate": dense_init(k1, d, f, dtype),
+        "up": dense_init(k2, d, f, dtype),
+        "down": dense_init(k3, f, d, dtype),
+    }
+
+
+def ffn_apply(p: Params, x: jax.Array) -> jax.Array:
+    if "gate" in p:
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------- embedding
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def embed_apply(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_apply(table: jax.Array, x: jax.Array) -> jax.Array:
+    return x @ table.T
+
+
+# ------------------------------------------------------------------- loss
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean masked token cross-entropy in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

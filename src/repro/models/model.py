@@ -1,0 +1,323 @@
+"""Unified model: segments of scanned block stacks covering all families.
+
+``init_params`` works under ``jax.eval_shape`` (abstract init for the
+dry-run). ``forward`` serves training (full-seq, optional remat), prefill
+(full-seq returning caches), and decode (S=1 against caches). Caches are
+pytrees stacked along the scan axis, so the same ``lax.scan`` drives both
+parameter-only (train) and parameter+cache (serve) traversals.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    gqa_apply,
+    gqa_cache_init,
+    gqa_init,
+    mla_apply,
+    mla_cache_init,
+    mla_init,
+)
+from repro.models.config import ModelConfig, Segment
+from repro.models.layers import (
+    embed_apply,
+    embed_init,
+    ffn_apply,
+    ffn_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_xent,
+    unembed_apply,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import rec_apply, rec_init, rec_state_init
+from repro.models.ssd import ssd_apply, ssd_init, ssd_state_init
+
+Params = Dict[str, Any]
+
+
+# ========================================================================
+# block init / apply
+# ========================================================================
+
+
+def _attn_init(key, cfg, dtype):
+    if cfg.attn_kind == "mla":
+        return mla_init(key, cfg, dtype=dtype)
+    return gqa_init(key, cfg, dtype=dtype)
+
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    if kind in ("attn", "enc"):
+        return {"norm1": rmsnorm_init(D, dtype), "attn": _attn_init(ks[0], cfg, dtype),
+                "norm2": rmsnorm_init(D, dtype), "ffn": ffn_init(ks[1], D, cfg.d_ff, dtype, cfg.ffn_kind)}
+    if kind == "attn_moe":
+        return {"norm1": rmsnorm_init(D, dtype), "attn": _attn_init(ks[0], cfg, dtype),
+                "norm2": rmsnorm_init(D, dtype), "moe": moe_init(ks[1], cfg, dtype=dtype)}
+    if kind == "rec":
+        return {"norm1": rmsnorm_init(D, dtype), "rec": rec_init(ks[0], cfg, dtype=dtype),
+                "norm2": rmsnorm_init(D, dtype), "ffn": ffn_init(ks[1], D, cfg.d_ff, dtype, cfg.ffn_kind)}
+    if kind == "ssd":
+        return {"norm1": rmsnorm_init(D, dtype), "ssd": ssd_init(ks[0], cfg, dtype=dtype)}
+    if kind == "xattn":
+        return {"norm1": rmsnorm_init(D, dtype), "attn": gqa_init(ks[0], cfg, dtype=dtype),
+                "norm2": rmsnorm_init(D, dtype), "xatt": gqa_init(ks[1], cfg, dtype=dtype),
+                "norm3": rmsnorm_init(D, dtype), "ffn": ffn_init(ks[2], D, cfg.d_ff, dtype, cfg.ffn_kind)}
+    raise ValueError(kind)
+
+
+def block_cache_init(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype, enc_len: int = 0):
+    if kind in ("attn", "attn_moe"):
+        if cfg.attn_kind == "mla":
+            return mla_cache_init(cfg, batch, max_len, dtype)
+        return gqa_cache_init(cfg, batch, max_len, dtype)
+    if kind == "rec":
+        return rec_state_init(cfg, batch, dtype)
+    if kind == "ssd":
+        return ssd_state_init(cfg, batch, dtype)
+    if kind == "xattn":
+        self_c = gqa_cache_init(cfg, batch, max_len, dtype)
+        hd, KV = cfg.raw_head_dim, cfg.padded_kv_heads
+        cross = {"k": jnp.zeros((batch, enc_len, KV, hd), dtype),
+                 "v": jnp.zeros((batch, enc_len, KV, hd), dtype)}
+        return {"self": self_c, "cross": cross}
+    if kind == "enc":
+        return None
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, p: Params, x: jax.Array, *, cfg: ModelConfig,
+                positions, enc_out=None, cache=None, cache_pos=None):
+    eps = cfg.norm_eps
+    new_cache = None
+    if kind in ("attn", "attn_moe", "enc"):
+        h = rmsnorm(x, p["norm1"], eps)
+        if cfg.attn_kind == "mla" and kind != "enc":
+            a, new_cache = mla_apply(p["attn"], h, cfg=cfg, positions=positions,
+                                     cache=cache, cache_pos=cache_pos)
+        else:
+            a, new_cache = gqa_apply(
+                p["attn"], h, cfg=cfg, positions=positions,
+                causal=(kind != "enc"), window=cfg.window if kind != "enc" else 0,
+                cache=cache, cache_pos=cache_pos)
+        x = x + a
+        h = rmsnorm(x, p["norm2"], eps)
+        if kind == "attn_moe":
+            x = x + moe_apply(p["moe"], h, cfg)
+        else:
+            x = x + ffn_apply(p["ffn"], h)
+        return x, new_cache
+    if kind == "rec":
+        h = rmsnorm(x, p["norm1"], eps)
+        a, new_cache = rec_apply(p["rec"], h, cfg=cfg, state=cache)
+        x = x + a
+        x = x + ffn_apply(p["ffn"], rmsnorm(x, p["norm2"], eps))
+        return x, new_cache
+    if kind == "ssd":
+        h = rmsnorm(x, p["norm1"], eps)
+        a, new_cache = ssd_apply(p["ssd"], h, cfg=cfg, state=cache)
+        return x + a, new_cache
+    if kind == "xattn":
+        sc = cache["self"] if cache is not None else None
+        cc = cache["cross"] if cache is not None else None
+        h = rmsnorm(x, p["norm1"], eps)
+        a, new_self = gqa_apply(p["attn"], h, cfg=cfg, positions=positions,
+                                causal=True, cache=sc, cache_pos=cache_pos)
+        x = x + a
+        h = rmsnorm(x, p["norm2"], eps)
+        a, new_cross = gqa_apply(p["xatt"], h, cfg=cfg, positions=positions,
+                                 cross=True, kv_input=enc_out, cache=cc)
+        x = x + a
+        x = x + ffn_apply(p["ffn"], rmsnorm(x, p["norm3"], eps))
+        return x, {"self": new_self, "cross": new_cross}
+    raise ValueError(kind)
+
+
+# ========================================================================
+# segments
+# ========================================================================
+
+
+def init_segment(key, seg: Segment, cfg: ModelConfig, dtype) -> Params:
+    def unit_init(k):
+        ks = jax.random.split(k, len(seg.pattern))
+        return {f"b{i}": init_block(ks[i], kind, cfg, dtype)
+                for i, kind in enumerate(seg.pattern)}
+    keys = jax.random.split(key, seg.repeat)
+    return jax.vmap(unit_init)(keys)
+
+
+def segment_cache_init(seg: Segment, cfg: ModelConfig, batch: int, max_len: int,
+                       dtype, enc_len: int = 0):
+    def one():
+        return {f"b{i}": block_cache_init(kind, cfg, batch, max_len, dtype, enc_len)
+                for i, kind in enumerate(seg.pattern)}
+    unit = one()
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (seg.repeat,) + a.shape).copy(), unit)
+
+
+def apply_segment(seg: Segment, p: Params, x, *, cfg, positions, enc_out=None,
+                  caches=None, cache_pos=None, remat: bool = False):
+    from repro.distributed.autoshard import constrain
+
+    # residual-stream layout: batch over data axes; optionally sequence-
+    # sharded over `model` (SP) so the L scan-carried/remat-saved copies
+    # shrink by the TP degree. Without an explicit constraint SPMD
+    # propagation picks pathological layouts for scan carries (observed:
+    # D over data, batch replicated).
+    res_spec = ("fsdp", "model" if cfg.seq_shard_activations else None, None)
+
+    def body(carry, xs):
+        x = carry
+        x = constrain(x, res_spec)
+        lp, lc = xs
+        new_cs = {}
+        for i, kind in enumerate(seg.pattern):
+            c = None if lc is None else lc.get(f"b{i}")
+            x, nc = apply_block(kind, lp[f"b{i}"], x, cfg=cfg, positions=positions,
+                                enc_out=enc_out, cache=c, cache_pos=cache_pos)
+            new_cs[f"b{i}"] = nc
+        x = constrain(x, res_spec)
+        return x, (new_cs if caches is not None else None)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (p, caches) if caches is not None else (p, None)
+    if caches is None:
+        x, _ = jax.lax.scan(lambda c, lp: body(c, (lp, None)), x, p)
+        return x, None
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+# ========================================================================
+# model
+# ========================================================================
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4 + len(cfg.segments) + len(cfg.encoder_segments))
+    params: Params = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype)
+    params["decoder"] = {
+        f"seg{i}": init_segment(ks[4 + i], seg, cfg, dtype)
+        for i, seg in enumerate(cfg.segments)
+    }
+    if cfg.encoder_segments:
+        off = 4 + len(cfg.segments)
+        params["encoder"] = {
+            f"seg{i}": init_segment(ks[off + i], seg, cfg, dtype)
+            for i, seg in enumerate(cfg.encoder_segments)
+        }
+        params["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    return params
+
+
+def _positions_for(cfg: ModelConfig, batch: Dict[str, jax.Array], S: int):
+    if "positions" in batch:
+        return batch["positions"]
+    B = batch["tokens"].shape[0]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+           *, remat: bool = False) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings (B, S_enc, D)."""
+    x = frames
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    for i, seg in enumerate(cfg.encoder_segments):
+        x, _ = apply_segment(seg, params["encoder"][f"seg{i}"], x, cfg=cfg,
+                             positions=pos, remat=remat)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    caches: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Returns (logits (B,S,V_padded), new_caches or None)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_apply(params["embed"], tokens)
+    if "vis_embeds" in batch:
+        # VLM stub frontend: patch embeddings occupy the first S_vis slots
+        ve = batch["vis_embeds"].astype(x.dtype)
+        S_vis = ve.shape[1]
+        pad = jnp.zeros((B, S - S_vis, ve.shape[2]), dtype=x.dtype)
+        vis_full = jnp.concatenate([ve, pad], axis=1)
+        is_vis = (jnp.arange(S) < S_vis)[None, :, None]
+        x = jnp.where(is_vis, vis_full, x)
+    enc_out = None
+    if "frames" in batch:
+        enc_out = encode(params, cfg, batch["frames"].astype(x.dtype),
+                         remat=remat)
+    positions = _positions_for(cfg, batch, S) if cache_pos is None else None
+    if cache_pos is not None:
+        pos = jnp.broadcast_to(jnp.reshape(cache_pos, (1, 1)).astype(jnp.int32), (B, S))
+        positions = jnp.broadcast_to(pos[None], (3, B, S)) if cfg.mrope_sections else pos
+
+    new_caches: Dict[str, Any] = {}
+    for i, seg in enumerate(cfg.segments):
+        c = None if caches is None else caches[f"seg{i}"]
+        x, nc = apply_segment(seg, params["decoder"][f"seg{i}"], x, cfg=cfg,
+                              positions=positions, enc_out=enc_out,
+                              caches=c, cache_pos=cache_pos, remat=remat)
+        new_caches[f"seg{i}"] = nc
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed_apply(head, x)
+    return logits, (new_caches if caches is not None else None)
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            *, remat: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _ = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    mask = (labels >= 0)
+    loss = softmax_xent(logits, jnp.maximum(labels, 0), mask)
+    return loss, {"loss": loss}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                enc_len: int = 0) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        f"seg{i}": segment_cache_init(seg, cfg, batch, max_len, dtype, enc_len)
+        for i, seg in enumerate(cfg.segments)
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                caches: Params, cache_pos: jax.Array,
+                extras: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Params]:
+    """One serving step: tokens (B,1) + caches @ cache_pos → logits, caches."""
+    batch = {"tokens": tokens}
+    if extras:
+        batch.update(extras)
+    logits, new_caches = forward(params, cfg, batch, caches=caches,
+                                 cache_pos=cache_pos)
+    return logits, new_caches

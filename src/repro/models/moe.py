@@ -1,0 +1,111 @@
+"""Mixture-of-Experts block: top-k routing with sort-based token dispatch.
+
+Dispatch strategy (the scalable one — no (N, E, C) one-hot cube and no
+all-experts-on-all-tokens waste): replicate each token k times, stably sort
+the (N·k) assignments by expert id, compute each assignment's position
+inside its expert group, drop beyond a fixed per-expert capacity
+C = N·k/E·capacity_factor, and scatter into an (E·C, D) buffer. Expert FFNs
+then run as one batched einsum over the leading (sharded) expert dimension;
+results gather back through the same permutation with router-gate weighting.
+Compute is k·cf·N·D·F — proportional to *active* parameters, which keeps
+the MODEL_FLOPS/HLO_FLOPS roofline ratio honest.
+
+Sharding: expert dim → ``model`` axis (EP), capacity dim → data axes; the
+scatter from token-sharded to expert-sharded layout is XLA's all-to-all.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, ffn_apply, ffn_init
+from repro.distributed.autoshard import constrain
+
+
+def moe_init(key, cfg, *, dtype) -> Params:
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "gate": jax.random.normal(ks[1], (E, D, F), dtype=jnp.float32).astype(dtype) / (D ** 0.5),
+        "up": jax.random.normal(ks[2], (E, D, F), dtype=jnp.float32).astype(dtype) / (D ** 0.5),
+        "down": jax.random.normal(ks[3], (E, F, D), dtype=jnp.float32).astype(dtype) / (F ** 0.5),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = ffn_init(ks[4], D, cfg.num_shared_experts * F, dtype)
+    return p
+
+
+def moe_apply(p: Params, x: jax.Array, cfg) -> jax.Array:
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    N = B * S
+    xf = x.reshape(N, D)
+
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)            # (N, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    flat_e = experts.reshape(-1)                         # (N·k,)
+    order = jnp.argsort(flat_e, stable=True)
+    tok = order // k                                     # token of each slot
+    sorted_e = flat_e[order]
+
+    cap = max(8, int(round(N * k / E * cfg.capacity_factor)))
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e.astype(jnp.int32) * cap + pos, E * cap)
+
+    # gather tokens into sorted order FIRST (result stays token-sharded),
+    # then scatter to the expert-sharded buffer — a single layout change
+    # instead of a fused gather+scatter that SPMD lowers to full-buffer
+    # all-reduces of partial results.
+    x_sorted = constrain(jnp.take(xf, tok, axis=0), ("fsdp", None))
+    buf = jnp.zeros((E * cap + 1, D), dtype=x.dtype)
+    buf = buf.at[slot].set(x_sorted)
+    h = buf[: E * cap].reshape(E, cap, D)
+    h = constrain(h, ("model", "fsdp", None))
+
+    act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["gate"])) * jnp.einsum(
+        "ecd,edf->ecf", h, p["up"])
+    act = constrain(act, ("model", "fsdp", None))
+    y_e = jnp.einsum("ecf,efd->ecd", act, p["down"])
+    y_e = constrain(y_e, ("model", "fsdp", None))
+
+    y_flat = jnp.concatenate(
+        [y_e.reshape(E * cap, D), jnp.zeros((1, D), dtype=y_e.dtype)], axis=0)
+    per_slot = jnp.take(y_flat, slot, axis=0)            # (N·k, D) sorted order
+    per_slot = constrain(per_slot.astype(x.dtype), ("fsdp", None))
+    # combine WITHOUT a scatter-add: invert the sort permutation so slot j of
+    # token n sits at index n·k+j, then reduce over k with an einsum. A
+    # scatter-add into (N, D) lowers to all-reduce traffic across the mesh;
+    # the gather+einsum form keeps the reduction local to each token's shard.
+    inv = jnp.argsort(order)
+    per_tok = jnp.take(per_slot, inv, axis=0).reshape(N, k, D)
+    per_tok = constrain(per_tok, ("fsdp", None, None))
+    keep_tok = jnp.take(keep, inv, axis=0).reshape(N, k)
+    w = (gates * keep_tok).astype(per_tok.dtype)
+    y = constrain(jnp.einsum("nkd,nk->nd", per_tok, w), ("fsdp", None))
+
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], xf)
+    return y.reshape(B, S, D)
+
+
+def moe_aux_loss(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Load-balance auxiliary loss (Switch-style): E·mean(f_e · p_e)."""
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, experts = jax.lax.top_k(probs, cfg.top_k)
+    counts = jnp.sum(jax.nn.one_hot(experts, cfg.num_experts, dtype=jnp.float32),
+                     axis=(0, 1))
+    frac = counts / jnp.maximum(counts.sum(), 1.0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.num_experts * jnp.sum(frac * imp)

@@ -1,0 +1,105 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+The RG-LRU is a gated diagonal linear recurrence
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ u_t),
+    a_t = exp(−c · softplus(Λ) ⊙ r_t),      r_t, i_t = σ(gates(u_t))
+Training/prefill uses ``jax.lax.associative_scan`` over time (log-depth on
+TPU — this is the sub-quadratic mixer that makes long_500k viable);
+decode is a single O(width) state update.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+_C = 8.0  # Griffin's recurrence-sharpness constant
+
+
+def rec_init(key, cfg, *, dtype) -> Params:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    ks = jax.random.split(key, 6)
+    lam = jax.random.uniform(ks[4], (W,), minval=0.9, maxval=0.999)
+    # Λ parameterized so softplus(Λ_raw) gives the target decay band
+    lam_raw = jnp.log(jnp.expm1(-jnp.log(lam) / _C))
+    return {
+        "wx": dense_init(ks[0], D, W, dtype),
+        "wg": dense_init(ks[1], D, W, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_kernel, W)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "wa": dense_init(ks[3], W, W, dtype),
+        "wi": dense_init(ks[5], W, W, dtype),
+        "lam": lam_raw.astype(jnp.float32),
+        "wo": dense_init(ks[2], W, D, dtype, scale=1.0 / math.sqrt(W)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. u (B,S,W); w (k,W).
+    Returns (out, new_conv_state (B,k-1,W))."""
+    B, S, W = u.shape
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((B, k - 1, W), dtype=u.dtype)
+    else:
+        pad = conv_state
+    full = jnp.concatenate([pad, u], axis=1)          # (B, S+k-1, W)
+    out = jnp.zeros_like(u)
+    for j in range(k):
+        out = out + full[:, j : j + S, :] * w[j]
+    new_state = full[:, -(k - 1):, :] if k > 1 else jnp.zeros((B, 0, W), u.dtype)
+    return out + b, new_state
+
+
+def rec_apply(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """state = {"h": (B,W) f32, "conv": (B,k-1,W)}; None → zeros (train)."""
+    B, S, D = x.shape
+    u = x @ p["wx"]
+    g = jax.nn.gelu(x @ p["wg"])
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid((u @ p["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["wi"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r        # (B,S,W) f32
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = mult * i * u.astype(jnp.float32)
+
+    h0 = state["h"] if state is not None else None
+    if S == 1 and h0 is not None:
+        h = a[:, 0] * h0 + b[:, 0]                     # decode step
+        hs = h[:, None]
+    else:
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0)
+        def combine(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, bl * ar + br
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hs[:, -1]
+
+    y = (hs.astype(x.dtype) * g) @ p["wo"]
+    return y, {"h": h, "conv": new_conv}
+
+
+def rec_state_init(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    W = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, W), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, W), dtype=dtype),
+    }

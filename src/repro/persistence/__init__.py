@@ -1,0 +1,18 @@
+"""Training-state persistence built on the paper's I/O primitives.
+
+- :mod:`repro.persistence.checkpoint` — sharded checkpoint manager: each
+  parameter/optimizer shard is a sequence of *pages* flushed failure-
+  atomically (CoW + pvn for full snapshots, µLog deltas for sparse change),
+  manifest committed through a Zero log.
+- :mod:`repro.persistence.wal`        — step-granular training WAL (Zero
+  logging: one durability barrier per training step).
+- :mod:`repro.persistence.flusher`    — asynchronous background flushing,
+  overlapped with training (guideline G5: stage in DRAM, bound writer
+  concurrency per G4).
+- :mod:`repro.persistence.restore`    — crash recovery + elastic re-shard.
+"""
+
+from repro.persistence.checkpoint import CheckpointConfig, CheckpointManager  # noqa: F401
+from repro.persistence.flusher import AsyncFlusher  # noqa: F401
+from repro.persistence.restore import assemble_global, reshard_state  # noqa: F401
+from repro.persistence.wal import StepRecord, TrainWAL  # noqa: F401

@@ -1,0 +1,366 @@
+"""Sharded, failure-atomic, delta-capable checkpoint manager.
+
+Every host writes its own shard region (no cross-device funnel — at 1000+
+nodes the durable tier must be written in parallel). Within a shard:
+
+  state leaf  →  fixed-size *pages*  →  PageStore slots (CoW + pvn)
+                                     ↘  µLog shadow-slot deltas when sparse
+  manifest    →  Zero log            (ONE barrier commits the checkpoint)
+
+Consistency story (the non-trivial part):
+
+* Every page keeps **two** slots once it has been flushed twice: *current*
+  (version v) and *shadow* (v-1). A full flush CoWs into a free slot; a
+  delta flush µLogs the changed blocks **onto the shadow slot** — never in
+  place — so the page set referenced by the last *committed* manifest stays
+  physically intact no matter where a crash lands. (The paper's in-place
+  µLog is correct for a buffer manager, where only the newest page version
+  matters; a checkpoint must restore a *consistent cut*, hence the shadow
+  variant. Recorded in DESIGN.md §7.)
+* The manifest entry (step, page→(slot, pvn), checksums) is appended to a
+  Zero log: the checkpoint becomes durable with a single persistency
+  barrier, and recovery picks the last manifest whose pages still verify
+  (slot pvn match + popcount checksum — the same validity argument as
+  Zero logging, at page scale).
+* Dirtiness is *computed*, not intercepted: the Pallas ``dirty_diff``
+  kernel compares live parameters against the last-flushed snapshot at
+  4 KiB TPU-tile granularity; ``HybridPolicy`` (threads-aware, §3.2.3)
+  picks CoW vs µLog per page. A delta onto the shadow slot must cover the
+  change since v-1, so the dirty set is the union of the last two saves'
+  dirty blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.blocks import BlockGeometry, TPU_TILE, align_up
+from repro.core.costmodel import COST_MODEL
+from repro.core.log import ZeroLog, LogConfig, popcount
+from repro.core.pageflush import HybridPolicy, PageStore, PageStoreLayout
+from repro.core.persist import AccessPattern, FlushKind
+from repro.core.pmem import PMem, PMemStats
+from repro.kernels.dirty_diff import dirty_blocks
+from repro.kernels.flush_scan import flush_scan
+from repro.kernels.popcnt_checksum import popcount_blocks
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "SaveReport"]
+
+#: checkpoint geometry: dirty unit = 4 KiB TPU tile, write granule = 16 KiB
+CKPT_GEOMETRY = BlockGeometry(cache_line=TPU_TILE, block=4 * TPU_TILE)
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    page_size: int = 256 * 1024
+    manifest_capacity: int = 1 << 20
+    delta: bool = True               # enable µLog shadow-slot deltas
+    threads: int = 1                 # writer threads (G4: bounded; feeds policy)
+    kernel_impl: str = "auto"        # dirty_diff dispatch
+    extra_slots: int = 4             # beyond the 2-per-page steady state
+
+    @property
+    def geometry(self) -> BlockGeometry:
+        return CKPT_GEOMETRY
+
+    @property
+    def blocks_per_page(self) -> int:
+        return self.page_size // self.geometry.cache_line
+
+
+@dataclasses.dataclass
+class SaveReport:
+    step: int
+    pages_total: int = 0
+    pages_cow: int = 0
+    pages_mulog: int = 0
+    pages_clean: int = 0
+    bytes_logical: int = 0          # checkpoint state size
+    barriers: int = 0
+    blocks_written: int = 0
+    modeled_ns: float = 0.0
+
+    @property
+    def bytes_device(self) -> int:
+        return self.blocks_written * CKPT_GEOMETRY.block
+
+
+class CheckpointManager:
+    """Checkpoint manager for one shard (one host's slice of the state).
+
+    State is a flat ``{name: array}`` dict with a stable key set. Arrays may
+    be jax or numpy; they are staged to host memory on save (guideline G5 —
+    the device-side dirty computation is the only on-device work).
+    """
+
+    def __init__(self, path: Optional[str], cfg: CheckpointConfig = CheckpointConfig(),
+                 *, shard_id: int = 0) -> None:
+        self.cfg = cfg
+        self.path = path
+        self.shard_id = shard_id
+        self.pmem: Optional[PMem] = None
+        self.store: Optional[PageStore] = None
+        self.manifest: Optional[ZeroLog] = None
+        self._layout: Optional[PageStoreLayout] = None
+        self._leaf_pages: Dict[str, List[int]] = {}
+        self._leaf_meta: Dict[str, Dict[str, Any]] = {}
+        self._snapshots: Dict[str, np.ndarray] = {}   # last flushed bytes
+        self._prev_dirty: Dict[int, set] = {}         # page -> dirty lines of last save
+        self._shadow: Dict[int, int] = {}             # page -> shadow slot
+        self._manifest_base = 0
+        self._saves = 0
+
+    # ----------------------------------------------------------- layout
+
+    @staticmethod
+    def _leaf_bytes(arr: np.ndarray) -> np.ndarray:
+        a = np.ascontiguousarray(np.asarray(arr))
+        return a.view(np.uint8).reshape(-1)
+
+    def _build(self, state: Dict[str, np.ndarray]) -> None:
+        cfg, g = self.cfg, self.cfg.geometry
+        pid = 0
+        for name in sorted(state):
+            buf = self._leaf_bytes(state[name])
+            npages = max(1, -(-buf.size // cfg.page_size))
+            self._leaf_pages[name] = list(range(pid, pid + npages))
+            arr = np.asarray(state[name])
+            self._leaf_meta[name] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "nbytes": int(buf.size),
+            }
+            pid += npages
+        npages = pid
+        layout = PageStoreLayout(
+            base=align_up(cfg.manifest_capacity, g.block),
+            page_size=cfg.page_size,
+            npages=npages,
+            nslots=2 * npages + cfg.extra_slots,
+            geometry=g,
+        )
+        self._layout = layout
+        total = layout.base + layout.total_bytes
+        # µlog area: header line + idx + data per µlog
+        per_mulog = align_up(
+            g.cache_line + align_up(4 * layout.lines_per_page, g.cache_line)
+            + layout.lines_per_page * g.cache_line, g.block)
+        total = align_up(total, g.block) + cfg.threads * per_mulog + g.block
+        self.pmem = PMem(total, path=self.path, geometry=g)
+        self.pmem.memset_zero()
+        self.store = PageStore(self.pmem, layout, n_mulogs=cfg.threads,
+                               threads=cfg.threads)
+        self.manifest = ZeroLog(self.pmem, 0, cfg.manifest_capacity,
+                                LogConfig(geometry=g, pad_to_line=True))
+
+    # ------------------------------------------------------------- save
+
+    def _dirty_lines_per_page(
+        self, name: str, cur: jax.Array | np.ndarray,
+    ) -> Tuple[Optional[Dict[int, set]], np.ndarray, np.ndarray]:
+        """One fused device pass (flush_scan kernel): dirty (page → line
+        set) vs the snapshot (None = everything dirty) AND per-block
+        popcounts for the page checksums."""
+        buf = self._leaf_bytes(cur)
+        snap = self._snapshots.get(name)
+        cl = self.cfg.geometry.cache_line
+        if snap is None or not self.cfg.delta:
+            counts = np.asarray(popcount_blocks(
+                jax.numpy.asarray(buf), block_bytes=cl,
+                impl=self.cfg.kernel_impl))
+            return None, buf, counts
+        flags, counts = flush_scan(
+            jax.numpy.asarray(buf), jax.numpy.asarray(snap),
+            block_bytes=cl, impl=self.cfg.kernel_impl)
+        flags, counts = np.asarray(flags), np.asarray(counts)
+        dirty_idx = np.flatnonzero(flags)
+        per_page: Dict[int, set] = {}
+        lpp = self.cfg.blocks_per_page
+        for b in dirty_idx.tolist():
+            per_page.setdefault(b // lpp, set()).add(b % lpp)
+        return per_page, buf, counts
+
+    def save(self, step: int, state: Dict[str, Any]) -> SaveReport:
+        if self.pmem is None:
+            self._build(state)
+        assert self.store is not None and self.manifest is not None
+        if set(state) != set(self._leaf_pages):
+            raise ValueError("state keys changed between saves")
+        cfg = self.cfg
+        before: PMemStats = self.pmem.stats.snapshot()
+        report = SaveReport(step=step)
+        entry: Dict[str, Any] = {"step": step, "shard": self.shard_id, "leaves": {}}
+        new_prev_dirty: Dict[int, set] = {}
+
+        for name in sorted(state):
+            per_page, buf, counts = self._dirty_lines_per_page(name, state[name])
+            report.bytes_logical += buf.size
+            pages = self._leaf_pages[name]
+            lpp = cfg.blocks_per_page
+            page_records = []
+            checks = []
+            for i, pid in enumerate(pages):
+                lo = i * cfg.page_size
+                page = np.zeros(cfg.page_size, dtype=np.uint8)
+                chunk = buf[lo : lo + cfg.page_size]
+                page[: chunk.size] = chunk
+                if per_page is None:
+                    dirty = set(range(lpp))          # first save / no delta
+                else:
+                    dirty = per_page.get(i, set())
+                report.pages_total += 1
+                # page checksum from the fused scan's per-block popcounts
+                # (zero padding beyond the leaf contributes 0 bits)
+                blk = counts[i * lpp : (i + 1) * lpp]
+                checksum = int((int(blk.sum(dtype=np.uint64)) + 1) & 0xFFFFFFFF)
+                if not dirty and per_page is not None:
+                    # untouched page: previous version still valid
+                    report.pages_clean += 1
+                    slot, pvn = self.store.table[pid]
+                    page_records.append([pid, slot, pvn])
+                    checks.append(checksum)
+                    continue
+                self._flush_page(pid, page, sorted(dirty), per_page is None, report)
+                new_prev_dirty[pid] = set(dirty)
+                slot, pvn = self.store.table[pid]
+                page_records.append([pid, slot, pvn])
+                checks.append(checksum)
+            entry["leaves"][name] = dict(
+                self._leaf_meta[name], pages=page_records, checksums=checks)
+            self._snapshots[name] = buf.copy()
+
+        self._prev_dirty.update(new_prev_dirty)
+        # commit: one Zero-log barrier makes the whole checkpoint durable
+        self.manifest.append(json.dumps(entry).encode())
+        self.pmem.fsync()
+        self._saves += 1
+        delta = self.pmem.stats.delta(before)
+        report.barriers = delta.barriers
+        report.blocks_written = delta.blocks_written
+        report.modeled_ns = COST_MODEL.time_ns(
+            delta, kind=FlushKind.NT, pattern=AccessPattern.SEQUENTIAL,
+            threads=cfg.threads)
+        return report
+
+    def _flush_page(self, pid: int, page: np.ndarray, dirty: List[int],
+                    force_cow: bool, report: SaveReport) -> None:
+        store = self.store
+        shadow = self._shadow.get(pid)
+        use_mulog = (
+            not force_cow
+            and self.cfg.delta
+            and shadow is not None
+            and pid in store.table
+            and store.policy.prefer_mulog(
+                len(set(dirty) | self._prev_dirty.get(pid, set())), self.cfg.threads)
+        )
+        if use_mulog:
+            # shadow-slot delta must cover change since v-1 = union of the
+            # last two saves' dirty sets
+            lines = sorted(set(dirty) | self._prev_dirty.get(pid, set()))
+            old_current = store.table[pid][0]
+            store.flush_mulog(pid, page, lines, target_slot=shadow)
+            self._shadow[pid] = old_current
+            report.pages_mulog += 1
+        else:
+            old = store.table.get(pid)
+            store.flush_cow(pid, page, retire_old=False)
+            if old is not None:
+                prev_shadow = self._shadow.get(pid)
+                if prev_shadow is not None:
+                    store.free.append(prev_shadow)   # v-2 slot is released
+                self._shadow[pid] = old[0]
+            report.pages_cow += 1
+
+    # ---------------------------------------------------------- restore
+
+    def restore(self, *, path: Optional[str] = None,
+                verify: bool = True) -> Tuple[int, Dict[str, np.ndarray]]:
+        """Recover the newest committed checkpoint that verifies.
+
+        Walks manifest entries newest-first; for each, checks every page's
+        slot header still carries the recorded (pid, pvn) and the page data
+        matches the recorded popcount checksum. Falls back to older
+        manifests if a newer one was partially overwritten (can only happen
+        beyond the double-buffer guarantee, but verification is cheap
+        insurance at restore time)."""
+        path = path or self.path
+        cfg, g = self.cfg, self.cfg.geometry
+        if self.pmem is None:
+            if path is None:
+                raise ValueError("nothing to restore from")
+            size = os.path.getsize(path)
+            self.pmem = PMem(size, path=path, geometry=g)
+        rec = ZeroLog.recover(self.pmem, 0, cfg.manifest_capacity,
+                              LogConfig(geometry=g, pad_to_line=True))
+        if not rec.entries:
+            raise FileNotFoundError("no committed checkpoint manifest")
+        img = self.pmem.durable_view()
+        for raw in reversed(rec.entries):
+            entry = json.loads(raw.decode())
+            state = self._try_restore_entry(entry, img, verify)
+            if state is not None:
+                self._adopt(entry, state)
+                return entry["step"], state
+        raise RuntimeError("no manifest entry verifies — checkpoint corrupt")
+
+    def _try_restore_entry(self, entry: Dict[str, Any], img: np.ndarray,
+                           verify: bool) -> Optional[Dict[str, np.ndarray]]:
+        import struct as _s
+        cfg, g = self.cfg, self.cfg.geometry
+        state: Dict[str, np.ndarray] = {}
+        # reconstruct layout geometry from the entry
+        npages = max(p[0] for leaf in entry["leaves"].values() for p in leaf["pages"]) + 1
+        layout = PageStoreLayout(
+            base=align_up(cfg.manifest_capacity, g.block),
+            page_size=cfg.page_size, npages=npages,
+            nslots=2 * npages + cfg.extra_slots, geometry=g)
+        for name, meta in entry["leaves"].items():
+            buf = np.zeros(len(meta["pages"]) * cfg.page_size, dtype=np.uint8)
+            for i, ((pid, slot, pvn), csum) in enumerate(
+                    zip(meta["pages"], meta["checksums"])):
+                hdr_pid, hdr_pvn = _s.unpack_from("<IQ", img, layout.slot_off(slot))
+                if hdr_pid != pid or hdr_pvn != pvn:
+                    return None   # slot was reused; manifest not restorable
+                off = layout.slot_data_off(slot)
+                page = img[off : off + cfg.page_size]
+                if verify and csum and int((popcount(page) + 1) & 0xFFFFFFFF) != csum:
+                    return None
+                buf[i * cfg.page_size : (i + 1) * cfg.page_size] = page
+            arr = buf[: meta["nbytes"]].view(np.dtype(meta["dtype"]))
+            state[name] = arr.reshape(meta["shape"])
+        return state
+
+    def _adopt(self, entry: Dict[str, Any], state: Dict[str, np.ndarray]) -> None:
+        """Rebuild volatile metadata so saving can continue after restore."""
+        cfg, g = self.cfg, self.cfg.geometry
+        self._leaf_pages = {}
+        self._leaf_meta = {}
+        npages = max(p[0] for leaf in entry["leaves"].values() for p in leaf["pages"]) + 1
+        layout = PageStoreLayout(
+            base=align_up(cfg.manifest_capacity, g.block),
+            page_size=cfg.page_size, npages=npages,
+            nslots=2 * npages + cfg.extra_slots, geometry=g)
+        self._layout = layout
+        self.store = PageStore.open(self.pmem, layout, n_mulogs=cfg.threads,
+                                    threads=cfg.threads)
+        referenced = set()
+        for name, meta in entry["leaves"].items():
+            self._leaf_pages[name] = [p[0] for p in meta["pages"]]
+            self._leaf_meta[name] = {k: meta[k] for k in ("shape", "dtype", "nbytes")}
+            for pid, slot, pvn in meta["pages"]:
+                referenced.add(slot)
+                # trust the committed manifest over µlog-advanced versions
+                self.store.table[pid] = (slot, pvn)
+            self._snapshots[name] = self._leaf_bytes(state[name]).copy()
+        self.store.free = [s for s in range(layout.nslots) if s not in referenced]
+        self._shadow = {}
+        self._prev_dirty = {}
+        self.manifest, _ = ZeroLog.open_for_append(
+            self.pmem, 0, cfg.manifest_capacity, LogConfig(geometry=g, pad_to_line=True))

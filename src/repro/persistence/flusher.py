@@ -1,0 +1,79 @@
+"""Asynchronous checkpoint flushing, overlapped with training.
+
+Guideline G5 ("performance-critical code should prefer DRAM … buffer writes
+in a DRAM cache") becomes: the training loop *stages* device state to host
+memory (a cheap device→host copy) and returns to compute immediately; a
+bounded background pool (guideline G4: over-saturating the durable tier
+degrades throughput, so writer concurrency is capped) runs the actual
+CoW/µLog flushing off the critical path.
+
+Ordering contract: saves for a given manager are serialized in submission
+order (a single worker per shard region); ``wait()`` drains everything —
+the train loop calls it before intentionally stopping, and the WAL makes
+any un-flushed tail recoverable anyway.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.persistence.checkpoint import CheckpointManager, SaveReport
+
+__all__ = ["AsyncFlusher"]
+
+
+class AsyncFlusher:
+    """Background flusher for one :class:`CheckpointManager`."""
+
+    def __init__(self, manager: CheckpointManager, *, max_pending: int = 2) -> None:
+        self.manager = manager
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self.reports: List[SaveReport] = []
+        self.errors: List[BaseException] = []
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, state = item
+            try:
+                self.reports.append(self.manager.save(step, state))
+            except BaseException as e:  # surfaced on wait()
+                self.errors.append(e)
+            finally:
+                self._q.task_done()
+
+    @staticmethod
+    def stage(state: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Device→host staging copy (the only synchronous cost). Must be a
+        real copy: the training loop mutates the live buffers immediately
+        after submit()."""
+        return {k: np.array(v, copy=True) for k, v in state.items()}
+
+    def submit(self, step: int, state: Dict[str, Any]) -> None:
+        """Stage and enqueue; blocks only if ``max_pending`` saves are
+        already in flight (back-pressure instead of unbounded host RAM)."""
+        self._q.put((step, self.stage(state)))
+
+    def wait(self) -> List[SaveReport]:
+        self._q.join()
+        if self.errors:
+            raise self.errors[0]
+        return self.reports
+
+    def close(self) -> List[SaveReport]:
+        self._q.put(None)
+        self._q.join()
+        self._worker.join(timeout=60)
+        if self.errors:
+            raise self.errors[0]
+        return self.reports

@@ -1,0 +1,89 @@
+"""Crash recovery and *elastic* re-sharding.
+
+Each shard's manifest records, per leaf, the global array shape and the
+slice this shard owns. Restoring onto a different mesh (more/fewer hosts —
+elastic scaling after node loss) assembles the global arrays from whatever
+shard regions survive and re-slices them for the new topology. Assembly is
+pure numpy on hosts; the new device placement happens in the distributed
+layer (``jax.device_put`` with the new sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["shard_slices", "slice_state", "assemble_global", "reshard_state"]
+
+Slice = Tuple[int, int]
+
+
+def shard_slices(global_shape: Sequence[int], nshards: int, axis: int = 0
+                 ) -> List[Tuple[Slice, ...]]:
+    """Even partition of ``global_shape`` along ``axis`` into nshards."""
+    dim = global_shape[axis]
+    if dim % nshards != 0:
+        raise ValueError(f"axis {axis} of {global_shape} not divisible by {nshards}")
+    step = dim // nshards
+    out = []
+    for s in range(nshards):
+        sl = []
+        for d, size in enumerate(global_shape):
+            sl.append((s * step, (s + 1) * step) if d == axis else (0, size))
+        out.append(tuple(sl))
+    return out
+
+
+def slice_state(global_state: Dict[str, np.ndarray], nshards: int,
+                axis_rules: Optional[Dict[str, int]] = None
+                ) -> List[Tuple[Dict[str, np.ndarray], Dict[str, Any]]]:
+    """Split a global state dict into per-shard (state, specs) pairs.
+
+    ``specs[name] = {"global_shape": [...], "slices": [[lo, hi], ...]}`` —
+    exactly what gets stored in each shard's manifest (as leaf metadata
+    piggybacked by the caller) and what :func:`assemble_global` inverts.
+    """
+    shards: List[Tuple[Dict[str, np.ndarray], Dict[str, Any]]] = [
+        ({}, {}) for _ in range(nshards)
+    ]
+    for name, arr in global_state.items():
+        axis = (axis_rules or {}).get(name, 0)
+        if arr.ndim == 0 or arr.shape[axis] % nshards != 0:
+            # unshardable leaf: replicate (shard 0 is authoritative)
+            for state, specs in shards:
+                state[name] = arr
+                specs[name] = {"global_shape": list(arr.shape), "slices": None}
+            continue
+        for s, sl in enumerate(shard_slices(arr.shape, nshards, axis)):
+            view = arr[tuple(slice(lo, hi) for lo, hi in sl)]
+            shards[s][0][name] = np.ascontiguousarray(view)
+            shards[s][1][name] = {
+                "global_shape": list(arr.shape),
+                "slices": [list(x) for x in sl],
+            }
+    return shards
+
+
+def assemble_global(shard_states: Sequence[Dict[str, np.ndarray]],
+                    shard_specs: Sequence[Dict[str, Any]]
+                    ) -> Dict[str, np.ndarray]:
+    """Inverse of :func:`slice_state`: merge shard states into global arrays."""
+    out: Dict[str, np.ndarray] = {}
+    for state, specs in zip(shard_states, shard_specs):
+        for name, arr in state.items():
+            spec = specs[name]
+            if spec["slices"] is None:
+                out.setdefault(name, arr)
+                continue
+            if name not in out:
+                out[name] = np.zeros(spec["global_shape"], dtype=arr.dtype)
+            idx = tuple(slice(lo, hi) for lo, hi in spec["slices"])
+            out[name][idx] = arr
+    return out
+
+
+def reshard_state(global_state: Dict[str, np.ndarray], new_nshards: int,
+                  axis_rules: Optional[Dict[str, int]] = None):
+    """Elastic transition: global state → shard list for a new world size."""
+    return slice_state(global_state, new_nshards, axis_rules)

@@ -1,0 +1,110 @@
+"""Unit tests for the PMem functional model (cache/WC semantics, crash)."""
+
+import numpy as np
+import pytest
+
+from repro.core import FlushKind, PMem
+
+
+def test_store_visible_but_not_durable():
+    pm = PMem(4096)
+    pm.store(0, b"hello")
+    assert bytes(pm.load(0, 5)) == b"hello"
+    assert bytes(pm.durable_view()[:5]) == b"\x00" * 5
+
+
+def test_persist_makes_durable():
+    pm = PMem(4096)
+    pm.store(128, b"abc")
+    pm.persist(128, 3)
+    assert bytes(pm.durable_view()[128:131]) == b"abc"
+
+
+def test_streaming_store_durable_only_after_sfence():
+    pm = PMem(4096)
+    pm.store(0, b"xyz", streaming=True)
+    assert bytes(pm.durable_view()[:3]) == b"\x00" * 3
+    pm.sfence()
+    assert bytes(pm.durable_view()[:3]) == b"xyz"
+
+
+def test_flush_stages_data_at_flush_time():
+    """A store after flush but before sfence is NOT covered (§3.1)."""
+    pm = PMem(4096)
+    pm.store(0, b"A")
+    pm.flush(0, 1)
+    pm.store(0, b"B")        # dirty again, not staged
+    pm.sfence()
+    assert bytes(pm.durable_view()[:1]) == b"A"
+    assert bytes(pm.load(0, 1)) == b"B"  # program order still sees B
+
+
+def test_crash_drops_unflushed_lines():
+    pm = PMem(4096)
+    pm.store(0, b"keep")
+    pm.persist(0, 4)
+    pm.store(64, b"lost")
+    img = pm.crash(evict=lambda li: False)
+    assert bytes(img.durable[:4]) == b"keep"
+    assert bytes(img.durable[64:68]) == b"\x00" * 4
+    assert 1 in img.dropped_lines
+
+
+def test_crash_may_evict_unflushed_lines():
+    """Spontaneous eviction is legal: an unflushed store MAY survive."""
+    pm = PMem(4096)
+    pm.store(64, b"evicted")
+    img = pm.crash(evict=lambda li: True)
+    assert bytes(img.durable[64:71]) == b"evicted"
+
+
+def test_barrier_counting():
+    pm = PMem(4096)
+    pm.sfence()                       # nothing pending: not a barrier
+    assert pm.stats.barriers == 0
+    pm.store(0, b"x")
+    pm.persist(0, 1)
+    assert pm.stats.barriers == 1
+    pm.store(0, b"y", streaming=True)
+    pm.sfence()
+    assert pm.stats.barriers == 2
+
+
+def test_write_combining_block_accounting():
+    pm = PMem(4096)
+    # 4 lines of one 256B block committed together -> 1 block write
+    pm.store(0, bytes(256), streaming=True)
+    pm.sfence()
+    assert pm.stats.blocks_written == 1
+    assert pm.stats.partial_block_writes == 0
+    # a single line commits as a partial block write
+    pm.store(1024, bytes(64), streaming=True)
+    pm.sfence()
+    assert pm.stats.blocks_written == 2
+    assert pm.stats.partial_block_writes == 1
+
+
+def test_same_line_flush_detection():
+    pm = PMem(4096)
+    for _ in range(4):
+        pm.store(0, b"z")
+        pm.persist(0, 1)
+    assert pm.stats.same_line_flushes == 3
+
+
+def test_file_backed_region(tmp_path):
+    p = str(tmp_path / "region.pmem")
+    pm = PMem(4096, path=p)
+    pm.store(10, b"disk", streaming=True)
+    pm.sfence()
+    pm.fsync()
+    pm2 = PMem(4096, path=p)
+    assert bytes(pm2.load(10, 4)) == b"disk"
+
+
+def test_bounds_checking():
+    pm = PMem(128)
+    with pytest.raises(ValueError):
+        pm.store(120, b"123456789")
+    with pytest.raises(ValueError):
+        pm.load(-1, 4)

@@ -1,0 +1,214 @@
+"""Kernel validation: Pallas (interpret mode) vs pure-jnp oracles, with
+hypothesis-driven shape/dtype sweeps, plus semantic properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.common import LANES, TILE_BLOCKS, as_blocks, block_rows, from_blocks
+from repro.kernels.delta_pack.kernel import delta_apply_blocked, delta_pack_blocked
+from repro.kernels.delta_pack.ref import delta_apply_blocked_ref, delta_pack_blocked_ref
+from repro.kernels.delta_pack.ops import apply_delta, pack_delta
+from repro.kernels.dirty_diff.kernel import dirty_diff_blocked
+from repro.kernels.dirty_diff.ref import dirty_diff_blocked_ref
+from repro.kernels.dirty_diff.ops import dirty_blocks
+from repro.kernels.popcnt_checksum.kernel import popcnt_blocked
+from repro.kernels.popcnt_checksum.ref import popcnt_blocked_ref
+from repro.kernels.popcnt_checksum.ops import popcount_blocks, popcount_checksum
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8, jnp.uint32]
+
+
+def rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    if dtype == jnp.uint32:
+        return jnp.asarray((x * 1e6).view(np.uint32).reshape(shape))
+    if dtype == jnp.int8:
+        return jnp.asarray((x * 10).astype(np.int8))
+    return jnp.asarray(x).astype(dtype)
+
+
+# ------------------------------------------------------------- common layout
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 5000), dt=st.sampled_from(["float32", "bfloat16", "int8"]))
+def test_as_blocks_roundtrip(n, dt):
+    dtype = jnp.dtype(dt)
+    x = jnp.arange(n).astype(dtype)
+    blocked, orig = as_blocks(x)
+    assert blocked.shape[2] == LANES
+    assert blocked.shape[1] == block_rows(dtype)
+    back = from_blocks(blocked, orig)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# --------------------------------------------------------------- dirty_diff
+
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    ntiles=st.integers(1, 4),
+    rows=st.sampled_from([8, 16]),
+    seed=st.integers(0, 999),
+    ndirty=st.integers(0, 8),
+)
+def test_dirty_diff_kernel_matches_ref(ntiles, rows, seed, ndirty):
+    rng = np.random.default_rng(seed)
+    nblocks = ntiles * TILE_BLOCKS
+    snap = rand(rng, (nblocks, rows, LANES), jnp.float32)
+    cur = np.asarray(snap).copy()
+    dirty_idx = rng.choice(nblocks, size=min(ndirty, nblocks), replace=False)
+    for b in dirty_idx:
+        cur[b, rng.integers(rows), rng.integers(LANES)] += 1.0
+    cur = jnp.asarray(cur)
+    out_k = dirty_diff_blocked(cur, snap, interpret=True)
+    out_r = dirty_diff_blocked_ref(cur, snap)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    assert set(np.flatnonzero(np.asarray(out_k))) == set(dirty_idx.tolist())
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dirty_blocks_op_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = rand(rng, (3000,), dtype)
+    y = np.asarray(x).copy()
+    y[1234] = np.asarray(rand(rng, (1,), dtype))[0]
+    flags_ref = dirty_blocks(x, jnp.asarray(y), impl="ref")
+    flags_pal = dirty_blocks(x, jnp.asarray(y), impl="pallas")
+    np.testing.assert_array_equal(np.asarray(flags_ref), np.asarray(flags_pal))
+
+
+def test_dirty_blocks_identical_is_clean():
+    x = jnp.arange(10_000, dtype=jnp.float32)
+    assert int(dirty_blocks(x, x, impl="pallas").sum()) == 0
+
+
+# ----------------------------------------------------------- popcnt_checksum
+
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ntiles=st.integers(1, 4), seed=st.integers(0, 999))
+def test_popcnt_kernel_matches_ref_and_numpy(ntiles, seed):
+    rng = np.random.default_rng(seed)
+    nblocks = ntiles * TILE_BLOCKS
+    x_np = rng.integers(0, 2**32, size=(nblocks, 8, LANES), dtype=np.uint32)
+    x = jnp.asarray(x_np)
+    out_k = popcnt_blocked(x, interpret=True)
+    out_r = popcnt_blocked_ref(x)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    # ground truth against numpy bit counting
+    expect = np.array(
+        [np.unpackbits(x_np[b].view(np.uint8)).sum() for b in range(nblocks)],
+        dtype=np.uint32,
+    )
+    np.testing.assert_array_equal(np.asarray(out_k), expect)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_popcount_checksum_properties(dtype):
+    rng = np.random.default_rng(1)
+    x = rand(rng, (2048,), dtype)
+    c_ref = int(popcount_checksum(x, impl="ref"))
+    c_pal = int(popcount_checksum(x, impl="pallas"))
+    assert c_ref == c_pal
+    assert c_ref != 0, "checksum of written data must be nonzero (cnt==0 = never written)"
+    # zero buffer => checksum exactly 1 (popcount 0 + 1)
+    assert int(popcount_checksum(jnp.zeros(512, dtype), impl="pallas")) == 1
+    # dropping a block changes the checksum (Zero-log validity argument)
+    y = np.asarray(as_blocks(x)[0]).copy()
+    if np.unpackbits(y[0].view(np.uint8) if y.dtype == np.uint8 else y[0].view(np.uint8)).sum() > 0:
+        y[0] = 0
+        c_dropped = int(popcount_checksum(jnp.asarray(y).reshape(-1), impl="ref"))
+        assert c_dropped != c_ref
+
+
+# ---------------------------------------------------------------- delta pack
+
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    nblocks=st.integers(2, 24),
+    rows=st.sampled_from([8, 16]),
+    seed=st.integers(0, 999),
+)
+def test_pack_apply_kernels_match_refs(nblocks, rows, seed):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(1, nblocks + 1)
+    idx = jnp.asarray(rng.choice(nblocks, size=k, replace=False).astype(np.int32))
+    src = rand(rng, (nblocks, rows, LANES), jnp.float32)
+    packed_k = delta_pack_blocked(src, idx, interpret=True)
+    packed_r = delta_pack_blocked_ref(src, idx)
+    np.testing.assert_array_equal(np.asarray(packed_k), np.asarray(packed_r))
+
+    base = rand(rng, (nblocks, rows, LANES), jnp.float32)
+    out_k = delta_apply_blocked(base, packed_k, idx, interpret=True)
+    out_r = delta_apply_blocked_ref(base, packed_r, idx)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_delta_roundtrip_restores_buffer(dtype):
+    """pack(cur) applied onto snap reproduces cur exactly — the µLog replay
+    invariant the checkpoint layer relies on."""
+    rng = np.random.default_rng(2)
+    snap = rand(rng, (9000,), dtype)
+    cur = np.asarray(snap).copy()
+    dirty_positions = [0, 4097, 8000]
+    for p in dirty_positions:
+        cur[p] = np.asarray(rand(rng, (1,), dtype))[0]
+    cur = jnp.asarray(cur)
+    for impl in ("ref", "pallas"):
+        flags = dirty_blocks(cur, snap, impl=impl)
+        idx = jnp.asarray(np.flatnonzero(np.asarray(flags)).astype(np.int32))
+        delta = pack_delta(cur, idx, impl=impl)
+        restored = apply_delta(snap, delta, idx, impl=impl)
+        np.testing.assert_array_equal(np.asarray(restored), np.asarray(cur))
+
+
+def test_apply_delta_preserves_clean_blocks():
+    rng = np.random.default_rng(3)
+    base = rand(rng, (64, 8, LANES), jnp.float32)
+    upd = rand(rng, (2, 8, LANES), jnp.float32)
+    idx = jnp.asarray([5, 60], dtype=jnp.int32)
+    out = delta_apply_blocked(base, upd, idx, interpret=True)
+    out_np, base_np = np.asarray(out), np.asarray(base)
+    clean = [b for b in range(64) if b not in (5, 60)]
+    np.testing.assert_array_equal(out_np[clean], base_np[clean])
+    np.testing.assert_array_equal(out_np[[5, 60]], np.asarray(upd))
+
+
+# ----------------------------------------------------------- flush_scan
+
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ntiles=st.integers(1, 3), rows=st.sampled_from([8, 16]),
+       seed=st.integers(0, 999), ndirty=st.integers(0, 6))
+def test_flush_scan_kernel_matches_ref(ntiles, rows, seed, ndirty):
+    from repro.kernels.flush_scan.kernel import flush_scan_blocked
+    from repro.kernels.flush_scan.ref import flush_scan_blocked_ref
+    rng = np.random.default_rng(seed)
+    nblocks = ntiles * TILE_BLOCKS
+    snap = rand(rng, (nblocks, rows, LANES), jnp.float32)
+    cur = np.asarray(snap).copy()
+    for b in rng.choice(nblocks, size=min(ndirty, nblocks), replace=False):
+        cur[b, rng.integers(rows), rng.integers(LANES)] += 1.0
+    cur = jnp.asarray(cur)
+    d_k, c_k = flush_scan_blocked(cur, snap, interpret=True)
+    d_r, c_r = flush_scan_blocked_ref(cur, snap)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_flush_scan_consistent_with_separate_kernels(dtype):
+    """Fused scan == dirty_diff + popcount_blocks composed (any dtype)."""
+    from repro.kernels.flush_scan import flush_scan
+    rng = np.random.default_rng(5)
+    snap = rand(rng, (5000,), dtype)
+    cur = np.asarray(snap).copy()
+    cur[123] = np.asarray(rand(rng, (1,), dtype))[0]
+    cur = jnp.asarray(cur)
+    d, c = flush_scan(cur, snap, impl="pallas")
+    d2 = dirty_blocks(cur, snap, impl="ref")
+    c2 = popcount_blocks(cur, impl="ref")
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c2))

@@ -1,0 +1,246 @@
+"""Persistence-layer tests: checkpoint save/restore/delta, WAL, async
+flusher overlap, elastic re-sharding, crash consistency of the manifest."""
+
+import numpy as np
+import pytest
+
+from repro.core import PMem
+from repro.persistence import (
+    AsyncFlusher,
+    CheckpointConfig,
+    CheckpointManager,
+    StepRecord,
+    TrainWAL,
+    assemble_global,
+    reshard_state,
+)
+from repro.persistence.restore import slice_state
+
+# 128 KiB pages (32 × 4 KiB dirty-tracking lines, 8 × 16 KiB write blocks):
+# large enough that the hybrid policy has a real µLog-vs-CoW tradeoff.
+CFG = CheckpointConfig(page_size=128 * 1024, manifest_capacity=1 << 16)
+
+
+def make_state(seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w_embed": (rng.standard_normal((512, 64)) * scale).astype(np.float32),
+        "w_out": (rng.standard_normal((64, 512)) * scale).astype(np.float32),
+        "step_count": np.array([7], dtype=np.int64),
+    }
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_save_restore_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    state = make_state(0)
+    m.save(100, state)
+    m2 = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    step, got = m2.restore()
+    assert step == 100
+    for k in state:
+        np.testing.assert_array_equal(got[k], state[k])
+
+
+def test_multiple_saves_restore_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    for i, seed in enumerate([1, 2, 3]):
+        m.save(i, make_state(seed))
+    step, got = CheckpointManager(str(tmp_path / "s0.pmem"), CFG).restore()
+    assert step == 2
+    np.testing.assert_array_equal(got["w_embed"], make_state(3)["w_embed"])
+
+
+def test_delta_save_uses_mulog_for_sparse_change(tmp_path):
+    """Shadow-slot deltas: a µLog delta must cover the change since v-1
+    (union of the last two saves' dirty sets), so the FIRST sparse save
+    after a full rewrite still takes CoW; the SECOND sparse save in a row
+    takes the µLog path."""
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    r0 = m.save(0, make_state(0))
+    assert r0.pages_cow == r0.pages_total  # first save: all CoW
+    m.save(1, make_state(1))               # full rewrite: CoW, shadows set
+    state2 = {k: v.copy() for k, v in make_state(1).items()}
+    state2["w_embed"][0, 0] += 1.0
+    r2 = m.save(2, state2)                 # sparse, but union w/ full dirt
+    assert r2.pages_clean >= r2.pages_total - 2
+    assert r2.pages_cow >= 1
+    state3 = {k: v.copy() for k, v in state2.items()}
+    state3["w_embed"][0, 1] += 1.0
+    r3 = m.save(3, state3)                 # sparse twice in a row → µLog
+    assert r3.pages_mulog >= 1, "sparse change should take the µLog path"
+    assert r3.blocks_written < r2.blocks_written or r3.pages_mulog >= 1
+    # restore gives exactly state3
+    step, got = CheckpointManager(str(tmp_path / "s0.pmem"), CFG).restore()
+    assert step == 3
+    for k in state3:
+        np.testing.assert_array_equal(got[k], state3[k])
+
+
+def test_clean_pages_are_skipped(tmp_path):
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    state = make_state(0)
+    m.save(0, state)
+    r = m.save(1, state)          # identical state
+    assert r.pages_clean == r.pages_total
+    assert r.pages_cow == 0 and r.pages_mulog == 0
+    step, got = CheckpointManager(str(tmp_path / "s0.pmem"), CFG).restore()
+    assert step == 1
+    np.testing.assert_array_equal(got["w_embed"], state["w_embed"])
+
+
+def test_restore_then_continue_saving(tmp_path):
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    m.save(0, make_state(0))
+    m.save(1, make_state(1))
+    m2 = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    step, got = m2.restore()
+    assert step == 1
+    m2.save(2, make_state(2))
+    step3, got3 = CheckpointManager(str(tmp_path / "s0.pmem"), CFG).restore()
+    assert step3 == 2
+    np.testing.assert_array_equal(got3["w_out"], make_state(2)["w_out"])
+
+
+def test_manifest_commit_is_single_barrier(tmp_path):
+    """The checkpoint commit point (manifest append) = ONE barrier (Zero)."""
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    state = make_state(0)
+    m.save(0, state)
+    before = m.pmem.stats.barriers
+    m.manifest.append(b'{"probe": true}')
+    assert m.pmem.stats.barriers - before == 1
+
+
+def test_crash_before_manifest_commit_restores_previous(tmp_path):
+    """Pages of save N+1 flushed, but manifest not committed → restore N.
+    This is the shadow-slot guarantee: save N's pages are never touched
+    while manifest N is the last committed one."""
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    s0, s1 = make_state(10), make_state(11)
+    m.save(0, s0)
+    # replicate save(1) page flushing WITHOUT the manifest append
+    for name in sorted(s1):
+        per_page, buf, _counts = m._dirty_lines_per_page(name, s1[name])
+        pages = m._leaf_pages[name]
+        from repro.persistence.checkpoint import SaveReport
+        rep = SaveReport(step=1)
+        for i, pid in enumerate(pages):
+            lo = i * CFG.page_size
+            page = np.zeros(CFG.page_size, dtype=np.uint8)
+            chunk = buf[lo : lo + CFG.page_size]
+            page[: chunk.size] = chunk
+            dirty = set(range(CFG.blocks_per_page)) if per_page is None else per_page.get(i, set())
+            if dirty or per_page is None:
+                m._flush_page(pid, page, sorted(dirty), per_page is None, rep)
+    m.pmem.fsync()
+    # crash: drop every in-flight line (nothing was mid-flush anyway)
+    m.pmem.crash(evict=lambda li: False)
+    step, got = CheckpointManager(str(tmp_path / "s0.pmem"), CFG).restore()
+    assert step == 0
+    for k in s0:
+        np.testing.assert_array_equal(got[k], s0[k])
+
+
+# -------------------------------------------------------------------- WAL
+
+def test_wal_zero_single_barrier_per_step():
+    pm = PMem(TrainWAL.capacity_for(100))
+    pm.memset_zero()
+    wal = TrainWAL(pm, 0, pm.size, technique="zero")
+    for s in range(20):
+        wal.commit_step(StepRecord(s, s * 256, (1, 2), 1.5, 0.1, 1.0))
+    assert pm.stats.barriers == 20
+    assert wal.barriers_per_step() == 1
+
+
+@pytest.mark.parametrize("technique,barriers", [("classic", 2), ("header", 2)])
+def test_wal_baselines_cost_more(technique, barriers):
+    pm = PMem(TrainWAL.capacity_for(100))
+    pm.memset_zero()
+    wal = TrainWAL(pm, 0, pm.size, technique=technique)
+    for s in range(10):
+        wal.commit_step(StepRecord(s, s, (0, 0), 0.0, 0.0, 1.0))
+    assert pm.stats.barriers == 10 * barriers
+
+
+def test_wal_recovery_resume_point():
+    pm = PMem(TrainWAL.capacity_for(100))
+    pm.memset_zero()
+    wal = TrainWAL(pm, 0, pm.size)
+    for s in range(7):
+        wal.commit_step(StepRecord(s, s * 1024, (s, s + 1), float(s), 0.5, 2.0))
+    pm.crash(evict=lambda li: False)
+    wal2 = TrainWAL(pm, 0, pm.size, recover=True)
+    assert wal2.last.step == 6
+    assert wal2.last.data_cursor == 6 * 1024
+    assert wal2.last.rng_key == (6, 7)
+    # appends continue after recovery
+    wal2.commit_step(StepRecord(7, 7 * 1024, (7, 8), 7.0, 0.5, 2.0))
+    wal3 = TrainWAL(pm, 0, pm.size, recover=True)
+    assert [r.step for r in wal3.records] == list(range(8))
+
+
+# ---------------------------------------------------------------- flusher
+
+def test_async_flusher_overlap_and_order(tmp_path):
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    fl = AsyncFlusher(m, max_pending=2)
+    states = [make_state(s) for s in range(4)]
+    for i, st in enumerate(states):
+        fl.submit(i, st)
+    reports = fl.close()
+    assert [r.step for r in reports] == [0, 1, 2, 3]
+    step, got = CheckpointManager(str(tmp_path / "s0.pmem"), CFG).restore()
+    assert step == 3
+    np.testing.assert_array_equal(got["w_embed"], states[3]["w_embed"])
+
+
+def test_async_flusher_staging_isolates_mutation(tmp_path):
+    """Training may mutate the live state right after submit(); the staged
+    copy must be what lands on disk."""
+    m = CheckpointManager(str(tmp_path / "s0.pmem"), CFG)
+    fl = AsyncFlusher(m)
+    state = make_state(1)
+    snapshot = {k: v.copy() for k, v in state.items()}
+    fl.submit(0, state)
+    state["w_embed"][:] = -1.0    # mutate immediately
+    fl.close()
+    _, got = CheckpointManager(str(tmp_path / "s0.pmem"), CFG).restore()
+    np.testing.assert_array_equal(got["w_embed"], snapshot["w_embed"])
+
+
+# ----------------------------------------------------------------- elastic
+
+def test_slice_assemble_roundtrip():
+    g = make_state(5)
+    shards = slice_state(g, 4)
+    states = [s for s, _ in shards]
+    specs = [sp for _, sp in shards]
+    back = assemble_global(states, specs)
+    for k in g:
+        np.testing.assert_array_equal(back[k], g[k])
+
+
+def test_elastic_reshard_4_to_2(tmp_path):
+    """4 shard regions on disk → restore → re-shard to 2 (elastic shrink)."""
+    g = make_state(9)
+    shards = slice_state(g, 4)
+    for i, (st, spec) in enumerate(shards):
+        mgr = CheckpointManager(str(tmp_path / f"s{i}.pmem"), CFG, shard_id=i)
+        mgr.save(50, st)
+    # recover all shards, assemble, re-shard
+    states, specs = [], []
+    for i, (_, spec) in enumerate(shards):
+        mgr = CheckpointManager(str(tmp_path / f"s{i}.pmem"), CFG, shard_id=i)
+        step, st = mgr.restore()
+        assert step == 50
+        states.append(st)
+        specs.append(spec)
+    global_state = assemble_global(states, specs)
+    new_shards = reshard_state(global_state, 2)
+    assert len(new_shards) == 2
+    merged = assemble_global([s for s, _ in new_shards], [sp for _, sp in new_shards])
+    for k in g:
+        np.testing.assert_array_equal(merged[k], g[k])
