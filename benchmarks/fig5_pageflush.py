@@ -18,21 +18,20 @@ from repro.core import (
     AccessPattern,
     FlushKind,
     HybridPolicy,
-    PMem,
-    PageStore,
     PageStoreLayout,
 )
+from repro.pool import Pool
 
 from benchmarks.common import check, emit
 
 PAGE = 16384  # 256 cache lines, as in the paper
 
 
-def fresh_store():
-    layout = PageStoreLayout(base=0, page_size=PAGE, npages=2, nslots=4)
-    pm = PMem(layout.total_bytes + 64 * 4096)
-    pm.memset_zero()
-    return pm, PageStore(pm, layout)
+def fresh_store(npages=2, nslots=4):
+    pool = Pool.create(None, Pool.overhead_bytes()
+                       + nslots * (PAGE + 4096) + 64 * 4096)
+    pages = pool.pages("fig5", npages=npages, page_size=PAGE, nslots=nslots)
+    return pool.pmem, pages
 
 
 def measured_cost_ns(technique: str, dirty: int, threads: int) -> float:
@@ -60,8 +59,9 @@ def measured_cost_ns(technique: str, dirty: int, threads: int) -> float:
 
 
 def run() -> bool:
-    layout = PageStoreLayout(base=0, page_size=PAGE, npages=2, nslots=4)
-    pol = HybridPolicy(layout)
+    # closed-form policy costs need only the layout shape, no pool
+    pol = HybridPolicy(PageStoreLayout(base=0, page_size=PAGE, npages=2,
+                                       nslots=4))
     ok = True
 
     # --- (a)/(c): pages/s vs dirty lines at 1 and 7 threads -------------
@@ -104,10 +104,7 @@ def run() -> bool:
     def cold_cost(invalidate: bool) -> float:
         # round-robin over many pages: old headers are cold, as in the
         # paper's background-flusher setting
-        layout = PageStoreLayout(base=0, page_size=PAGE, npages=8, nslots=16)
-        pm = PMem(layout.total_bytes + 64 * 4096)
-        pm.memset_zero()
-        store = PageStore(pm, layout)
+        pm, store = fresh_store(npages=8, nslots=16)
         page = np.arange(PAGE, dtype=np.uint8)
         for pid in range(8):
             store.flush_cow(pid, page)

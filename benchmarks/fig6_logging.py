@@ -9,14 +9,8 @@ worst (same-line size-field rewrites); dancing restores Header to Classic.
 
 from __future__ import annotations
 
-from repro.core import (
-    COST_MODEL,
-    AccessPattern,
-    FlushKind,
-    LOG_TECHNIQUES,
-    LogConfig,
-    PMem,
-)
+from repro.core import COST_MODEL, AccessPattern, FlushKind, LogConfig
+from repro.pool import Pool
 
 from benchmarks.common import check, emit
 
@@ -27,16 +21,14 @@ CAP = 1 << 22
 def throughput(technique: str, entry_size: int, *, padded: bool,
                dancing: int = 1) -> float:
     """Modeled appends/second for one configuration."""
-    pm = PMem(CAP)
-    pm.memset_zero()
-    cfg = LogConfig(pad_to_line=padded, dancing=dancing)
-    log = LOG_TECHNIQUES[technique](pm, 0, CAP, cfg)
+    pool = Pool.create(None, CAP + Pool.overhead_bytes())
+    log = pool.log("fig6", capacity=CAP, technique=technique,
+                   cfg=LogConfig(pad_to_line=padded, dancing=dancing))
     payload = bytes(entry_size)
-    before = pm.stats.snapshot()
+    log.reset_stats()          # measure appends only, not pool setup
     for _ in range(N_ENTRIES):
         log.append(payload)
-    delta = pm.stats.delta(before)
-    ns = COST_MODEL.time_ns(delta, kind=FlushKind.NT,
+    ns = COST_MODEL.time_ns(log.stats(), kind=FlushKind.NT,
                             pattern=AccessPattern.SEQUENTIAL, threads=1)
     return N_ENTRIES / (ns * 1e-9)
 

@@ -11,11 +11,18 @@ artifacts/dryrun/*.json exist (produced by ``python -m repro.launch.dryrun
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast sanity subset (the pool-backed sim benches: "
+                         "Fig.5/Fig.6/YCSB) — used by CI")
+    args = ap.parse_args()
+
     from benchmarks import (
         fig1_bandwidth,
         fig2_threads,
@@ -26,28 +33,32 @@ def main() -> None:
         tab_ycsb,
     )
 
+    suites = [
+        (fig1_bandwidth, "Fig.1 bandwidth vs access granularity", False),
+        (fig2_threads, "Fig.2 bandwidth vs thread count", False),
+        (fig3_read_latency, "Fig.3 read latency", False),
+        (fig4_persist_latency, "Fig.4 persistent-write latency", False),
+        (fig5_pageflush, "Fig.5 failure-atomic page flush", True),
+        (fig6_logging, "Fig.6 transaction log throughput", True),
+        (tab_ycsb, "§3.3.2 YCSB validation", True),
+    ]
     ok = True
-    for mod, title in (
-        (fig1_bandwidth, "Fig.1 bandwidth vs access granularity"),
-        (fig2_threads, "Fig.2 bandwidth vs thread count"),
-        (fig3_read_latency, "Fig.3 read latency"),
-        (fig4_persist_latency, "Fig.4 persistent-write latency"),
-        (fig5_pageflush, "Fig.5 failure-atomic page flush"),
-        (fig6_logging, "Fig.6 transaction log throughput"),
-        (tab_ycsb, "§3.3.2 YCSB validation"),
-    ):
+    for mod, title, in_smoke in suites:
+        if args.smoke and not in_smoke:
+            continue
         print(f"\n### {title}")
         ok &= mod.run()
 
-    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
-    if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):
-        print("\n### Roofline (from dry-run artifacts)")
-        from benchmarks import roofline
-        roofline.run(art)
+    if not args.smoke:
+        art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+        if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):
+            print("\n### Roofline (from dry-run artifacts)")
+            from benchmarks import roofline
+            roofline.run(art)
 
-    print("\n### kernel sanity (interpret mode vs oracle)")
-    from benchmarks import kernels_bench
-    ok &= kernels_bench.run()
+        print("\n### kernel sanity (interpret mode vs oracle)")
+        from benchmarks import kernels_bench
+        ok &= kernels_bench.run()
 
     print(f"\n=== {'ALL CHECKS PASS' if ok else 'SOME CHECKS FAILED'} ===")
     if not ok:

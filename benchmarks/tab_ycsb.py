@@ -21,9 +21,9 @@ from repro.core import (
     FlushKind,
     KVConfig,
     LogConfig,
-    PMem,
     PersistentKV,
 )
+from repro.pool import Pool
 
 from benchmarks.common import check, emit
 
@@ -38,15 +38,14 @@ def run_one(technique: str) -> float:
                    log_capacity=1 << 21, technique=technique,
                    log=LogConfig(pad_to_line=True,
                                  dancing=64 if technique == "header" else 1))
-    pm = PMem(PersistentKV.region_bytes(cfg))
-    pm.memset_zero()
-    kv = PersistentKV(pm, cfg)
+    pool = Pool.create(None, PersistentKV.region_bytes(cfg))
+    kv = pool.kv("ycsb", cfg)
     rng = np.random.default_rng(0)
     keys = rng.integers(0, cfg.nkeys, N_TXN)
-    before = pm.stats.snapshot()
+    before = pool.stats.snapshot()
     for i in range(N_TXN):
         kv.put(int(keys[i]), bytes([i % 256]) * 64)
-    delta = pm.stats.delta(before)
+    delta = pool.stats.delta(before)
     log_ns = COST_MODEL.time_ns(delta, kind=FlushKind.NT,
                                 pattern=AccessPattern.SEQUENTIAL, threads=1)
     total_ns = log_ns + N_TXN * TXN_WORK_NS

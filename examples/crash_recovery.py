@@ -1,6 +1,10 @@
 """Crash recovery demo: kill training mid-run, restart, verify
 exactly-once step semantics (checkpoint + WAL fast-forward).
 
+The Trainer keeps all persistent state in ``repro.pool`` pools (a WAL pool
+and a checkpoint pool per run directory); restart re-opens the same named
+regions and recovers them.
+
   PYTHONPATH=src python examples/crash_recovery.py
 """
 

@@ -14,13 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.pmem import PMem
 from repro.data import SyntheticPipeline
 from repro.launch.steps import build_train_step
 from repro.models import decode_step, init_caches, init_params
 from repro.optim import adamw_init
-from repro.persistence import (CheckpointConfig, CheckpointManager,
-                               StepRecord, TrainWAL)
+from repro.persistence import CheckpointConfig, CheckpointManager, StepRecord
+from repro.pool import Pool
 
 out = tempfile.mkdtemp(prefix="repro_quickstart_")
 
@@ -38,11 +37,12 @@ print(f"step 1: loss={float(metrics['loss']):.4f} "
       f"grad_norm={float(metrics['grad_norm']):.4f}")
 
 # 3. durable commit: Zero-log WAL = ONE persistency barrier per step --------
-wal_pm = PMem(TrainWAL.capacity_for(1000), path=os.path.join(out, "wal.pmem"))
-wal_pm.memset_zero()
-wal = TrainWAL(wal_pm, 0, wal_pm.size)
+# All PMem layout goes through a named pool region — no raw byte offsets.
+pool = Pool.create(os.path.join(out, "wal.pmem"), 1 << 20)
+wal = pool.wal("train", capacity_steps=1000)
+before = pool.stats.barriers
 wal.commit_step(StepRecord(1, 1, (0, 0), float(metrics["loss"]), 0.0, 1.0))
-print(f"WAL committed step 1 with {wal_pm.stats.barriers} barrier(s)")
+print(f"WAL committed step 1 with {pool.stats.barriers - before} barrier(s)")
 
 # 4. checkpoint: CoW+pvn pages, Zero-log manifest ---------------------------
 mgr = CheckpointManager(os.path.join(out, "ckpt.pmem"),
@@ -53,8 +53,8 @@ print(f"checkpoint: {report.pages_cow} CoW pages, "
       f"{report.barriers} barriers, {report.bytes_device} device bytes")
 
 # 5. crash + recover --------------------------------------------------------
-wal_pm.crash(evict=lambda li: False)   # drop every in-flight line
-wal2 = TrainWAL(wal_pm, 0, wal_pm.size, recover=True)
+pool.pmem.crash(evict=lambda li: False)   # drop every in-flight line
+wal2 = Pool.open(pmem=pool.pmem).wal("train")   # directory + log recovery
 step, restored = CheckpointManager(os.path.join(out, "ckpt.pmem"),
                                    CheckpointConfig(page_size=128 * 1024)).restore()
 print(f"recovered: checkpoint step {step}, WAL last step {wal2.last.step}")

@@ -1,11 +1,18 @@
 """The paper's primary contribution: PMem I/O primitives.
 
+The public entry point for *consuming* these primitives is
+:class:`repro.pool.Pool` — a PMDK-style pool with a durable region
+directory and uniform named handles (``pool.log`` / ``pool.pages`` /
+``pool.kv`` / ``pool.wal``). The modules below are the substrate:
+
 - :mod:`repro.core.pmem`      — functional PMem model (cache/WC semantics,
   crash simulation, exact op accounting)
+- :mod:`repro.core.directory` — durable region directory (single-line
+  entry commits, pvn-style max-generation validity) under the pool
 - :mod:`repro.core.log`       — Classic / Header(±dancing) / Zero logging
 - :mod:`repro.core.pageflush` — CoW(+pvn) / µLog / Hybrid page flushing
 - :mod:`repro.core.recovery`  — minimal buffer-managed KV engine (YCSB
-  validation target)
+  validation target), built on the pool
 - :mod:`repro.core.costmodel` — counts → time, calibrated to the paper
 """
 
@@ -18,6 +25,14 @@ from repro.core.blocks import (  # noqa: F401
     TPU_TILE,
 )
 from repro.core.costmodel import COST_MODEL, DRAMCostModel, PMemCostModel  # noqa: F401
+from repro.core.directory import (  # noqa: F401
+    KIND_LOG,
+    KIND_PAGES,
+    KIND_RAW,
+    RegionDirectory,
+    RegionRecord,
+    directory_bytes,
+)
 from repro.core.log import (  # noqa: F401
     ClassicLog,
     HeaderLog,

@@ -1,0 +1,293 @@
+"""Durable region directory — the allocation substrate of :mod:`repro.pool`.
+
+A *pool* region starts with a small table of named, typed, geometry-tagged
+region records. The table is built from the repo's own primitives and is
+failure-atomic by the same arguments the paper makes for page headers and
+the ping-pong root:
+
+* The **superblock** (line 0) records magic, format version, geometry and
+  table capacity. It is written once at format time, behind a persistency
+  barrier.
+* Each **entry** occupies exactly one cache line (64 B in paper geometry;
+  a 4 KiB tile in checkpoint geometry), so its commit is atomic: after a
+  crash the durable image holds either the whole record or none of it
+  (lines are never torn, §3.1).
+* Validity is *pvn-style*: ``generation == 0`` means "slot never written";
+  among duplicate names the highest generation wins (monotonic counter,
+  same max-rule as the page-version number of §3.2.1).
+
+Allocation protocol (failure-atomic):
+
+1. *place* — pick the byte range (bump pointer over committed entries) and
+   a free entry slot; nothing durable changes.
+2. *initialize* — zero the claimed data range (streaming stores + sfence).
+   Zero logging requires a zeroed region; page stores read zeroed slot
+   headers as invalid, so zero-init is universally safe.
+3. *commit* — store the entry line and persist it. One barrier.
+
+A crash before step 3 leaves the directory untouched: the claimed space is
+invisible and will be re-claimed (and re-zeroed) by the next allocation.
+A spontaneous eviction of the entry line during step 3 is also safe — the
+data range was already durably zeroed, so the region appears committed and
+empty, which is a valid state. Existing regions are never written by an
+allocation, so they survive any crash bit-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.blocks import BlockGeometry, align_up
+from repro.core.persist import FlushKind
+from repro.core.pmem import PMem
+
+__all__ = [
+    "DIRECTORY_MAGIC",
+    "KIND_RAW",
+    "KIND_LOG",
+    "KIND_PAGES",
+    "RegionRecord",
+    "RegionDirectory",
+    "directory_bytes",
+    "probe_file",
+]
+
+DIRECTORY_MAGIC = b"RPMPOOL\x01"
+_FORMAT_VERSION = 1
+
+#: region kinds (the ``kind`` field of an entry)
+KIND_RAW = 1    # untyped byte range
+KIND_LOG = 2    # Classic/Header/Zero log; meta = (technique, flags, dancing, 0)
+KIND_PAGES = 3  # PageStore slot array + µlogs; meta = (page_size, npages,
+                #                                       nslots, n_mulogs)
+
+# magic, version, cache_line, block, max_regions, pool_size
+_SUPER = struct.Struct("<8sIIIIQ")
+# name, kind, generation, base, length, meta[4]  — exactly 64 bytes
+_ENTRY = struct.Struct("<20sIQQQ4I")
+_NAME_BYTES = 20
+
+assert _ENTRY.size == 64
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionRecord:
+    """One committed directory entry."""
+
+    name: str
+    kind: int
+    generation: int
+    base: int
+    length: int
+    meta: Tuple[int, int, int, int] = (0, 0, 0, 0)
+
+    @property
+    def end(self) -> int:
+        return self.base + self.length
+
+
+def directory_bytes(geometry: BlockGeometry, max_regions: int) -> int:
+    """Bytes the directory occupies at the head of a pool region
+    (superblock line + one line per entry, block-aligned)."""
+    return align_up((1 + max_regions) * geometry.cache_line, geometry.block)
+
+
+class RegionDirectory:
+    """Durable name → (base, length, type, params) table over a PMem."""
+
+    def __init__(self, pmem: PMem, max_regions: int) -> None:
+        self.pmem = pmem
+        self.max_regions = int(max_regions)
+        self.records: Dict[str, RegionRecord] = {}
+        self._slot_of: Dict[str, int] = {}
+        self._next_gen = 1
+
+    # ---------------------------------------------------------- lifecycle
+
+    @classmethod
+    def format(cls, pmem: PMem, *, max_regions: int = 64) -> "RegionDirectory":
+        """Write a fresh superblock (one barrier). Entry lines are expected
+        to be zero (``Pool.create`` zeroes the whole region)."""
+        if max_regions < 1:
+            raise ValueError("max_regions must be >= 1")
+        d = cls(pmem, max_regions)
+        table_bytes = directory_bytes(pmem.geometry, max_regions)
+        if table_bytes > pmem.size:
+            raise ValueError("region too small for the directory table")
+        g = pmem.geometry
+        # Zero the whole table first so stale bytes can never parse as
+        # committed entries, then commit the superblock.
+        pmem.store(0, np.zeros(table_bytes, dtype=np.uint8), streaming=True)
+        sb = _SUPER.pack(DIRECTORY_MAGIC, _FORMAT_VERSION, g.cache_line,
+                         g.block, max_regions, pmem.size)
+        pmem.store(0, sb, streaming=True)
+        pmem.persist(0, table_bytes, kind=FlushKind.NT)
+        return d
+
+    @classmethod
+    def load(cls, pmem: PMem) -> "RegionDirectory":
+        """Open an existing directory from the *durable* image, applying the
+        max-generation rule to duplicate names."""
+        sb = pmem.durable_slice(0, min(_SUPER.size, pmem.size))
+        if sb.size < _SUPER.size:
+            raise ValueError("region too small to hold a pool superblock")
+        magic, version, cl, blk, max_regions, size = _SUPER.unpack_from(sb, 0)
+        if magic != DIRECTORY_MAGIC:
+            raise ValueError("not a pool region (bad directory magic)")
+        if version != _FORMAT_VERSION:
+            raise ValueError(f"unsupported pool format version {version}")
+        g = pmem.geometry
+        if (cl, blk) != (g.cache_line, g.block):
+            raise ValueError(
+                f"pool geometry ({cl}, {blk}) != PMem geometry "
+                f"({g.cache_line}, {g.block})")
+        if size != pmem.size:
+            raise ValueError(f"pool was formatted for {size} B, region is "
+                             f"{pmem.size} B")
+        d = cls(pmem, max_regions)
+        # the table is tiny — read just it, not the whole durable image
+        img = pmem.durable_slice(0, (1 + max_regions) * g.cache_line)
+        for slot in range(max_regions):
+            rec = d._read_entry(img, slot)
+            if rec is None:
+                continue
+            prev = d.records.get(rec.name)
+            if prev is None or rec.generation > prev.generation:
+                d.records[rec.name] = rec
+                d._slot_of[rec.name] = slot
+            d._next_gen = max(d._next_gen, rec.generation + 1)
+        return d
+
+    @staticmethod
+    def is_formatted(pmem: PMem) -> bool:
+        n = min(len(DIRECTORY_MAGIC), pmem.size)
+        return bytes(pmem.durable_slice(0, n)) == DIRECTORY_MAGIC
+
+    # ------------------------------------------------------------- layout
+
+    def _entry_off(self, slot: int) -> int:
+        return (1 + slot) * self.pmem.geometry.cache_line
+
+    @property
+    def data_start(self) -> int:
+        """First byte after the entry table."""
+        return directory_bytes(self.pmem.geometry, self.max_regions)
+
+    @property
+    def data_end(self) -> int:
+        """Current bump pointer: first byte past every committed region."""
+        end = self.data_start
+        for rec in self.records.values():
+            end = max(end, rec.end)
+        return align_up(end, self.pmem.geometry.block)
+
+    @property
+    def free_bytes(self) -> int:
+        return self.pmem.size - self.data_end
+
+    def _read_entry(self, img: np.ndarray, slot: int) -> Optional[RegionRecord]:
+        raw_name, kind, gen, base, length, *meta = _ENTRY.unpack_from(
+            img, self._entry_off(slot))
+        if gen == 0:
+            return None
+        # defensive sanity — a record that fails these is ignored, never fatal
+        if base < self.data_start or length <= 0 or base + length > self.pmem.size:
+            return None
+        try:
+            name = raw_name.rstrip(b"\x00").decode("utf-8")
+        except UnicodeDecodeError:
+            return None
+        if not name:
+            return None
+        return RegionRecord(name, kind, gen, base, length,
+                            tuple(int(m) for m in meta))
+
+    # --------------------------------------------------------------- read
+
+    def lookup(self, name: str) -> Optional[RegionRecord]:
+        return self.records.get(name)
+
+    def require(self, name: str, kind: int) -> RegionRecord:
+        rec = self.records.get(name)
+        if rec is None:
+            raise KeyError(f"no region named {name!r} in pool")
+        if rec.kind != kind:
+            raise TypeError(f"region {name!r} has kind {rec.kind}, wanted {kind}")
+        return rec
+
+    # ---------------------------------------------------------- allocate
+
+    def allocate(self, name: str, kind: int, length: int,
+                 meta: Tuple[int, int, int, int] = (0, 0, 0, 0)) -> RegionRecord:
+        """Failure-atomically allocate a named region: place → zero-init →
+        single-line entry commit. See the module docstring for the crash
+        argument."""
+        rec, slot = self._place(name, kind, length, meta)
+        self._initialize(rec)
+        self._commit(rec, slot)
+        return rec
+
+    def _place(self, name: str, kind: int, length: int,
+               meta: Tuple[int, int, int, int]) -> Tuple[RegionRecord, int]:
+        """Pick the byte range and entry slot. Purely volatile."""
+        if name in self.records:
+            raise ValueError(f"region {name!r} already exists")
+        if len(name.encode("utf-8")) > _NAME_BYTES:
+            raise ValueError(f"region name {name!r} longer than {_NAME_BYTES} B")
+        if length <= 0:
+            raise ValueError("region length must be positive")
+        used = set(self._slot_of.values())
+        slot = next((s for s in range(self.max_regions) if s not in used), None)
+        if slot is None:
+            raise RuntimeError(f"directory full ({self.max_regions} regions)")
+        base = self.data_end
+        if base + length > self.pmem.size:
+            raise RuntimeError(
+                f"pool full: need {length} B at {base}, region is "
+                f"{self.pmem.size} B")
+        rec = RegionRecord(name, kind, self._next_gen, base, int(length),
+                           tuple(int(m) for m in meta))
+        return rec, slot
+
+    def _initialize(self, rec: RegionRecord, chunk: int = 1 << 20) -> None:
+        """Durably zero the claimed range (bulk streaming traffic, fenced
+        once). Must complete before the entry commit: a spontaneously
+        evicted entry line must only ever expose initialized data."""
+        off, end = rec.base, rec.end
+        while off < end:
+            n = min(chunk, end - off)
+            self.pmem.store(off, np.zeros(n, dtype=np.uint8), streaming=True)
+            off += n
+        self.pmem.sfence()
+
+    def _commit(self, rec: RegionRecord, slot: int) -> None:
+        """Atomic commit: the entry fits a single cache line."""
+        entry = _ENTRY.pack(rec.name.encode("utf-8"), rec.kind, rec.generation,
+                            rec.base, rec.length, *rec.meta)
+        off = self._entry_off(slot)
+        self.pmem.store(off, entry, streaming=True)
+        self.pmem.persist(off, _ENTRY.size, kind=FlushKind.NT)
+        self.records[rec.name] = rec
+        self._slot_of[rec.name] = slot
+        self._next_gen += 1
+
+
+def probe_file(path: str) -> Optional[Tuple[int, int, int, int]]:
+    """Read a pool file's superblock without mapping the region.
+    Returns ``(cache_line, block, max_regions, size)`` or ``None`` if the
+    file is missing or not a formatted pool."""
+    try:
+        with open(path, "rb") as f:
+            buf = f.read(_SUPER.size)
+    except OSError:
+        return None
+    if len(buf) < _SUPER.size:
+        return None
+    magic, version, cl, blk, max_regions, size = _SUPER.unpack(buf)
+    if magic != DIRECTORY_MAGIC or version != _FORMAT_VERSION:
+        return None
+    return cl, blk, max_regions, size

@@ -237,7 +237,7 @@ class HeaderLog(_LogBase):
         self._next_slot = 0
 
     def _data_start(self) -> int:
-        cfg = self.cfg if hasattr(self, "cfg") else LogConfig()
+        cfg = self.cfg  # always set by _LogBase.__init__ before _data_start()
         return align_up(cfg.dancing * cfg.geometry.cache_line, cfg.geometry.block)
 
     def append(self, payload: bytes) -> int:

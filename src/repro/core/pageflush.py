@@ -203,6 +203,22 @@ class PageStore:
         self.free: List[int] = list(range(layout.nslots))
         self.policy = HybridPolicy(layout, cost_model)
 
+    # ------------------------------------------------------------ sizing
+
+    @staticmethod
+    def region_bytes(layout: PageStoreLayout, *, n_mulogs: int = 1) -> int:
+        """Bytes from ``layout.base`` to ``total_end`` for a store with
+        ``n_mulogs`` micro logs — the exact span ``__init__`` lays out,
+        assuming ``layout.base`` is block-aligned."""
+        g = layout.geometry
+        mulog_hdr_idx = g.cache_line + align_up(4 * layout.lines_per_page,
+                                                g.cache_line)
+        mulog_total = mulog_hdr_idx + layout.lines_per_page * g.cache_line
+        off = align_up(layout.base + layout.total_bytes, g.block)
+        for _ in range(n_mulogs):
+            off = align_up(off + mulog_total, g.block)
+        return off - layout.base
+
     # ------------------------------------------------------------- open
 
     @classmethod

@@ -34,12 +34,7 @@ from typing import Callable, Dict, Iterable, Optional, Set
 
 import numpy as np
 
-from repro.core.blocks import (
-    BlockGeometry,
-    PAPER_GEOMETRY,
-    blocks_covering,
-    lines_covering,
-)
+from repro.core.blocks import BlockGeometry, PAPER_GEOMETRY
 from repro.core.persist import FlushKind
 
 __all__ = ["PMem", "PMemStats", "CrashImage"]
@@ -127,6 +122,11 @@ class PMem:
         self._staged: Dict[int, np.ndarray] = {}
         # Non-temporal stores buffered in the WC buffer, awaiting sfence.
         self._wc: Dict[int, np.ndarray] = {}
+        # Lines resident in the CPU cache in *clean* state: written back by
+        # clwb (which keeps the line valid) or brought in by a load. A
+        # clflush/clflushopt removes the line; a later load of it is a
+        # device read (``device_read_bytes``).
+        self._clean: Set[int] = set()
         # Recently flushed / nt-stored lines for the same-line penalty.
         self._recent_flushed: collections.deque = collections.deque(maxlen=_RECENCY_WINDOW)
         self._recent_nt: collections.deque = collections.deque(maxlen=_RECENCY_WINDOW)
@@ -168,20 +168,35 @@ class PMem:
                 hi = min(lo + self.geometry.cache_line, self.size)
                 self._wc[li] = self._logical[lo:hi].copy()
                 self._dirty.discard(li)
+                self._clean.discard(li)  # nt stores bypass (and evict) the cache
         else:
             self.stats.stores += 1
             self.stats.store_bytes += n
             self._dirty.update(lines)
+            self._clean.difference_update(lines)  # cached, but dirty now
 
     def load(self, off: int, size: int, *, uncached: bool = False) -> np.ndarray:
         """Read bytes (program order — sees un-persisted stores).
-        ``uncached=True`` marks a read that must come from the device
-        (e.g. CoW reading the old page version) for cost accounting."""
+
+        Lines that are neither dirty- nor clean-cached (nor sitting in the
+        WC buffer) come from the device and count as ``device_read_bytes``;
+        the read then installs them in the cache, clean. ``uncached=True``
+        marks a read that deliberately bypasses the cache (e.g. CoW reading
+        the old page version non-temporally): the full size is a device
+        read and nothing is cached."""
         self._check(off, size)
         self.stats.loads += 1
         self.stats.load_bytes += size
         if uncached:
             self.stats.device_read_bytes += size
+        elif size > 0:
+            cl = self.geometry.cache_line
+            for li in self._lines(off, size):
+                if li in self._dirty or li in self._clean or li in self._wc:
+                    continue
+                lo, hi = li * cl, min((li + 1) * cl, self.size)
+                self.stats.device_read_bytes += min(hi, off + size) - max(lo, off)
+                self._clean.add(li)
         return self._logical[off : off + size].copy()
 
     # --------------------------------------------------------------- flush
@@ -201,11 +216,13 @@ class PMem:
             lo = li * self.geometry.cache_line
             hi = min(lo + self.geometry.cache_line, self.size)
             self._staged[li] = self._logical[lo:hi].copy()
+            self._dirty.discard(li)
             if kind in (FlushKind.FLUSH, FlushKind.FLUSHOPT):
-                # clflush/clflushopt invalidate; clwb keeps the line cached.
-                self._dirty.discard(li)
+                # clflush/clflushopt invalidate: a later load is a device read
+                self._clean.discard(li)
             else:
-                self._dirty.discard(li)
+                # clwb keeps the line cached (clean)
+                self._clean.add(li)
 
     def sfence(self) -> None:
         """Commit all staged flushes and WC-buffered streaming stores to the
@@ -286,6 +303,7 @@ class PMem:
         self._dirty.clear()
         self._staged.clear()
         self._wc.clear()
+        self._clean.clear()
         self._logical = np.array(self._durable, dtype=np.uint8, copy=True)
         return CrashImage(
             durable=np.array(self._durable, copy=True),
@@ -298,6 +316,13 @@ class PMem:
     def durable_view(self) -> np.ndarray:
         """The current durable image (what recovery would see)."""
         return np.array(self._durable, copy=True)
+
+    def durable_slice(self, off: int, size: int) -> np.ndarray:
+        """Copy of one byte range of the durable image — recovery reads of
+        small structures (roots, directory tables) without paying an
+        O(region) copy."""
+        self._check(off, size)
+        return np.array(self._durable[off : off + size], copy=True)
 
     def fsync(self) -> None:
         """For file-backed regions: push the durable image to stable media."""
@@ -312,6 +337,7 @@ class PMem:
         self._dirty.clear()
         self._staged.clear()
         self._wc.clear()
+        self._clean.clear()
 
     def reset_stats(self) -> PMemStats:
         old = self.stats

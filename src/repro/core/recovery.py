@@ -1,7 +1,7 @@
 """A minimal buffer-managed storage engine tying the primitives together.
 
 This is the validation vehicle of paper §3.3.2 (HyMem + YCSB): a DRAM
-"buffer pool" of fixed-size pages over a PMem :class:`PageStore`, with a
+"buffer pool" of fixed-size pages over a PMem page region, with a
 write-ahead log using any of the three logging techniques. It exists to
 
   * demonstrate the I/O primitives composing into a correct engine,
@@ -9,26 +9,32 @@ write-ahead log using any of the three logging techniques. It exists to
   * provide the crash-recovery property-test target (arbitrary eviction
     subsets at crash time must never lose a committed put).
 
+All persistent layout goes through :class:`repro.pool.Pool`: the engine
+owns three named directory regions — ``<name>.root`` (failure-atomic
+ping-pong root: two slots, max-generation rule, same line-atomicity
+argument as the pvn), ``<name>.pages`` (PageStore slots + µlogs) and
+``<name>.wal`` (redo log). The preferred constructor is
+``pool.kv(name, cfg)``; passing a bare :class:`PMem` still works as a
+deprecation shim (the engine formats/attaches a pool in place).
+
 Commit protocol per ``put``: modify the DRAM page (track dirty lines),
 append a redo record to the WAL, persist per the technique. Background
-``checkpoint()`` flushes dirty pages (hybrid CoW/µLog) and then advances a
-failure-atomic *root* (ping-pong slots, max-generation rule — same
-line-atomicity argument as the pvn) recording the checkpoint LSN. Recovery
-= page table scan + µlog replay + redo of WAL entries past the checkpoint
-LSN (puts are idempotent, so the §3.2.1 "log entries might be reapplied"
-caveat is benign here — noted where it would not be).
+``checkpoint()`` flushes dirty pages (hybrid CoW/µLog) and then advances
+the root recording the checkpoint LSN. Recovery = page table scan + µlog
+replay + redo of WAL entries past the checkpoint LSN (puts are idempotent,
+so the §3.2.1 "log entries might be reapplied" caveat is benign here).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import Dict, List, Optional, Set, Tuple, Type
+from typing import Dict, Set, Tuple, Union
 
 import numpy as np
 
 from repro.core.blocks import BlockGeometry, PAPER_GEOMETRY, align_up
-from repro.core.log import LOG_TECHNIQUES, LogConfig, _LogBase
+from repro.core.log import LogConfig
 from repro.core.pageflush import PageStore, PageStoreLayout
 from repro.core.pmem import PMem
 
@@ -57,57 +63,60 @@ class KVConfig:
     def nkeys(self) -> int:
         return self.npages * self.recs_per_page
 
+    @property
+    def nslots(self) -> int:
+        return self.npages + max(2, self.npages // 4)
+
 
 class PersistentKV:
-    """Fixed-size-record KV store: DRAM buffer pool + PMem pages + WAL."""
+    """Fixed-size-record KV store: DRAM buffer pool + pool-managed PMem."""
 
-    def __init__(self, pmem: PMem, cfg: KVConfig, *, _recover: bool = False) -> None:
-        self.pmem = pmem
-        self.cfg = cfg
-        g = cfg.geometry
-        # --- layout: [root | page slots + µlogs | wal] ---------------------
-        self.root_off = 0
-        root_bytes = align_up(2 * g.cache_line, g.block)
-        self.layout = PageStoreLayout(
-            base=root_bytes,
-            page_size=cfg.page_size,
-            npages=cfg.npages,
-            nslots=cfg.npages + max(2, cfg.npages // 4),
-            geometry=g,
-        )
-        log_cls: Type[_LogBase] = LOG_TECHNIQUES[cfg.technique]
-        if _recover:
-            self.store = PageStore.open(pmem, self.layout)
+    def __init__(self, pool_or_pmem, cfg: KVConfig, *, name: str = "kv",
+                 _recover: bool = False) -> None:
+        from repro.pool import Pool
+        if isinstance(pool_or_pmem, PMem):
+            # deprecation shim for the legacy (pmem, cfg) constructor:
+            # format-or-open a pool directly over the caller's region
+            pmpool = Pool.attach(pool_or_pmem)
         else:
-            self.store = PageStore(pmem, self.layout)
-        self.log_base = align_up(self.store.total_end, g.block)
-        if self.log_base + cfg.log_capacity > pmem.size:
-            raise ValueError("region too small for layout")
-        self._log_cls = log_cls
+            pmpool = pool_or_pmem
+        if cfg.geometry != pmpool.geometry:
+            raise ValueError("KVConfig.geometry must match the pool geometry")
+        self._pmpool = pmpool
+        self.pmem = pmpool.pmem
+        self.cfg = cfg
+        self.name = name
+        g = cfg.geometry
+
+        recover = _recover or pmpool.directory.lookup(f"{name}.root") is not None
+        self.root = pmpool.raw(f"{name}.root", nbytes=2 * g.cache_line)
+        pages = pmpool.pages(f"{name}.pages", npages=cfg.npages,
+                             page_size=cfg.page_size, nslots=cfg.nslots)
+        self.store: PageStore = pages.store
+        self.wal = pmpool.log(f"{name}.wal", capacity=cfg.log_capacity,
+                              technique=cfg.technique, cfg=cfg.log)
         self.checkpoint_lsn = 0
         self._root_gen = 0
-        # --- volatile state -------------------------------------------------
+        # --- volatile state ------------------------------------------------
         self.pool = np.zeros((cfg.npages, cfg.page_size), dtype=np.uint8)
         self.dirty: Dict[int, Set[int]] = {}
-
-        if _recover:
+        if recover:
             self._recover_state()
-        else:
-            self.wal = log_cls(pmem, self.log_base, cfg.log_capacity, cfg.log)
 
     # ------------------------------------------------------------- sizing
 
     @staticmethod
     def region_bytes(cfg: KVConfig) -> int:
+        """Pool region size that fits this engine (directory included)."""
+        from repro.pool import DEFAULT_MAX_REGIONS, Pool
         g = cfg.geometry
-        root = align_up(2 * g.cache_line, g.block)
-        layout = PageStoreLayout(
-            base=root, page_size=cfg.page_size, npages=cfg.npages,
-            nslots=cfg.npages + max(2, cfg.npages // 4), geometry=g,
-        )
-        slots = layout.total_bytes
-        mulog = align_up(cfg.page_size * 2, g.block)  # generous µlog bound
-        return root + slots + mulog + cfg.log_capacity + g.block
+        layout = PageStoreLayout(base=0, page_size=cfg.page_size,
+                                 npages=cfg.npages, nslots=cfg.nslots,
+                                 geometry=g)
+        return (Pool.overhead_bytes(g, DEFAULT_MAX_REGIONS)
+                + align_up(2 * g.cache_line, g.block)
+                + PageStore.region_bytes(layout, n_mulogs=1)
+                + cfg.log_capacity + 4 * g.block)
 
     # --------------------------------------------------------------- api
 
@@ -154,53 +163,43 @@ class PersistentKV:
         self._root_gen += 1
         slot = self._root_gen % 2
         g = self.cfg.geometry
-        self.pmem.store(
-            self.root_off + slot * g.cache_line,
-            _ROOT.pack(self._root_gen, ckpt_lsn),
-            streaming=True,
-        )
-        self.pmem.persist(self.root_off + slot * g.cache_line, _ROOT.size)
+        self.root.store(slot * g.cache_line,
+                        _ROOT.pack(self._root_gen, ckpt_lsn), streaming=True)
+        self.root.persist(slot * g.cache_line, _ROOT.size)
         self.checkpoint_lsn = ckpt_lsn
-        # New WAL generation: re-zero the log region (Zero logging requires
-        # it; the others tolerate it) and restart the writer. The zeroing
-        # itself is bulk streaming traffic, not barrier-bound.
-        zero = np.zeros(self.cfg.log_capacity, dtype=np.uint8)
-        self.pmem.store(self.log_base, zero, streaming=True)
-        self.pmem.sfence()
-        self.wal = self._log_cls(self.pmem, self.log_base, self.cfg.log_capacity, self.cfg.log)
+        # New WAL generation (re-zeroes the region — Zero logging requires
+        # it — and restarts the writer at LSN 1).
+        self.wal.reset()
 
     # ----------------------------------------------------------- recovery
 
     def _read_root(self) -> Tuple[int, int]:
-        img = self.pmem.durable_view()
+        img = self.root.durable_view()
         best = (0, 0)
         g = self.cfg.geometry
         for slot in range(2):
-            gen, lsn = _ROOT.unpack_from(img, self.root_off + slot * g.cache_line)
+            gen, lsn = _ROOT.unpack_from(img, slot * g.cache_line)
             if gen > best[0]:
                 best = (gen, lsn)
         return best
 
     def _recover_state(self) -> None:
         self._root_gen, self.checkpoint_lsn = self._read_root()
-        # load persistent pages into the pool
+        # load persistent pages into the buffer pool
         for pid in range(self.cfg.npages):
             if pid in self.store.table:
                 self.pool[pid] = self.store.read_page(pid)
-        # redo WAL entries past the checkpoint
-        rec = self._log_cls.recover(self.pmem, self.log_base, self.cfg.log_capacity, self.cfg.log)
+        # redo WAL entries past the checkpoint (the handle recovered them
+        # when it was opened, and is already positioned at the tail)
         cl = self.cfg.geometry.cache_line
-        for entry in rec.entries:
+        for entry in self.wal.recovered.entries:
             key, vlen = _REC.unpack_from(entry, 0)
             value = entry[_REC.size : _REC.size + vlen]
             pid, off = self._locate(key)
             self.pool[pid, off : off + vlen] = np.frombuffer(value, dtype=np.uint8)
             lines = self.dirty.setdefault(pid, set())
             lines.update(range(off // cl, (off + vlen - 1) // cl + 1))
-        self.wal, _ = self._log_cls.open_for_append(
-            self.pmem, self.log_base, self.cfg.log_capacity, self.cfg.log
-        )
 
     @classmethod
-    def open(cls, pmem: PMem, cfg: KVConfig) -> "PersistentKV":
-        return cls(pmem, cfg, _recover=True)
+    def open(cls, pool_or_pmem, cfg: KVConfig, *, name: str = "kv") -> "PersistentKV":
+        return cls(pool_or_pmem, cfg, name=name, _recover=True)

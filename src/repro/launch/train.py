@@ -27,8 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced
-from repro.core.pmem import PMem
 from repro.data import SyntheticPipeline
+from repro.pool import Pool
 from repro.launch.steps import build_train_step
 from repro.models import init_params
 from repro.optim import AdamWConfig, adamw_init
@@ -87,12 +87,11 @@ class Trainer:
             total_steps=max(tc.steps, 100)))
         # --- persistence ------------------------------------------------
         wal_path = os.path.join(tc.out, "wal.pmem")
-        wal_cap = TrainWAL.capacity_for(tc.wal_capacity_steps)
-        fresh_wal = not os.path.exists(wal_path)
-        self.wal_pmem = PMem(wal_cap, path=wal_path)
-        if fresh_wal:
-            self.wal_pmem.memset_zero()
-        self.wal = TrainWAL(self.wal_pmem, 0, wal_cap, recover=not fresh_wal)
+        self.wal_pool = Pool.open_or_create(
+            wal_path, TrainWAL.capacity_for(tc.wal_capacity_steps))
+        self.wal_pmem = self.wal_pool.pmem
+        self.wal = self.wal_pool.wal(
+            "train_wal", capacity_steps=tc.wal_capacity_steps)
         self.manager = CheckpointManager(
             os.path.join(tc.out, "ckpt.pmem"),
             CheckpointConfig(page_size=128 * 1024))

@@ -1,5 +1,10 @@
 """Training-state persistence built on the paper's I/O primitives.
 
+Every module here gets its PMem layout from :class:`repro.pool.Pool` —
+named, typed directory regions instead of hand-carved byte offsets. The
+checkpoint manager owns a pool per shard file ("manifest" + "pages"
+regions); the training WAL is a pool log region (``pool.wal(name)``).
+
 - :mod:`repro.persistence.checkpoint` — sharded checkpoint manager: each
   parameter/optimizer shard is a sequence of *pages* flushed failure-
   atomically (CoW + pvn for full snapshots, µLog deltas for sparse change),

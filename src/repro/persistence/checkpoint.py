@@ -42,10 +42,11 @@ import numpy as np
 
 from repro.core.blocks import BlockGeometry, TPU_TILE, align_up
 from repro.core.costmodel import COST_MODEL
-from repro.core.log import ZeroLog, LogConfig, popcount
+from repro.core.log import LogConfig, popcount
 from repro.core.pageflush import HybridPolicy, PageStore, PageStoreLayout
 from repro.core.persist import AccessPattern, FlushKind
 from repro.core.pmem import PMem, PMemStats
+from repro.pool import LogHandle, PagesHandle, Pool
 from repro.kernels.dirty_diff import dirty_blocks
 from repro.kernels.flush_scan import flush_scan
 from repro.kernels.popcnt_checksum import popcount_blocks
@@ -104,9 +105,11 @@ class CheckpointManager:
         self.cfg = cfg
         self.path = path
         self.shard_id = shard_id
+        self.pool: Optional[Pool] = None
         self.pmem: Optional[PMem] = None
         self.store: Optional[PageStore] = None
-        self.manifest: Optional[ZeroLog] = None
+        self.manifest: Optional[LogHandle] = None
+        self._pages: Optional[PagesHandle] = None
         self._layout: Optional[PageStoreLayout] = None
         self._leaf_pages: Dict[str, List[int]] = {}
         self._leaf_meta: Dict[str, Dict[str, Any]] = {}
@@ -138,26 +141,23 @@ class CheckpointManager:
             }
             pid += npages
         npages = pid
-        layout = PageStoreLayout(
-            base=align_up(cfg.manifest_capacity, g.block),
-            page_size=cfg.page_size,
-            npages=npages,
-            nslots=2 * npages + cfg.extra_slots,
-            geometry=g,
-        )
-        self._layout = layout
-        total = layout.base + layout.total_bytes
-        # µlog area: header line + idx + data per µlog
-        per_mulog = align_up(
-            g.cache_line + align_up(4 * layout.lines_per_page, g.cache_line)
-            + layout.lines_per_page * g.cache_line, g.block)
-        total = align_up(total, g.block) + cfg.threads * per_mulog + g.block
-        self.pmem = PMem(total, path=self.path, geometry=g)
-        self.pmem.memset_zero()
-        self.store = PageStore(self.pmem, layout, n_mulogs=cfg.threads,
-                               threads=cfg.threads)
-        self.manifest = ZeroLog(self.pmem, 0, cfg.manifest_capacity,
-                                LogConfig(geometry=g, pad_to_line=True))
+        nslots = 2 * npages + cfg.extra_slots
+        sizing = PageStoreLayout(base=0, page_size=cfg.page_size,
+                                 npages=npages, nslots=nslots, geometry=g)
+        total = (Pool.overhead_bytes(g, max_regions=8)
+                 + align_up(cfg.manifest_capacity, g.block)
+                 + PageStore.region_bytes(sizing, n_mulogs=cfg.threads)
+                 + 2 * g.block)
+        self.pool = Pool.create(self.path, total, geometry=g, max_regions=8)
+        self.pmem = self.pool.pmem
+        self.manifest = self.pool.log(
+            "manifest", capacity=cfg.manifest_capacity, technique="zero",
+            cfg=LogConfig(geometry=g, pad_to_line=True))
+        self._pages = self.pool.pages(
+            "pages", npages=npages, page_size=cfg.page_size, nslots=nslots,
+            n_mulogs=cfg.threads, threads=cfg.threads)
+        self.store = self._pages.store
+        self._layout = self._pages.layout
 
     # ------------------------------------------------------------- save
 
@@ -291,16 +291,22 @@ class CheckpointManager:
         beyond the double-buffer guarantee, but verification is cheap
         insurance at restore time)."""
         path = path or self.path
-        cfg, g = self.cfg, self.cfg.geometry
-        if self.pmem is None:
+        cfg = self.cfg
+        if self.pool is None:
             if path is None:
                 raise ValueError("nothing to restore from")
-            size = os.path.getsize(path)
-            self.pmem = PMem(size, path=path, geometry=g)
-        rec = ZeroLog.recover(self.pmem, 0, cfg.manifest_capacity,
-                              LogConfig(geometry=g, pad_to_line=True))
+            if not os.path.exists(path):
+                raise FileNotFoundError(path)
+            self.pool = Pool.open(path)
+            self.pmem = self.pool.pmem
+            self.manifest = self.pool.log("manifest")
+        rec = self.manifest.recover()
         if not rec.entries:
             raise FileNotFoundError("no committed checkpoint manifest")
+        # layout from the durable directory record — deliberately without
+        # opening the page store (that would replay µlogs before the
+        # manifests are verified against the untouched image)
+        self._layout = self.pool.pages_layout("pages")
         img = self.pmem.durable_view()
         for raw in reversed(rec.entries):
             entry = json.loads(raw.decode())
@@ -313,14 +319,9 @@ class CheckpointManager:
     def _try_restore_entry(self, entry: Dict[str, Any], img: np.ndarray,
                            verify: bool) -> Optional[Dict[str, np.ndarray]]:
         import struct as _s
-        cfg, g = self.cfg, self.cfg.geometry
+        cfg = self.cfg
         state: Dict[str, np.ndarray] = {}
-        # reconstruct layout geometry from the entry
-        npages = max(p[0] for leaf in entry["leaves"].values() for p in leaf["pages"]) + 1
-        layout = PageStoreLayout(
-            base=align_up(cfg.manifest_capacity, g.block),
-            page_size=cfg.page_size, npages=npages,
-            nslots=2 * npages + cfg.extra_slots, geometry=g)
+        layout = self._layout
         for name, meta in entry["leaves"].items():
             buf = np.zeros(len(meta["pages"]) * cfg.page_size, dtype=np.uint8)
             for i, ((pid, slot, pvn), csum) in enumerate(
@@ -339,17 +340,13 @@ class CheckpointManager:
 
     def _adopt(self, entry: Dict[str, Any], state: Dict[str, np.ndarray]) -> None:
         """Rebuild volatile metadata so saving can continue after restore."""
-        cfg, g = self.cfg, self.cfg.geometry
+        cfg = self.cfg
         self._leaf_pages = {}
         self._leaf_meta = {}
-        npages = max(p[0] for leaf in entry["leaves"].values() for p in leaf["pages"]) + 1
-        layout = PageStoreLayout(
-            base=align_up(cfg.manifest_capacity, g.block),
-            page_size=cfg.page_size, npages=npages,
-            nslots=2 * npages + cfg.extra_slots, geometry=g)
-        self._layout = layout
-        self.store = PageStore.open(self.pmem, layout, n_mulogs=cfg.threads,
-                                    threads=cfg.threads)
+        # open the pages region now (µlog replay is safe post-verification)
+        self._pages = self.pool.pages("pages", threads=cfg.threads)
+        self.store = self._pages.store
+        self._layout = self._pages.layout
         referenced = set()
         for name, meta in entry["leaves"].items():
             self._leaf_pages[name] = [p[0] for p in meta["pages"]]
@@ -359,8 +356,7 @@ class CheckpointManager:
                 # trust the committed manifest over µlog-advanced versions
                 self.store.table[pid] = (slot, pvn)
             self._snapshots[name] = self._leaf_bytes(state[name]).copy()
-        self.store.free = [s for s in range(layout.nslots) if s not in referenced]
+        self.store.free = [s for s in range(self._layout.nslots)
+                           if s not in referenced]
         self._shadow = {}
         self._prev_dirty = {}
-        self.manifest, _ = ZeroLog.open_for_append(
-            self.pmem, 0, cfg.manifest_capacity, LogConfig(geometry=g, pad_to_line=True))

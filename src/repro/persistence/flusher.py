@@ -11,6 +11,10 @@ Ordering contract: saves for a given manager are serialized in submission
 order (a single worker per shard region); ``wait()`` drains everything —
 the train loop calls it before intentionally stopping, and the WAL makes
 any un-flushed tail recoverable anyway.
+
+The flusher owns no layout: each :class:`CheckpointManager` manages its
+shard through its own :class:`repro.pool.Pool` (manifest + pages regions),
+so the worker thread only ever calls ``manager.save``.
 """
 
 from __future__ import annotations

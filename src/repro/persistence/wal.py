@@ -10,23 +10,26 @@ Records are fixed-size and cache-line padded (Fig. 6's ≈8× lesson), so the
 WAL also never rewrites a line. On restart the WAL gives the exact resume
 point: the last durable step, its RNG key, and the data-pipeline cursor —
 replaying the pipeline deterministically with no re-read of earlier batches.
+
+Construction goes through :class:`repro.pool.Pool` — ``pool.wal(name)`` or
+:meth:`TrainWAL.on_pool` — which open-or-create a named log region and
+recover automatically. The legacy ``TrainWAL(pmem, 0, capacity)`` signature
+survives as a deprecation shim that formats/attaches a pool over the given
+region in place.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import struct
-import time
-from typing import List, Optional, Tuple, Type
-
-import numpy as np
-
-from repro.core.log import LOG_TECHNIQUES, LogConfig, ZeroLog, _LogBase
-from repro.core.pmem import PMem
+from typing import List, Optional, Tuple
 
 __all__ = ["StepRecord", "TrainWAL"]
 
 _REC = struct.Struct("<QQQQfffQ")  # step, cursor, rng_hi, rng_lo, loss, gnorm, lscale, t_ns
+
+#: cache-line-padded bytes per record in a Zero log (header + record < 128)
+_BYTES_PER_STEP = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,31 +55,77 @@ class StepRecord:
 
 
 class TrainWAL:
-    """Training WAL over a PMem region. Technique defaults to "zero" (the
-    paper's result); "classic"/"header" remain available as baselines so the
-    end-to-end benefit is measurable (benchmarks/tab_ycsb.py analogue)."""
+    """Training WAL over a pool log region. Technique defaults to "zero"
+    (the paper's result); "classic"/"header" remain available as baselines
+    so the end-to-end benefit is measurable."""
+
+    #: directory region name used by the legacy shim
+    _LEGACY_REGION = "train_wal"
 
     def __init__(
         self,
-        pmem: PMem,
-        base: int,
-        capacity: int,
+        pmem=None,
+        base: int = 0,
+        capacity: Optional[int] = None,
         *,
         technique: str = "zero",
         recover: bool = False,
+        _handle=None,
     ) -> None:
-        self.pmem = pmem
-        self.base = base
-        self.capacity = capacity
-        self.technique = technique
-        cls: Type[_LogBase] = LOG_TECHNIQUES[technique]
-        cfg = LogConfig(pad_to_line=True)
-        self.records: List[StepRecord] = []
-        if recover:
-            self.log, rec = cls.open_for_append(pmem, base, capacity, cfg)
-            self.records = [StepRecord.unpack(e) for e in rec.entries]
+        if _handle is None:
+            # Legacy shim: adopt the caller's raw region as a pool. The
+            # directory lives at the head, so base must be 0; the log gets
+            # whatever the directory does not use (clamped to `capacity`).
+            from repro.pool import Pool
+            if pmem is None:
+                raise TypeError("TrainWAL needs a pool handle or a PMem")
+            if base != 0:
+                raise ValueError(
+                    "raw base offsets are no longer supported; allocate a "
+                    "region through repro.pool.Pool instead")
+            pool = Pool.attach(pmem)
+            if pool.directory.lookup(self._LEGACY_REGION) is not None:
+                # the durable record decides the technique on reopen
+                _handle = pool.log(self._LEGACY_REGION)
+                if not recover:
+                    # legacy recover=False meant "fresh WAL over this
+                    # region": start a new generation instead of silently
+                    # resuming the old one
+                    _handle.reset()
+            else:
+                cap = min(capacity if capacity is not None else pool.free_bytes,
+                          pool.free_bytes)
+                _handle = pool.log(self._LEGACY_REGION, capacity=cap,
+                                   technique=technique)
+        self.log = _handle
+        self.technique = _handle.technique
+        self.records: List[StepRecord] = [
+            StepRecord.unpack(e) for e in _handle.recovered.entries
+        ]
+
+    @classmethod
+    def on_pool(cls, pool, name: str = "train_wal", *,
+                capacity_steps: Optional[int] = None,
+                technique: Optional[str] = None) -> "TrainWAL":
+        """Open-or-create a named WAL region on ``pool``.
+
+        ``capacity_steps`` is required when creating; on open it is
+        *verified* against the durable region (a region cannot grow, so
+        asking for more steps than it holds raises rather than failing
+        thousands of steps later with a full log). ``technique`` defaults
+        to "zero" when creating; on open the directory record decides."""
+        if pool.directory.lookup(name) is not None:
+            capacity = (capacity_steps * _BYTES_PER_STEP
+                        if capacity_steps is not None else None)
+            handle = pool.log(name, capacity=capacity, technique=technique)
         else:
-            self.log = cls(pmem, base, capacity, cfg)
+            if capacity_steps is None:
+                raise ValueError(
+                    f"creating WAL {name!r} requires capacity_steps=")
+            handle = pool.log(name,
+                              capacity=capacity_steps * _BYTES_PER_STEP + 4096,
+                              technique=technique or "zero")
+        return cls(_handle=handle)
 
     def commit_step(self, record: StepRecord) -> int:
         """Durably commit a training step (one barrier under Zero)."""
@@ -89,9 +138,11 @@ class TrainWAL:
         return self.records[-1] if self.records else None
 
     def barriers_per_step(self) -> int:
-        return self.log.BARRIERS_PER_APPEND
+        return self.log.barriers_per_append
 
     @classmethod
     def capacity_for(cls, steps: int) -> int:
-        # padded record (64 B) + Zero header, cache-line stride
-        return steps * 128 + 4096
+        """Bytes for a pool region holding a `steps`-step WAL (directory
+        overhead included)."""
+        from repro.pool import Pool
+        return steps * _BYTES_PER_STEP + 8192 + Pool.overhead_bytes()

@@ -1,0 +1,533 @@
+"""``repro.pool`` — a PMDK-style pool/handle API over the PMem primitives.
+
+This is the single entry point every PMem consumer goes through. A *pool*
+is one PMem region (optionally file-backed) whose head holds a durable
+:class:`~repro.core.directory.RegionDirectory`: a table of named, typed,
+geometry-tagged regions, each allocated failure-atomically (single-cache-
+line entry commit, pvn-style max-generation validity). On top of the
+directory sit uniform *handles*, all sharing one lifecycle protocol —
+open-or-create by name, recover automatically, ``close()`` when done, and
+a ``stats()`` delta view windowing the pool's exact op counts from the
+moment the handle was opened (pool-wide counters: concurrent handles on
+one pool see each other's traffic):
+
+    pool = Pool.create("/dev/shm/app.pmem", 1 << 24)
+    wal  = pool.log("wal", capacity=1 << 20, technique="zero")
+    wal.append(b"record")                       # ONE barrier (paper §3.3.1)
+
+    pages = pool.pages("heap", npages=64, page_size=16384)
+    pages.flush(0, page, dirty_lines=[3, 4])    # hybrid CoW/µLog (§3.2.3)
+
+    kv = pool.kv("store", KVConfig())           # buffer pool + WAL + root
+    train_wal = pool.wal("steps", capacity_steps=10_000)
+
+    pool2 = Pool.open("/dev/shm/app.pmem")      # after crash: same names,
+    wal2  = pool2.log("wal")                    # recovered to the tail
+
+Geometry is a pool-level property (paper 64 B/256 B or TPU 4 KiB/16 KiB
+tiles) recorded in the superblock, so ``Pool.open`` needs no out-of-band
+configuration. Handles never hand out raw byte offsets; all layout math
+lives behind the directory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blocks import BlockGeometry, PAPER_GEOMETRY, align_up
+from repro.core.directory import (
+    KIND_LOG,
+    KIND_PAGES,
+    KIND_RAW,
+    RegionDirectory,
+    RegionRecord,
+    directory_bytes,
+    probe_file,
+)
+from repro.core.log import LOG_TECHNIQUES, LogConfig, RecoveredLog
+from repro.core.pageflush import PageStore, PageStoreLayout
+from repro.core.persist import FlushKind
+from repro.core.pmem import PMem, PMemStats
+
+__all__ = [
+    "Pool",
+    "Handle",
+    "LogHandle",
+    "PagesHandle",
+    "RawHandle",
+    "DEFAULT_MAX_REGIONS",
+]
+
+DEFAULT_MAX_REGIONS = 64
+
+_TECH_ID = {"classic": 0, "header": 1, "zero": 2}
+_TECH_NAME = {v: k for k, v in _TECH_ID.items()}
+_FLAG_PAD_LINE = 1
+_FLAG_PAD_BLOCK = 2
+
+
+def _log_meta(technique: str, cfg: LogConfig) -> Tuple[int, int, int, int]:
+    flags = (_FLAG_PAD_LINE if cfg.pad_to_line else 0) | (
+        _FLAG_PAD_BLOCK if cfg.pad_to_block else 0)
+    return (_TECH_ID[technique], flags, cfg.dancing, 0)
+
+
+def _log_cfg_from_meta(meta: Sequence[int], geometry: BlockGeometry,
+                       flush_kind: FlushKind) -> Tuple[str, LogConfig]:
+    technique = _TECH_NAME[meta[0]]
+    cfg = LogConfig(
+        geometry=geometry,
+        pad_to_line=bool(meta[1] & _FLAG_PAD_LINE),
+        pad_to_block=bool(meta[1] & _FLAG_PAD_BLOCK),
+        dancing=int(meta[2]) or 1,
+        flush_kind=flush_kind,
+    )
+    return technique, cfg
+
+
+class Handle:
+    """Base of every pool handle: name/record access and a stats window."""
+
+    def __init__(self, pool: "Pool", record: RegionRecord) -> None:
+        self.pool = pool
+        self.record = record
+        self._stats0 = pool.pmem.stats.snapshot()
+        self._closed = False
+
+    # -- identity ---------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.record.name
+
+    @property
+    def base(self) -> int:
+        return self.record.base
+
+    @property
+    def length(self) -> int:
+        return self.record.length
+
+    # -- lifecycle --------------------------------------------------------
+    def stats(self) -> PMemStats:
+        """Exact op counts accrued on the pool since this handle was opened
+        (or since :meth:`reset_stats`)."""
+        return self.pool.pmem.stats.delta(self._stats0)
+
+    def reset_stats(self) -> None:
+        self._stats0 = self.pool.pmem.stats.snapshot()
+
+    def close(self) -> None:
+        """Drop volatile state. The durable region stays; reopen by name."""
+        self._closed = True
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(f"handle {self.name!r} is closed")
+
+
+class LogHandle(Handle):
+    """One interface over the three log techniques, recovery included.
+
+    Created by :meth:`Pool.log`. ``append()`` costs exactly
+    ``barriers_per_append`` persistency barriers (1 for Zero, 2 for
+    Header/Classic); ``recovered`` holds what recovery found at open time
+    (empty for a fresh region)."""
+
+    def __init__(self, pool: "Pool", record: RegionRecord, technique: str,
+                 cfg: LogConfig, writer, recovered: RecoveredLog) -> None:
+        super().__init__(pool, record)
+        self.technique = technique
+        self.cfg = cfg
+        self._writer = writer
+        self.recovered = recovered
+
+    # -- append path ------------------------------------------------------
+    def append(self, payload: bytes) -> int:
+        """Durably append one entry; returns its LSN."""
+        self._check_open()
+        return self._writer.append(payload)
+
+    @property
+    def tail(self) -> int:
+        return self._writer.tail
+
+    @property
+    def next_lsn(self) -> int:
+        return self._writer.next_lsn
+
+    @property
+    def barriers_per_append(self) -> int:
+        return self._writer.BARRIERS_PER_APPEND
+
+    @property
+    def capacity(self) -> int:
+        return self.record.length
+
+    # -- recovery ---------------------------------------------------------
+    def recover(self) -> RecoveredLog:
+        """Re-run recovery against the current *durable* image (what a
+        restart would see right now)."""
+        cls = LOG_TECHNIQUES[self.technique]
+        return cls.recover(self.pool.pmem, self.base, self.length, self.cfg)
+
+    def reset(self) -> None:
+        """Start a new log generation: durably re-zero the region (Zero
+        logging requires it; the others tolerate it) and restart the writer
+        at LSN 1. Bulk streaming traffic, not barrier-bound."""
+        self._check_open()
+        pm = self.pool.pmem
+        off, end = self.base, self.base + self.length
+        while off < end:
+            n = min(1 << 20, end - off)
+            pm.store(off, np.zeros(n, dtype=np.uint8), streaming=True)
+            off += n
+        pm.sfence()
+        cls = LOG_TECHNIQUES[self.technique]
+        self._writer = cls(pm, self.base, self.length, self.cfg)
+        self.recovered = RecoveredLog([], [], self._writer.tail, 1)
+
+
+class PagesHandle(Handle):
+    """Failure-atomic page region: CoW(+pvn) / µLog / hybrid flushing.
+
+    Wraps a :class:`PageStore` (and its :class:`HybridPolicy`) whose layout
+    — slot array plus µlogs — lives entirely inside this region."""
+
+    def __init__(self, pool: "Pool", record: RegionRecord,
+                 store: PageStore) -> None:
+        super().__init__(pool, record)
+        self.store = store
+
+    # layout / policy passthroughs ---------------------------------------
+    @property
+    def layout(self) -> PageStoreLayout:
+        return self.store.layout
+
+    @property
+    def policy(self):
+        return self.store.policy
+
+    @property
+    def table(self) -> Dict[int, Tuple[int, int]]:
+        return self.store.table
+
+    @property
+    def npages(self) -> int:
+        return self.store.layout.npages
+
+    @property
+    def page_size(self) -> int:
+        return self.store.layout.page_size
+
+    # flush / read --------------------------------------------------------
+    def flush(self, pid: int, page: np.ndarray,
+              dirty_lines: Optional[Sequence[int]] = None) -> str:
+        self._check_open()
+        return self.store.flush(pid, page, dirty_lines=dirty_lines)
+
+    def flush_cow(self, pid: int, page: np.ndarray, **kw) -> None:
+        self._check_open()
+        self.store.flush_cow(pid, page, **kw)
+
+    def flush_mulog(self, pid: int, page: np.ndarray,
+                    dirty_lines: Sequence[int], **kw) -> None:
+        self._check_open()
+        self.store.flush_mulog(pid, page, dirty_lines, **kw)
+
+    def read_page(self, pid: int) -> np.ndarray:
+        return self.store.read_page(pid)
+
+    def durable_page(self, pid: int) -> Optional[np.ndarray]:
+        return self.store.durable_page(pid)
+
+
+class RawHandle(Handle):
+    """An untyped byte range with handle-relative addressing — for small
+    fixed structures (roots, superblock-like records) that a consumer
+    commits with its own protocol."""
+
+    def _span(self, off: int, size: int) -> None:
+        if off < 0 or size < 0 or off + size > self.length:
+            raise ValueError(
+                f"access [{off}, {off + size}) outside region "
+                f"{self.name!r} of {self.length} B")
+
+    def store(self, off: int, data: bytes | np.ndarray, *,
+              streaming: bool = False) -> None:
+        self._check_open()
+        data = np.frombuffer(bytes(data), dtype=np.uint8) \
+            if not isinstance(data, np.ndarray) else data
+        self._span(off, data.size)
+        self.pool.pmem.store(self.base + off, data, streaming=streaming)
+
+    def load(self, off: int, size: int, **kw) -> np.ndarray:
+        self._span(off, size)
+        return self.pool.pmem.load(self.base + off, size, **kw)
+
+    def persist(self, off: int, size: int,
+                kind: FlushKind = FlushKind.CLWB) -> None:
+        self._span(off, size)
+        self.pool.pmem.persist(self.base + off, size, kind=kind)
+
+    def durable_view(self) -> np.ndarray:
+        return self.pool.pmem.durable_slice(self.base, self.length)
+
+
+class Pool:
+    """One PMem region + durable directory + uniform handles."""
+
+    def __init__(self, pmem: PMem, directory: RegionDirectory) -> None:
+        self.pmem = pmem
+        self.directory = directory
+
+    # ------------------------------------------------------------ basics
+
+    @property
+    def geometry(self) -> BlockGeometry:
+        return self.pmem.geometry
+
+    @property
+    def path(self) -> Optional[str]:
+        return self.pmem.path
+
+    @property
+    def size(self) -> int:
+        return self.pmem.size
+
+    @property
+    def free_bytes(self) -> int:
+        return self.directory.free_bytes
+
+    def regions(self) -> Dict[str, RegionRecord]:
+        return dict(self.directory.records)
+
+    def fsync(self) -> None:
+        self.pmem.fsync()
+
+    @property
+    def stats(self) -> PMemStats:
+        return self.pmem.stats
+
+    @staticmethod
+    def overhead_bytes(geometry: BlockGeometry = PAPER_GEOMETRY,
+                       max_regions: int = DEFAULT_MAX_REGIONS) -> int:
+        """Directory bytes at the head of a pool — add this when sizing a
+        region for a known payload."""
+        return directory_bytes(geometry, max_regions)
+
+    # --------------------------------------------------------- lifecycle
+
+    @classmethod
+    def create(cls, path: Optional[str], size: int, *,
+               geometry: BlockGeometry = PAPER_GEOMETRY,
+               max_regions: int = DEFAULT_MAX_REGIONS) -> "Pool":
+        """Format a fresh pool (``path=None`` → volatile in-memory region,
+        used by simulations and benchmarks)."""
+        pmem = PMem(size, path=path, geometry=geometry)
+        pmem.memset_zero()
+        directory = RegionDirectory.format(pmem, max_regions=max_regions)
+        return cls(pmem, directory)
+
+    @classmethod
+    def open(cls, path: Optional[str] = None, *,
+             pmem: Optional[PMem] = None) -> "Pool":
+        """Open an existing pool from a file (geometry and size come from
+        the superblock) or attach to a live :class:`PMem` (crash tests)."""
+        if pmem is None:
+            if path is None:
+                raise ValueError("Pool.open needs a path or a pmem")
+            sb = probe_file(path)
+            if sb is None:
+                if not os.path.exists(path):
+                    raise FileNotFoundError(path)
+                # existing-but-unreadable is corruption, not absence — a
+                # try/except FileNotFoundError → create() fallback must
+                # never format over a damaged pool
+                raise ValueError(f"{path} exists but is not a formatted "
+                                 f"pool (bad or torn superblock)")
+            cache_line, block, _max_regions, size = sb
+            actual = os.path.getsize(path)
+            if actual != size:
+                # never let PMem's size-mismatch branch recreate (truncate)
+                # the file on what must be a read path
+                raise ValueError(
+                    f"{path}: superblock says {size} B but file is "
+                    f"{actual} B — refusing to open a truncated/grown pool")
+            pmem = PMem(size, path=path,
+                        geometry=BlockGeometry(cache_line=cache_line,
+                                               block=block))
+        return cls(pmem, RegionDirectory.load(pmem))
+
+    @classmethod
+    def open_or_create(cls, path: str, size: int, *,
+                       geometry: BlockGeometry = PAPER_GEOMETRY,
+                       max_regions: int = DEFAULT_MAX_REGIONS) -> "Pool":
+        if probe_file(path) is not None:
+            return cls.open(path)
+        if os.path.exists(path) and os.path.getsize(path) > 0:
+            # an existing non-pool file is someone's data, not ours to format
+            raise ValueError(
+                f"{path} exists but is not a formatted pool; refusing to "
+                f"overwrite it (delete it or pick another path)")
+        return cls.create(path, size, geometry=geometry,
+                          max_regions=max_regions)
+
+    @classmethod
+    def attach(cls, pmem: PMem,
+               max_regions: int = DEFAULT_MAX_REGIONS) -> "Pool":
+        """Adopt a caller-owned PMem: open the directory if one is present,
+        else format in place (the legacy-constructor shim path).
+
+        Formatting is refused if the would-be directory span holds any
+        nonzero durable byte — that is somebody's pre-pool data (e.g. a
+        pre-directory legacy image), and formatting would zero it."""
+        if RegionDirectory.is_formatted(pmem):
+            return cls(pmem, RegionDirectory.load(pmem))
+        span = directory_bytes(pmem.geometry, max_regions)
+        if pmem.durable_slice(0, min(span, pmem.size)).any():
+            raise ValueError(
+                "region head holds durable data but no pool directory — "
+                "refusing to format over it (zero the region explicitly to "
+                "adopt it as a pool)")
+        return cls(pmem, RegionDirectory.format(pmem, max_regions=max_regions))
+
+    # ------------------------------------------------------------ handles
+
+    def log(self, name: str, capacity: Optional[int] = None,
+            technique: Optional[str] = None,
+            cfg: Optional[LogConfig] = None) -> LogHandle:
+        """Open-or-create a named log region.
+
+        Create path (region absent): ``capacity`` is required; ``technique``
+        defaults to ``"zero"``. Open path: layout-relevant parameters come
+        from the durable directory record; passing a conflicting
+        ``technique``/``cfg`` raises. ``cfg.flush_kind`` is volatile and
+        honored either way."""
+        rec = self.directory.lookup(name)
+        flush_kind = cfg.flush_kind if cfg is not None else FlushKind.NT
+        if rec is None:
+            if capacity is None:
+                raise ValueError(f"creating log {name!r} requires capacity=")
+            technique = technique or "zero"
+            if technique not in LOG_TECHNIQUES:
+                raise ValueError(f"unknown log technique {technique!r}")
+            cfg = dataclasses.replace(cfg or LogConfig(),
+                                      geometry=self.geometry)
+            rec = self.directory.allocate(name, KIND_LOG, int(capacity),
+                                          _log_meta(technique, cfg))
+            cls = LOG_TECHNIQUES[technique]
+            writer = cls(self.pmem, rec.base, rec.length, cfg)
+            recovered = RecoveredLog([], [], writer.tail, 1)
+            return LogHandle(self, rec, technique, cfg, writer, recovered)
+
+        rec = self.directory.require(name, KIND_LOG)
+        if capacity is not None and rec.length < capacity:
+            raise ValueError(
+                f"log {name!r} holds {rec.length} B, caller asked for "
+                f"{capacity} B — the durable region cannot grow")
+        stored_tech, stored_cfg = _log_cfg_from_meta(rec.meta, self.geometry,
+                                                     flush_kind)
+        if technique is not None and technique != stored_tech:
+            raise ValueError(
+                f"log {name!r} was created with technique "
+                f"{stored_tech!r}, not {technique!r}")
+        if cfg is not None and (
+            (cfg.pad_to_line, cfg.pad_to_block, cfg.dancing)
+            != (stored_cfg.pad_to_line, stored_cfg.pad_to_block,
+                stored_cfg.dancing)
+        ):
+            raise ValueError(f"log {name!r}: cfg conflicts with the durable "
+                             f"directory record")
+        cls = LOG_TECHNIQUES[stored_tech]
+        writer, recovered = cls.open_for_append(self.pmem, rec.base,
+                                                rec.length, stored_cfg)
+        return LogHandle(self, rec, stored_tech, stored_cfg, writer, recovered)
+
+    def pages(self, name: str, npages: Optional[int] = None,
+              page_size: Optional[int] = None, *,
+              nslots: Optional[int] = None, n_mulogs: int = 1,
+              threads: int = 1) -> PagesHandle:
+        """Open-or-create a named failure-atomic page region (slot array +
+        µlogs). Geometry-tagged via the pool; on open, the slot table is
+        rebuilt from slot headers and valid µlogs are replayed."""
+        rec = self.directory.lookup(name)
+        if rec is None:
+            if npages is None or page_size is None:
+                raise ValueError(
+                    f"creating pages {name!r} requires npages= and page_size=")
+            nslots = nslots if nslots is not None else npages + max(2, npages // 4)
+            layout = PageStoreLayout(base=0, page_size=page_size,
+                                     npages=npages, nslots=nslots,
+                                     geometry=self.geometry)
+            length = PageStore.region_bytes(layout, n_mulogs=n_mulogs)
+            rec = self.directory.allocate(
+                name, KIND_PAGES, length,
+                (page_size, npages, nslots, n_mulogs))
+            layout = dataclasses.replace(layout, base=rec.base)
+            store = PageStore(self.pmem, layout, n_mulogs=n_mulogs,
+                              threads=threads)
+            return PagesHandle(self, rec, store)
+
+        rec = self.directory.require(name, KIND_PAGES)
+        m_page, m_npages, m_nslots, m_mulogs = rec.meta
+        for arg, stored, what in ((npages, m_npages, "npages"),
+                                  (page_size, m_page, "page_size"),
+                                  (nslots, m_nslots, "nslots")):
+            if arg is not None and arg != stored:
+                raise ValueError(f"pages {name!r}: {what}={arg} conflicts "
+                                 f"with durable record ({stored})")
+        layout = PageStoreLayout(base=rec.base, page_size=m_page,
+                                 npages=m_npages, nslots=m_nslots,
+                                 geometry=self.geometry)
+        store = PageStore.open(self.pmem, layout, n_mulogs=m_mulogs,
+                               threads=threads)
+        return PagesHandle(self, rec, store)
+
+    def pages_layout(self, name: str) -> PageStoreLayout:
+        """The durable layout of an existing pages region, without opening
+        it (opening replays µlogs; verification passes may need the image
+        untouched first)."""
+        rec = self.directory.require(name, KIND_PAGES)
+        m_page, m_npages, m_nslots, _ = rec.meta
+        return PageStoreLayout(base=rec.base, page_size=m_page,
+                               npages=m_npages, nslots=m_nslots,
+                               geometry=self.geometry)
+
+    def raw(self, name: str, nbytes: Optional[int] = None) -> RawHandle:
+        """Open-or-create a named untyped region."""
+        rec = self.directory.lookup(name)
+        if rec is None:
+            if nbytes is None:
+                raise ValueError(f"creating raw {name!r} requires nbytes=")
+            rec = self.directory.allocate(
+                name, KIND_RAW, align_up(nbytes, self.geometry.block))
+        else:
+            rec = self.directory.require(name, KIND_RAW)
+            if nbytes is not None and nbytes > rec.length:
+                raise ValueError(f"raw {name!r} holds {rec.length} B, "
+                                 f"wanted {nbytes}")
+        return RawHandle(self, rec)
+
+    # --------------------------------------------------- typed consumers
+
+    def kv(self, name: str, cfg=None):
+        """Open-or-create a :class:`~repro.core.recovery.PersistentKV`
+        whose root / page slots / WAL are directory regions ``<name>.root``
+        / ``<name>.pages`` / ``<name>.wal``."""
+        from repro.core.recovery import KVConfig, PersistentKV
+        return PersistentKV(self, cfg or KVConfig(), name=name)
+
+    def wal(self, name: str = "train_wal", *,
+            capacity_steps: Optional[int] = None,
+            technique: Optional[str] = None):
+        """Open-or-create a training step WAL
+        (:class:`~repro.persistence.wal.TrainWAL`) on this pool.
+        ``technique`` defaults to "zero" when creating; on open the durable
+        record decides (passing one verifies it)."""
+        from repro.persistence.wal import TrainWAL
+        return TrainWAL.on_pool(self, name, capacity_steps=capacity_steps,
+                                technique=technique)

@@ -1,11 +1,10 @@
-"""Page-flush tests: barrier counts, pvn recovery, µLog replay, hybrid policy,
-and the crash-atomicity property (a page is always *some* complete version).
-"""
+"""Page-flush tests: barrier counts, pvn recovery, µLog replay, hybrid policy.
+
+The crash-atomicity properties (a page is always *some* complete version)
+live in ``test_core_pageflush_props.py`` (skipped without the ``test``
+extra)."""
 
 import numpy as np
-import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
 
 from repro.core import (
     HybridPolicy,
@@ -101,51 +100,6 @@ def test_cow_dirty_variant_reads_old_slot():
     assert pm.stats.device_read_bytes - before == PAGE  # merged old page
     s2 = PageStore.open(pm, store.layout)
     np.testing.assert_array_equal(s2.read_page(0), newp)
-
-
-# ---------------------------------------------------------------- crash prop
-#
-# Invariant (failure atomicity, §3.2): after a crash at ANY point in a flush
-# protocol with ANY eviction subset, recovery yields for each page EITHER the
-# previous version or the new version — never a torn mix.
-
-@settings(max_examples=100, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(
-    use_mulog=st.booleans(),
-    dirty=st.lists(st.integers(0, PAGE // 64 - 1), min_size=1, max_size=8, unique=True),
-    seed=st.integers(0, 2**31 - 1),
-    prob=st.sampled_from([0.0, 0.3, 0.7, 1.0]),
-)
-def test_crash_during_flush_is_atomic(use_mulog, dirty, seed, prob):
-    pm, store = make_store()
-    rng0 = np.random.default_rng(7)
-    v1 = rng0.integers(0, 255, PAGE, dtype=np.uint8) | 1  # nonzero
-    store.flush_cow(0, v1)
-    v2 = v1.copy()
-    for li in dirty:
-        v2[li * 64 : (li + 1) * 64] = rng0.integers(0, 255, 64, dtype=np.uint8)
-    if use_mulog:
-        store.flush_mulog(0, v2, dirty_lines=sorted(dirty))
-    else:
-        store.flush_cow(0, v2)
-    pm.crash(rng=np.random.default_rng(seed), evict_prob=prob)
-    s2 = PageStore.open(pm, store.layout)
-    got = np.asarray(s2.read_page(0))
-    ok_v1 = (got == v1).all()
-    ok_v2 = (got == v2).all()
-    assert ok_v1 or ok_v2, "torn page after crash"
-
-
-@settings(max_examples=50, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(seed=st.integers(0, 2**31 - 1), prob=st.sampled_from([0.0, 0.5, 1.0]))
-def test_completed_flush_survives_crash(seed, prob):
-    """A flush whose final barrier returned must be the recovered version."""
-    pm, store = make_store()
-    store.flush_cow(1, page_of(3))
-    store.flush_mulog(1, page_of(4), dirty_lines=list(range(PAGE // 64)))
-    pm.crash(rng=np.random.default_rng(seed), evict_prob=prob)
-    s2 = PageStore.open(pm, store.layout)
-    assert (np.asarray(s2.read_page(1)) == 4).all()
 
 
 # ------------------------------------------------------------------- hybrid

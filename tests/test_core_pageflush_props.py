@@ -1,0 +1,72 @@
+"""Crash-atomicity properties of the page flush protocols (hypothesis).
+
+Invariant (failure atomicity, §3.2): after a crash at ANY point in a flush
+protocol with ANY eviction subset, recovery yields for each page EITHER the
+previous version or the new version — never a torn mix.
+
+Requires the ``test`` extra; deterministic page-flush tests live in
+``test_core_pageflush.py``.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import PMem, PageStore, PageStoreLayout
+
+PAGE = 1024  # 16 lines — small pages keep property tests fast
+NPAGES = 4
+
+
+def make_store(n_mulogs=1, threads=1):
+    layout = PageStoreLayout(base=0, page_size=PAGE, npages=NPAGES, nslots=NPAGES + 2)
+    pm = PMem(layout.total_bytes + 8 * 4096)
+    pm.memset_zero()
+    return pm, PageStore(pm, layout, n_mulogs=n_mulogs, threads=threads)
+
+
+def page_of(b):
+    return np.full(PAGE, b, dtype=np.uint8)
+
+
+@settings(max_examples=100, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    use_mulog=st.booleans(),
+    dirty=st.lists(st.integers(0, PAGE // 64 - 1), min_size=1, max_size=8, unique=True),
+    seed=st.integers(0, 2**31 - 1),
+    prob=st.sampled_from([0.0, 0.3, 0.7, 1.0]),
+)
+def test_crash_during_flush_is_atomic(use_mulog, dirty, seed, prob):
+    pm, store = make_store()
+    rng0 = np.random.default_rng(7)
+    v1 = rng0.integers(0, 255, PAGE, dtype=np.uint8) | 1  # nonzero
+    store.flush_cow(0, v1)
+    v2 = v1.copy()
+    for li in dirty:
+        v2[li * 64 : (li + 1) * 64] = rng0.integers(0, 255, 64, dtype=np.uint8)
+    if use_mulog:
+        store.flush_mulog(0, v2, dirty_lines=sorted(dirty))
+    else:
+        store.flush_cow(0, v2)
+    pm.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+    s2 = PageStore.open(pm, store.layout)
+    got = np.asarray(s2.read_page(0))
+    ok_v1 = (got == v1).all()
+    ok_v2 = (got == v2).all()
+    assert ok_v1 or ok_v2, "torn page after crash"
+
+
+@settings(max_examples=50, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**31 - 1), prob=st.sampled_from([0.0, 0.5, 1.0]))
+def test_completed_flush_survives_crash(seed, prob):
+    """A flush whose final barrier returned must be the recovered version."""
+    pm, store = make_store()
+    store.flush_cow(1, page_of(3))
+    store.flush_mulog(1, page_of(4), dirty_lines=list(range(PAGE // 64)))
+    pm.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+    s2 = PageStore.open(pm, store.layout)
+    assert (np.asarray(s2.read_page(1)) == 4).all()

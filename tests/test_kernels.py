@@ -1,12 +1,12 @@
-"""Kernel validation: Pallas (interpret mode) vs pure-jnp oracles, with
-hypothesis-driven shape/dtype sweeps, plus semantic properties."""
+"""Kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Deterministic checks only; the hypothesis-driven shape/dtype sweeps live in
+``test_kernels_props.py`` (skipped without the ``test`` extra)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
 
 from repro.kernels.common import LANES, TILE_BLOCKS, as_blocks, block_rows, from_blocks
 from repro.kernels.delta_pack.kernel import delta_apply_blocked, delta_pack_blocked
@@ -33,41 +33,7 @@ def rand(rng, shape, dtype):
 
 # ------------------------------------------------------------- common layout
 
-@settings(max_examples=30, deadline=None)
-@given(n=st.integers(1, 5000), dt=st.sampled_from(["float32", "bfloat16", "int8"]))
-def test_as_blocks_roundtrip(n, dt):
-    dtype = jnp.dtype(dt)
-    x = jnp.arange(n).astype(dtype)
-    blocked, orig = as_blocks(x)
-    assert blocked.shape[2] == LANES
-    assert blocked.shape[1] == block_rows(dtype)
-    back = from_blocks(blocked, orig)
-    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
-
-
 # --------------------------------------------------------------- dirty_diff
-
-@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(
-    ntiles=st.integers(1, 4),
-    rows=st.sampled_from([8, 16]),
-    seed=st.integers(0, 999),
-    ndirty=st.integers(0, 8),
-)
-def test_dirty_diff_kernel_matches_ref(ntiles, rows, seed, ndirty):
-    rng = np.random.default_rng(seed)
-    nblocks = ntiles * TILE_BLOCKS
-    snap = rand(rng, (nblocks, rows, LANES), jnp.float32)
-    cur = np.asarray(snap).copy()
-    dirty_idx = rng.choice(nblocks, size=min(ndirty, nblocks), replace=False)
-    for b in dirty_idx:
-        cur[b, rng.integers(rows), rng.integers(LANES)] += 1.0
-    cur = jnp.asarray(cur)
-    out_k = dirty_diff_blocked(cur, snap, interpret=True)
-    out_r = dirty_diff_blocked_ref(cur, snap)
-    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
-    assert set(np.flatnonzero(np.asarray(out_k))) == set(dirty_idx.tolist())
-
 
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_dirty_blocks_op_dtypes(dtype):
@@ -86,24 +52,6 @@ def test_dirty_blocks_identical_is_clean():
 
 
 # ----------------------------------------------------------- popcnt_checksum
-
-@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(ntiles=st.integers(1, 4), seed=st.integers(0, 999))
-def test_popcnt_kernel_matches_ref_and_numpy(ntiles, seed):
-    rng = np.random.default_rng(seed)
-    nblocks = ntiles * TILE_BLOCKS
-    x_np = rng.integers(0, 2**32, size=(nblocks, 8, LANES), dtype=np.uint32)
-    x = jnp.asarray(x_np)
-    out_k = popcnt_blocked(x, interpret=True)
-    out_r = popcnt_blocked_ref(x)
-    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
-    # ground truth against numpy bit counting
-    expect = np.array(
-        [np.unpackbits(x_np[b].view(np.uint8)).sum() for b in range(nblocks)],
-        dtype=np.uint32,
-    )
-    np.testing.assert_array_equal(np.asarray(out_k), expect)
-
 
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_popcount_checksum_properties(dtype):
@@ -124,27 +72,6 @@ def test_popcount_checksum_properties(dtype):
 
 
 # ---------------------------------------------------------------- delta pack
-
-@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(
-    nblocks=st.integers(2, 24),
-    rows=st.sampled_from([8, 16]),
-    seed=st.integers(0, 999),
-)
-def test_pack_apply_kernels_match_refs(nblocks, rows, seed):
-    rng = np.random.default_rng(seed)
-    k = rng.integers(1, nblocks + 1)
-    idx = jnp.asarray(rng.choice(nblocks, size=k, replace=False).astype(np.int32))
-    src = rand(rng, (nblocks, rows, LANES), jnp.float32)
-    packed_k = delta_pack_blocked(src, idx, interpret=True)
-    packed_r = delta_pack_blocked_ref(src, idx)
-    np.testing.assert_array_equal(np.asarray(packed_k), np.asarray(packed_r))
-
-    base = rand(rng, (nblocks, rows, LANES), jnp.float32)
-    out_k = delta_apply_blocked(base, packed_k, idx, interpret=True)
-    out_r = delta_apply_blocked_ref(base, packed_r, idx)
-    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
-
 
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_delta_roundtrip_restores_buffer(dtype):
@@ -178,25 +105,6 @@ def test_apply_delta_preserves_clean_blocks():
 
 
 # ----------------------------------------------------------- flush_scan
-
-@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
-@given(ntiles=st.integers(1, 3), rows=st.sampled_from([8, 16]),
-       seed=st.integers(0, 999), ndirty=st.integers(0, 6))
-def test_flush_scan_kernel_matches_ref(ntiles, rows, seed, ndirty):
-    from repro.kernels.flush_scan.kernel import flush_scan_blocked
-    from repro.kernels.flush_scan.ref import flush_scan_blocked_ref
-    rng = np.random.default_rng(seed)
-    nblocks = ntiles * TILE_BLOCKS
-    snap = rand(rng, (nblocks, rows, LANES), jnp.float32)
-    cur = np.asarray(snap).copy()
-    for b in rng.choice(nblocks, size=min(ndirty, nblocks), replace=False):
-        cur[b, rng.integers(rows), rng.integers(LANES)] += 1.0
-    cur = jnp.asarray(cur)
-    d_k, c_k = flush_scan_blocked(cur, snap, interpret=True)
-    d_r, c_r = flush_scan_blocked_ref(cur, snap)
-    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
-    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
-
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
 def test_flush_scan_consistent_with_separate_kernels(dtype):
