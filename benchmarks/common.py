@@ -1,4 +1,5 @@
-"""Shared benchmark helpers: CSV emission + calibrated model access.
+"""Shared benchmark helpers: CSV emission + calibrated model access +
+machine-readable result collection.
 
 Numbers come from two sources, always labeled:
   - ``counts``  — exact operation counts from the functional PMem sim
@@ -7,25 +8,62 @@ Numbers come from two sources, always labeled:
     measured ratios (core/costmodel.py docstring lists every target).
 This container has no Optane hardware; wall-clock would measure the Python
 interpreter, not the algorithms.
+
+Every ``emit``/``check`` is also recorded under the current suite (set by
+``set_suite``) so ``benchmarks/run.py --json OUT`` can write a
+``BENCH_results.json`` and the perf trajectory is trackable across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import sys
-from typing import Any, Iterable
+from typing import Any, Dict, Iterable
 
 ROWS: list = []
+
+#: machine-readable mirror of everything printed, grouped per suite
+RESULTS: Dict[str, Any] = {"suites": {}, "ok": True}
+_suite = "default"
+
+
+def set_suite(name: str) -> None:
+    """Group subsequent emit()/check() calls under this suite name."""
+    global _suite
+    _suite = name
+    RESULTS["suites"].setdefault(name, {"rows": [], "checks": []})
+
+
+def _suite_rec() -> Dict[str, list]:
+    return RESULTS["suites"].setdefault(_suite, {"rows": [], "checks": []})
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """Print one CSV row: name,us_per_call,derived."""
     row = f"{name},{us_per_call:.4f},{derived}"
     ROWS.append(row)
+    _suite_rec()["rows"].append(
+        {"name": name, "us_per_call": round(us_per_call, 4), "derived": derived})
     print(row)
     sys.stdout.flush()
 
 
 def check(name: str, ok: bool, detail: str = "") -> bool:
     status = "PASS" if ok else "FAIL"
+    _suite_rec()["checks"].append(
+        {"name": name, "ok": bool(ok), "detail": detail})
+    RESULTS["ok"] = RESULTS["ok"] and bool(ok)
     print(f"# CHECK {status}: {name}  {detail}")
     return ok
+
+
+def write_json(path: str) -> None:
+    """Write the collected per-suite rows + checks as one JSON document."""
+    doc = dict(RESULTS)
+    doc["n_rows"] = sum(len(s["rows"]) for s in doc["suites"].values())
+    doc["n_checks"] = sum(len(s["checks"]) for s in doc["suites"].values())
+    doc["n_failed"] = sum(
+        1 for s in doc["suites"].values() for c in s["checks"] if not c["ok"])
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {doc['n_rows']} rows / {doc['n_checks']} checks -> {path}")

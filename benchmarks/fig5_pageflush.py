@@ -1,12 +1,14 @@
 """Paper Fig. 5: failure-atomic page flush — 16 KB pages, CoW (all lines /
-dirty lines ☆) vs µLog vs Hybrid, across dirty-line counts and threads.
+dirty lines ☆) vs µLog vs Hybrid, across dirty-line counts and threads —
+plus the repro.io engine's batched epoch flush swept over active lanes.
 
 Counts come from the functional PageStore sim (exact barriers / device
 blocks); time from the calibrated model incl. the multi-thread
 write-combining collapse that moves the µLog crossover from ≈119 dirty
 lines (1 thread) to ≈31 (7 threads). Also reproduces §3.2.1's ≈10 % win
 of pvn-CoW over invalidate-CoW, and Fig. 5(b)'s throughput peak at 7-11
-writer threads.
+writer threads — both closed-form and end-to-end through the engine's
+lane-partitioned flush queue.
 """
 
 from __future__ import annotations
@@ -140,6 +142,41 @@ def run() -> bool:
             best_t, best_rate = t, rate
     ok &= check("fig5: aggregate throughput peaks at 7-11 threads",
                 7 <= best_t <= 11, f"peak at {best_t}")
+
+    # --- repro.io engine: batched epoch flush, lane sweep ----------------
+    # The flush queue drains one epoch of dirty pages lane-partitioned;
+    # modeled time is max-over-lanes on the burst curve — same shape as
+    # (b), but now measured end-to-end on the REAL protocol (sim counts).
+    # Aggregate throughput: constant pages PER LANE (4), so the sweep
+    # measures the concurrency curve, not fixed-batch tail effects.
+    def lane_rate(lanes: int) -> float:
+        npages = 4 * lanes
+        pool = Pool.create(None, Pool.overhead_bytes()
+                           + (2 * npages + 4) * (PAGE + 4096) + 64 * 4096)
+        pages = pool.pages("fig5q", npages=npages, page_size=PAGE,
+                           nslots=2 * npages + 4)
+        page = np.arange(PAGE, dtype=np.uint8)
+        for pid in range(npages):
+            pages.flush_cow(pid, page)
+        fq = pages.flush_queue(lanes=lanes)
+        for pid in range(npages):
+            fq.enqueue(pid, page[::-1].copy())
+        rep = fq.flush_epoch()
+        return rep.pages / (rep.modeled_ns * 1e-9)
+
+    rates = {}
+    for lanes in (1, 2, 4, 7, 9, 12, 16):
+        rates[lanes] = lane_rate(lanes)
+        emit(f"fig5.engine.l{lanes}", 1e6 / rates[lanes],
+             f"{rates[lanes]:.0f}pages/s")
+    peak = max(rates, key=rates.get)
+    ok &= check("fig5: engine epoch throughput peaks at 7-11 active lanes",
+                7 <= peak <= 11, f"peak at {peak}")
+    ok &= check("fig5: engine oversaturation degrades past the peak (G4)",
+                rates[16] < rates[peak],
+                f"{rates[16]:.0f} < {rates[peak]:.0f}pages/s")
+    ok &= check("fig5: engine lanes scale below the peak (4 lanes > 2.5x 1)",
+                rates[4] > 2.5 * rates[1], f"{rates[4] / rates[1]:.2f}x")
     return ok
 
 

@@ -1,10 +1,14 @@
 """Paper Fig. 6: transaction-log throughput vs entry size —
-Classic / Header(naive & 64 dancing fields) / Zero × unpadded / padded.
+Classic / Header(naive & 64 dancing fields) / Zero × unpadded / padded —
+plus the repro.io engine's lane sweep: a lane-striped group-commit
+MultiLog vs independent single-lane logs, across 1..16 lanes.
 
 Every data point runs the REAL log writer on the functional sim (exact
 barrier / block / same-line counts) and converts counts → time with the
 calibrated model. Reproduces: padding ≈8×; Zero ≈2× Classic; naive Header
-worst (same-line size-field rewrites); dancing restores Header to Classic.
+worst (same-line size-field rewrites); dancing restores Header to Classic;
+and the Fig. 2 concurrency shape for the lane sweep (throughput rises
+near-linearly below the write-combining lane limit, then flattens).
 """
 
 from __future__ import annotations
@@ -16,6 +20,7 @@ from benchmarks.common import check, emit
 
 N_ENTRIES = 400
 CAP = 1 << 22
+LANE_SWEEP = (1, 2, 3, 4, 6, 8, 12, 16)
 
 
 def throughput(technique: str, entry_size: int, *, padded: bool,
@@ -30,6 +35,23 @@ def throughput(technique: str, entry_size: int, *, padded: bool,
         log.append(payload)
     ns = COST_MODEL.time_ns(log.stats(), kind=FlushKind.NT,
                             pattern=AccessPattern.SEQUENTIAL, threads=1)
+    return N_ENTRIES / (ns * 1e-9)
+
+
+def lane_throughput(lanes: int, *, group_commit: int = 8,
+                    entry_size: int = 48) -> float:
+    """Modeled appends/second of a lane-striped group-commit MultiLog —
+    the engine's wall clock is the max over concurrently-active lanes."""
+    pool = Pool.create(None, CAP + Pool.overhead_bytes())
+    ml = pool.multilog("fig6", capacity=CAP // 2, lanes=lanes,
+                       technique="zero", group_commit=group_commit)
+    payload = bytes(entry_size)
+    before = pool.stats.snapshot()
+    for _ in range(N_ENTRIES):
+        ml.append(payload)
+    ml.commit()
+    ns = COST_MODEL.engine_time_ns(pool.stats.delta(before),
+                                   active_lanes=lanes)
     return N_ENTRIES / (ns * 1e-9)
 
 
@@ -66,6 +88,26 @@ def run() -> bool:
                 all(tput[("zero", s, p)] >= max(tput[("classic", s, p)],
                                                 tput[("header", s, p)])
                     for s in (64, 128, 256, 512, 1024) for p in (True, False)))
+
+    # --- repro.io engine: group-commit lane sweep (Fig. 2 shape) ---------
+    lt = {}
+    for lanes in LANE_SWEEP:
+        lt[lanes] = lane_throughput(lanes)
+        emit(f"fig6.lanes.zero.gc8.l{lanes}", 1e6 / lt[lanes],
+             f"{lt[lanes] / 1e6:.1f}M/s")
+    single = tput[("zero", 64, True)]
+    ok &= check("fig6: group commit (k=8) beats per-append barriers >2x",
+                lt[1] > 2.0 * single,
+                f"{lt[1] / 1e6:.1f} vs {single / 1e6:.1f}M/s")
+    ok &= check("fig6: lanes scale below the WC limit (2 lanes > 1.5x)",
+                lt[2] > 1.5 * lt[1], f"{lt[2] / lt[1]:.2f}x")
+    ok &= check("fig6: throughput flattens past the WC lane limit "
+                "(8 lanes < 1.25x 4 lanes, Fig. 2 shape)",
+                lt[8] < 1.25 * lt[4] and lt[8] > 0.75 * lt[4],
+                f"{lt[8] / lt[4]:.2f}x")
+    ok &= check("fig6: oversaturation does not help (16 lanes <= peak)",
+                lt[16] <= max(lt.values()),
+                f"{lt[16] / 1e6:.1f} <= {max(lt.values()) / 1e6:.1f}M/s")
     return ok
 
 

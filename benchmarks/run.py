@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark plus
 ``# CHECK PASS/FAIL`` lines for every claim validated against the paper.
-Exit code is non-zero if any check fails.
+Exit code is non-zero if any check fails. ``--json OUT`` additionally
+writes every row and check as machine-readable JSON (per-figure modeled
+times + stats), so the perf trajectory is trackable across PRs — CI
+uploads it as the ``BENCH_results.json`` artifact.
 
 Roofline/dry-run results (benchmarks/roofline.py) are included when
 artifacts/dryrun/*.json exist (produced by ``python -m repro.launch.dryrun
@@ -21,6 +24,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast sanity subset (the pool-backed sim benches: "
                          "Fig.5/Fig.6/YCSB) — used by CI")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write all rows + checks to this JSON file "
+                         "(e.g. BENCH_results.json)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -42,23 +48,31 @@ def main() -> None:
         (fig6_logging, "Fig.6 transaction log throughput", True),
         (tab_ycsb, "§3.3.2 YCSB validation", True),
     ]
+    from benchmarks import common
+
     ok = True
     for mod, title, in_smoke in suites:
         if args.smoke and not in_smoke:
             continue
         print(f"\n### {title}")
+        common.set_suite(mod.__name__.rsplit(".", 1)[-1])
         ok &= mod.run()
 
     if not args.smoke:
         art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
         if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):
             print("\n### Roofline (from dry-run artifacts)")
+            common.set_suite("roofline")
             from benchmarks import roofline
             roofline.run(art)
 
         print("\n### kernel sanity (interpret mode vs oracle)")
+        common.set_suite("kernels")
         from benchmarks import kernels_bench
         ok &= kernels_bench.run()
+
+    if args.json:
+        common.write_json(args.json)
 
     print(f"\n=== {'ALL CHECKS PASS' if ok else 'SOME CHECKS FAILED'} ===")
     if not ok:

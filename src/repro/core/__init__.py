@@ -14,6 +14,8 @@ directory and uniform named handles (``pool.log`` / ``pool.pages`` /
 - :mod:`repro.core.recovery`  — minimal buffer-managed KV engine (YCSB
   validation target), built on the pool
 - :mod:`repro.core.costmodel` — counts → time, calibrated to the paper
+  (incl. ``engine_time_ns``: lane-concurrent wall-clock for
+  :mod:`repro.io`, the lane-partitioned I/O engine built on all of this)
 """
 
 from repro.core.blocks import (  # noqa: F401

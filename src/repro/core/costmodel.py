@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 from repro.core.blocks import CACHE_LINE, PMEM_BLOCK
 from repro.core.persist import AccessPattern, FlushKind
@@ -116,6 +117,14 @@ class PMemCostModel:
     # Large sequential bursts (16 KB page flushes) saturate later than the
     # 256 B random-store microbench: Fig. 5(b) peaks at 7-11 threads.
     burst_peak_threads: int = 9
+
+    # Concurrent-lane write-combining defeat (Fig. 2a): past this many
+    # simultaneously-active writer lanes, the device's WC buffer can no
+    # longer merge small (sub-block) writes arriving interleaved from
+    # different lanes — every partial block write pays an extra read-
+    # modify-write stall on the DIMM.
+    wc_defeat_lanes: int = 4
+    wc_defeat_stall_ns: float = 320.0
 
     # ----------------------------------------------------------- helpers
 
@@ -220,6 +229,63 @@ class PMemCostModel:
         if total_ns <= 0:
             return float("inf")
         return n_ops / (total_ns * 1e-9)
+
+    # ------------------------------------------------- lane-partitioned time
+
+    def engine_time_ns(
+        self,
+        stats: PMemStats,
+        *,
+        active_lanes: Optional[int] = None,
+        kind: FlushKind = FlushKind.NT,
+        pattern: AccessPattern = AccessPattern.SEQUENTIAL,
+        burst: bool = False,
+    ) -> float:
+        """Wall-clock of a lane-partitioned engine (repro.io).
+
+        Per-lane counts (``PMemStats.lane_*``, recorded under
+        ``PMem.lane(i)``) are costed per lane and the lanes overlap: the
+        engine's wall clock is the *max* over lanes, not the sum. Device
+        service per 256 B block follows the aggregate Fig. 2 curve at
+        ``active_lanes`` concurrent writers (``burst=True`` selects the
+        large-sequential-burst curve of Fig. 5(b), peaking at 7-11 lanes);
+        past ``wc_defeat_lanes`` every *partial* block write additionally
+        pays the write-combining-defeat stall. Work not attributed to any
+        lane (setup, shared-structure commits) is serialized and added on
+        top. With no lane-attributed work at all this degrades exactly to
+        :meth:`time_ns` at ``threads=active_lanes``.
+        """
+        lanes = set()
+        for field in (stats.lane_barriers, stats.lane_lines,
+                      stats.lane_blocks_written, stats.lane_partial_blocks):
+            lanes.update(k for k, v in field.items() if v)
+        n = int(active_lanes) if active_lanes is not None else max(1, len(lanes))
+        if not lanes:
+            return self.time_ns(stats, kind=kind, pattern=pattern, threads=n)
+        scale = self.thread_scale_burst(n) if burst else self.thread_scale(n, kind)
+        per_block = self.block_write_ns_single / (scale / n)
+        barrier_ns = self.persist_latency_ns(kind, pattern) + self.barrier_ns
+        defeated = n > self.wc_defeat_lanes
+        critical = 0.0
+        for li in lanes:
+            t = stats.lane_barriers.get(li, 0) * barrier_ns
+            t += stats.lane_blocks_written.get(li, 0) * per_block
+            if defeated:
+                t += stats.lane_partial_blocks.get(li, 0) * self.wc_defeat_stall_ns
+            critical = max(critical, t)
+        # Unattributed (shared, serialized) remainder at single-writer cost.
+        shared_barriers = stats.barriers - sum(stats.lane_barriers.values())
+        shared_blocks = stats.blocks_written - sum(stats.lane_blocks_written.values())
+        shared = (shared_barriers * barrier_ns
+                  + shared_blocks * self.block_write_ns_single)
+        # Same-line stalls serialize against the in-flight WC entry wherever
+        # they occur; device reads run at the aggregate load curve.
+        shared += stats.same_line_flushes * self.same_line_stall_ns
+        shared += stats.same_line_nt * (self.same_line_stall_ns * 0.35)
+        if stats.device_read_bytes:
+            bw = self.load_bandwidth_gbps(4, n) * GiB
+            shared += stats.device_read_bytes / bw * 1e9
+        return critical + shared
 
 
 COST_MODEL = PMemCostModel()

@@ -358,13 +358,21 @@ class PageStore:
         self.table[pid] = (apply_slot, new_pvn)
 
     def flush(self, pid: int, page: np.ndarray,
-              dirty_lines: Optional[Sequence[int]] = None) -> str:
+              dirty_lines: Optional[Sequence[int]] = None, *,
+              threads: Optional[int] = None) -> str:
         """Hybrid flush: pick µLog vs CoW by the cost model. Returns the
-        technique used ("mulog" / "cow")."""
+        technique used ("mulog" / "cow").
+
+        ``threads`` overrides the constructor's writer-thread count for the
+        crossover decision — the repro.io flush queue passes the *actual*
+        number of concurrently-active lanes in the current epoch, which is
+        what moves the Fig. 5 crossover (≈119 dirty lines at 1 lane → ≈31
+        at 7) instead of a static constructor constant."""
+        t = self.threads if threads is None else int(threads)
         if dirty_lines is None or pid not in self.table:
             self.flush_cow(pid, page, dirty_lines=None)
             return "cow"
-        if self.policy.prefer_mulog(len(dirty_lines), self.threads):
+        if self.policy.prefer_mulog(len(dirty_lines), t):
             self.flush_mulog(pid, page, dirty_lines)
             return "mulog"
         self.flush_cow(pid, page)

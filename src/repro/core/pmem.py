@@ -28,9 +28,10 @@ operates on the in-memory cache layers only.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import os
-from typing import Callable, Dict, Iterable, Optional, Set
+from typing import Callable, Dict, Iterable, Iterator, Optional, Set
 
 import numpy as np
 
@@ -68,20 +69,41 @@ class PMemStats:
     same_line_flushes: int = 0    # flush of a line flushed very recently
     same_line_nt: int = 0         # nt store to a line nt-stored very recently
 
+    # Per-lane accounting (repro.io engine): work performed inside a
+    # ``PMem.lane(i)`` context is additionally attributed to lane ``i``.
+    # Lanes model concurrently-executing writers; ``costmodel.engine_time_ns``
+    # takes the max over lanes instead of summing (lane work overlaps).
+    lane_barriers: Dict[int, int] = dataclasses.field(default_factory=dict)
+    lane_lines: Dict[int, int] = dataclasses.field(default_factory=dict)
+    lane_blocks_written: Dict[int, int] = dataclasses.field(default_factory=dict)
+    lane_partial_blocks: Dict[int, int] = dataclasses.field(default_factory=dict)
+
     def snapshot(self) -> "PMemStats":
-        return dataclasses.replace(self, flushes=dict(self.flushes))
+        d = dataclasses.replace(self)
+        for f in dataclasses.fields(PMemStats):
+            v = getattr(d, f.name)
+            if isinstance(v, dict):
+                setattr(d, f.name, dict(v))
+        return d
 
     def delta(self, since: "PMemStats") -> "PMemStats":
         d = PMemStats()
         for f in dataclasses.fields(PMemStats):
-            if f.name == "flushes":
-                d.flushes = {
-                    k: self.flushes[k] - since.flushes.get(k, 0)
-                    for k in self.flushes
-                }
+            v = getattr(self, f.name)
+            if isinstance(v, dict):
+                sv = getattr(since, f.name)
+                setattr(d, f.name, {k: v[k] - sv.get(k, 0) for k in v})
             else:
-                setattr(d, f.name, getattr(self, f.name) - getattr(since, f.name))
+                setattr(d, f.name, v - getattr(since, f.name))
         return d
+
+    def active_lanes(self) -> int:
+        """Number of lanes that performed any persistent work."""
+        lanes = set()
+        for field in (self.lane_barriers, self.lane_lines,
+                      self.lane_blocks_written, self.lane_partial_blocks):
+            lanes.update(k for k, v in field.items() if v)
+        return len(lanes)
 
 
 @dataclasses.dataclass
@@ -130,7 +152,31 @@ class PMem:
         # Recently flushed / nt-stored lines for the same-line penalty.
         self._recent_flushed: collections.deque = collections.deque(maxlen=_RECENCY_WINDOW)
         self._recent_nt: collections.deque = collections.deque(maxlen=_RECENCY_WINDOW)
+        #: lane currently executing (repro.io engine); None = unattributed.
+        self._lane: Optional[int] = None
         self.stats = PMemStats()
+
+    # ----------------------------------------------------------------- lanes
+
+    @contextlib.contextmanager
+    def lane(self, lane_id: int) -> Iterator[None]:
+        """Attribute all persistent work inside the block to ``lane_id``.
+
+        Lanes model *concurrently executing* writers (the sim itself runs
+        them sequentially): each lane's barrier / line / block counts are
+        recorded separately so ``costmodel.engine_time_ns`` can take the
+        wall-clock max over lanes and apply the Fig. 2 concurrency curve
+        for the number of simultaneously-active lanes."""
+        prev = self._lane
+        self._lane = int(lane_id)
+        try:
+            yield
+        finally:
+            self._lane = prev
+
+    def _lane_add(self, field: Dict[int, int], n: int = 1) -> None:
+        if self._lane is not None and n:
+            field[self._lane] = field.get(self._lane, 0) + n
 
     # ------------------------------------------------------------------ io
 
@@ -160,6 +206,7 @@ class PMem:
         if streaming:
             self.stats.nt_stores += 1
             self.stats.nt_store_bytes += n
+            self._lane_add(self.stats.lane_lines, len(lines))
             for li in lines:
                 if li in self._recent_nt:
                     self.stats.same_line_nt += 1
@@ -208,6 +255,7 @@ class PMem:
             raise ValueError("NT is a store attribute, not a flush instruction")
         self._check(off, size)
         self.stats.flushes[kind.value] += 1
+        self._lane_add(self.stats.lane_lines, len(self._lines(off, size)))
         for li in self._lines(off, size):
             self.stats.lines_flushed += 1
             if li in self._recent_flushed:
@@ -233,6 +281,7 @@ class PMem:
         pending.update(self._wc)  # nt data wins for lines in both (later store)
         if pending:
             self.stats.barriers += 1
+            self._lane_add(self.stats.lane_barriers)
             self._commit(pending)
         self._staged.clear()
         self._wc.clear()
@@ -259,8 +308,10 @@ class PMem:
             blocks[li // lpb] = blocks.get(li // lpb, 0) + 1
         for _, nlines in blocks.items():
             self.stats.blocks_written += 1
+            self._lane_add(self.stats.lane_blocks_written)
             if nlines < lpb:
                 self.stats.partial_block_writes += 1
+                self._lane_add(self.stats.lane_partial_blocks)
 
     # --------------------------------------------------------------- crash
 

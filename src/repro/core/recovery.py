@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
+import warnings
 from typing import Dict, Set, Tuple, Union
 
 import numpy as np
@@ -54,6 +55,10 @@ class KVConfig:
     log: LogConfig = dataclasses.field(default_factory=LogConfig)
     geometry: BlockGeometry = PAPER_GEOMETRY
     auto_checkpoint: bool = True
+    #: checkpoint page flushing runs through a lane-partitioned
+    #: repro.io FlushQueue when > 1 (the Hybrid crossover then follows
+    #: the actual active-lane count of each checkpoint epoch)
+    flush_lanes: int = 1
 
     @property
     def recs_per_page(self) -> int:
@@ -77,6 +82,10 @@ class PersistentKV:
         if isinstance(pool_or_pmem, PMem):
             # deprecation shim for the legacy (pmem, cfg) constructor:
             # format-or-open a pool directly over the caller's region
+            warnings.warn(
+                "PersistentKV(pmem, cfg) raw-region construction is "
+                "deprecated; use pool.kv(name, cfg) on a repro.pool.Pool "
+                "instead", DeprecationWarning, stacklevel=2)
             pmpool = Pool.attach(pool_or_pmem)
         else:
             pmpool = pool_or_pmem
@@ -155,9 +164,18 @@ class PersistentKV:
 
         Page flushes precede the root update; a crash in between merely
         replays redo records onto already-flushed pages (idempotent puts).
+        With ``cfg.flush_lanes > 1`` the flushes run through a lane-
+        partitioned engine epoch (batched, actual-lane-count Hybrid).
         """
-        for pid, lines in sorted(self.dirty.items()):
-            self.store.flush(pid, self.pool[pid], dirty_lines=sorted(lines))
+        if self.cfg.flush_lanes > 1:
+            from repro.io.flushq import FlushQueue
+            fq = FlushQueue(self.store, lanes=self.cfg.flush_lanes)
+            for pid, lines in sorted(self.dirty.items()):
+                fq.enqueue(pid, self.pool[pid], sorted(lines))
+            fq.flush_epoch()
+        else:
+            for pid, lines in sorted(self.dirty.items()):
+                self.store.flush(pid, self.pool[pid], dirty_lines=sorted(lines))
         self.dirty.clear()
         ckpt_lsn = self.checkpoint_lsn + (self.wal.next_lsn - 1)
         self._root_gen += 1

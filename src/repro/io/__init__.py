@@ -1,0 +1,31 @@
+"""``repro.io`` — lane-partitioned concurrent I/O engine.
+
+The paper's headline results are concurrency results: bandwidth scales
+with writer threads until the device's write-combining buffer is defeated
+(Fig. 2), and both logging and page flushing are evaluated at 1-7 threads
+(Figs. 5-6). This package refactors the write path from "caller touches
+PMem directly" to "caller submits to an engine that schedules lanes,
+batches and barriers":
+
+- :mod:`repro.io.multilog` — :class:`MultiLog`: appends striped over N
+  per-lane Zero/Classic/Header logs with a global LSN, group-commit
+  batching (k appends per barrier), merge-on-recovery reconstructing the
+  exact durable global prefix across lanes.
+- :mod:`repro.io.flushq`   — :class:`FlushQueue`: coalescing flush queue
+  in front of a :class:`~repro.core.pageflush.PageStore`; each epoch is
+  lane-partitioned and the Hybrid crossover uses the *actual* number of
+  active lanes.
+- :mod:`repro.io.engine`   — :class:`IOEngine`: facade allocating
+  non-overlapping lane ids and converting per-lane op counts to modeled
+  wall-clock (``costmodel.engine_time_ns``: max over lanes, Fig. 2
+  concurrency curve, write-combining-defeat penalty).
+
+Consumers: ``pool.multilog(...)`` / ``pool.wal(..., lanes=N)`` for the
+training WAL, ``CheckpointManager`` (page flushes batched per save
+epoch), ``PersistentKV`` (checkpoint flushing with ``flush_lanes``), and
+``AsyncFlusher`` (one worker lane per checkpoint shard).
+"""
+
+from repro.io.engine import IOEngine  # noqa: F401
+from repro.io.flushq import EpochReport, FlushQueue  # noqa: F401
+from repro.io.multilog import MultiLog, MultiLogRecovered  # noqa: F401

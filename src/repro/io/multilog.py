@@ -1,0 +1,257 @@
+"""Lane-partitioned log with group commit — the engine's write-side core.
+
+A :class:`MultiLog` stripes appends across N per-lane logs (each one a
+Zero/Classic/Header log in its own pool region ``<name>.lane<i>``) and
+assigns every entry a *global* LSN at submit time. Appends are buffered
+per lane and committed in batches of ``group_commit`` entries, so the
+technique's persistency barriers are amortized over the whole batch:
+Zero logging pays ONE barrier per k entries instead of one per entry.
+Lane work runs under :meth:`repro.core.pmem.PMem.lane`, so per-lane
+barrier/line/block counts land in :class:`~repro.core.pmem.PMemStats`
+and ``costmodel.engine_time_ns`` can model the lanes as concurrent.
+
+Durability contract: ``append()`` returns the entry's global LSN but the
+entry is durable only after the next :meth:`commit` (or ``sync=True``,
+or an automatic full-batch lane commit plus every *earlier* lane batch).
+What recovery guarantees is a *consistent global prefix*: the recovered
+entries are exactly global LSNs ``1..m`` for some ``m`` that covers at
+least every entry committed before the crash.
+
+Merge-on-recovery: each lane's own recovery yields a prefix of that
+lane's entries (the per-technique validity argument). Global LSNs are
+handed out round-robin, so within a lane they increase monotonically —
+the global durable prefix is the longest run ``1..m`` present across
+lanes, and everything beyond ``m`` (entries that became durable in one
+lane while an *earlier* entry died with another lane's lost batch) is
+discarded by durably re-zeroing each lane's tail back to its last kept
+entry. Without that repair, re-appending after recovery would produce
+two different entries carrying the same global LSN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.log import HeaderLog, LogConfig, RecoveredLog
+
+__all__ = ["MultiLog", "MultiLogRecovered"]
+
+_GLSN = struct.Struct("<Q")
+
+#: default number of appends batched per lane commit
+DEFAULT_GROUP_COMMIT = 8
+
+
+@dataclasses.dataclass
+class MultiLogRecovered:
+    """What merge-on-recovery found: the consistent global-LSN prefix."""
+
+    entries: List[bytes]
+    glsns: List[int]
+    next_glsn: int
+    #: entries recovered per lane *before* the merge cut
+    per_lane: List[int]
+    #: durable entries discarded because an earlier global LSN was lost
+    discarded: int
+
+
+class MultiLog:
+    """N-lane group-commit log over pool regions ``<name>.lane<i>``.
+
+    Create by passing ``capacity`` (total bytes, split evenly over
+    ``lanes``); reopen by name alone — the lane regions are discovered
+    from the pool directory and merged recovery runs automatically.
+    Region names are capped at 20 bytes, so ``name`` must leave room for
+    the ``.lane<i>`` suffix.
+    """
+
+    def __init__(self, pool, name: str, *, lanes: Optional[int] = None,
+                 capacity: Optional[int] = None,
+                 technique: Optional[str] = None,
+                 group_commit: int = DEFAULT_GROUP_COMMIT,
+                 cfg: Optional[LogConfig] = None,
+                 lane_id_base: int = 0) -> None:
+        self.pool = pool
+        self.name = name
+        self.group_commit = max(1, int(group_commit))
+        self.lane_id_base = int(lane_id_base)
+
+        existing = 0
+        while pool.directory.lookup(f"{name}.lane{existing}") is not None:
+            existing += 1
+        if existing:
+            if lanes is not None and lanes != existing:
+                raise ValueError(
+                    f"multilog {name!r} has {existing} durable lanes, "
+                    f"caller asked for {lanes}")
+            self.lanes = existing
+            self.handles = [pool.log(f"{name}.lane{i}", technique=technique,
+                                     cfg=cfg)
+                            for i in range(existing)]
+        else:
+            if capacity is None:
+                raise ValueError(
+                    f"creating multilog {name!r} requires capacity=")
+            self.lanes = int(lanes) if lanes is not None else 2
+            if self.lanes < 1:
+                raise ValueError("lanes must be >= 1")
+            per_lane = pool.geometry.pad_to_block(
+                max(1, int(capacity) // self.lanes))
+            # Fail BEFORE creating lane 0: a failure mid-loop would leak
+            # durable lane regions (directory allocations are permanent),
+            # leaving a partially-striped log behind.
+            last_name = f"{name}.lane{self.lanes - 1}"
+            if len(last_name.encode("utf-8")) > 20:
+                raise ValueError(
+                    f"multilog name {name!r} too long for {self.lanes} "
+                    f"lanes ({last_name!r} exceeds the 20 B region-name cap)")
+            if self.lanes * per_lane > pool.free_bytes:
+                raise ValueError(
+                    f"multilog {name!r}: {self.lanes} lanes x {per_lane} B "
+                    f"exceed the pool's {pool.free_bytes} free bytes")
+            self.handles = [
+                pool.log(f"{name}.lane{i}", capacity=per_lane,
+                         technique=technique or "zero", cfg=cfg)
+                for i in range(self.lanes)
+            ]
+        self.technique = self.handles[0].technique
+        self._pending: List[List[bytes]] = [[] for _ in range(self.lanes)]
+        self._rr = 0
+        self.recovered = self._merge_recovery()
+        self._next_glsn = self.recovered.next_glsn
+
+    # ------------------------------------------------------------ recovery
+
+    @staticmethod
+    def _global_prefix(per_lane_entries: List[List[bytes]]
+                       ) -> Tuple[Dict[int, Tuple[int, bytes]], int]:
+        """Decode each lane's framed entries and find the longest
+        contiguous global-LSN prefix 1..m present across lanes. Returns
+        (glsn -> (lane, payload), m). The single source of truth for the
+        merge invariant — used by both open-time recovery and the
+        read-only :meth:`recover` preview."""
+        items: Dict[int, Tuple[int, bytes]] = {}
+        for lane_i, entries in enumerate(per_lane_entries):
+            for raw in entries:
+                (glsn,) = _GLSN.unpack_from(raw)
+                items[glsn] = (lane_i, bytes(raw[_GLSN.size:]))
+        m = 0
+        while (m + 1) in items:
+            m += 1
+        return items, m
+
+    def _merge_recovery(self) -> MultiLogRecovered:
+        per_lane = [h.recovered for h in self.handles]
+        items, m = self._global_prefix([rec.entries for rec in per_lane])
+        keep = [0] * self.lanes
+        for g in range(1, m + 1):
+            keep[items[g][0]] += 1
+        discarded = 0
+        for lane_i, (h, rec) in enumerate(zip(self.handles, per_lane)):
+            extra = len(rec.entries) - keep[lane_i]
+            if extra > 0:
+                discarded += extra
+                self._truncate_lane(h, rec, keep[lane_i])
+        return MultiLogRecovered(
+            entries=[items[g][1] for g in range(1, m + 1)],
+            glsns=list(range(1, m + 1)),
+            next_glsn=m + 1,
+            per_lane=[len(r.entries) for r in per_lane],
+            discarded=discarded,
+        )
+
+    def _truncate_lane(self, handle, rec: RecoveredLog, kept: int) -> None:
+        """Durably re-zero a lane's tail beyond its ``kept``-entry prefix,
+        and rewind the writer, so discarded global LSNs can be re-issued."""
+        keep_end = rec.offsets[kept] if kept < len(rec.offsets) else rec.tail
+        span = rec.tail - keep_end
+        pm = self.pool.pmem
+        if span > 0:
+            pm.store(handle.base + keep_end, np.zeros(span, dtype=np.uint8),
+                     streaming=True)
+            pm.sfence()
+        w = handle._writer
+        w.tail = keep_end
+        w.next_lsn = kept + 1
+        if isinstance(w, HeaderLog):
+            # a stale (larger) durable size slot is harmless: recovery
+            # stops at the zeroed bytes regardless (n == 0 breaks the scan)
+            w._size = keep_end - w._data_start()
+        handle.recovered = RecoveredLog(
+            rec.entries[:kept], rec.lsns[:kept], keep_end, kept + 1,
+            rec.offsets[:kept])
+
+    # -------------------------------------------------------------- append
+
+    def append(self, payload: bytes, *, sync: bool = False) -> int:
+        """Submit one entry; returns its global LSN immediately.
+
+        The entry becomes durable at the next :meth:`commit` (``sync=True``
+        issues one right away). A lane whose buffer reaches ``group_commit``
+        entries commits that batch automatically."""
+        glsn = self._next_glsn
+        self._next_glsn += 1
+        lane = self._rr
+        self._rr = (self._rr + 1) % self.lanes
+        self._pending[lane].append(_GLSN.pack(glsn) + payload)
+        if sync:
+            self.commit()
+        elif len(self._pending[lane]) >= self.group_commit:
+            self._commit_lane(lane)
+        return glsn
+
+    def _commit_lane(self, lane: int) -> None:
+        batch = self._pending[lane]
+        if not batch:
+            return
+        with self.pool.pmem.lane(self.lane_id_base + lane):
+            self.handles[lane].append_batch(batch)
+        self._pending[lane] = []
+
+    def commit(self) -> None:
+        """Group-commit every buffered entry on every lane. After this
+        returns, all previously appended entries are durable."""
+        for lane in range(self.lanes):
+            self._commit_lane(lane)
+
+    def close(self, *, commit: bool = True) -> None:
+        if commit:
+            self.commit()
+        for h in self.handles:
+            h.close()
+
+    # --------------------------------------------------------------- misc
+
+    @property
+    def pending(self) -> int:
+        return sum(len(b) for b in self._pending)
+
+    @property
+    def next_glsn(self) -> int:
+        return self._next_glsn
+
+    def recover(self) -> MultiLogRecovered:
+        """Re-run merged recovery against the current durable image (what
+        a restart would see right now). Read-only: no truncation repair —
+        the returned prefix is what a fresh open would keep."""
+        items, m = self._global_prefix(
+            [h.recover().entries for h in self.handles])
+        return MultiLogRecovered(
+            entries=[items[g][1] for g in range(1, m + 1)],
+            glsns=list(range(1, m + 1)),
+            next_glsn=m + 1,
+            per_lane=[],
+            discarded=len(items) - m,
+        )
+
+    def stats(self):
+        """Pool-wide op-count delta since the first lane handle opened."""
+        return self.handles[0].stats()
+
+    def reset_stats(self) -> None:
+        for h in self.handles:
+            h.reset_stats()

@@ -74,6 +74,10 @@ class TrainerConfig:
     remat: bool = True
     resume: bool = True
     async_flush: bool = True
+    # repro.io engine: >1 stripes the WAL over that many zero-log lanes
+    # and amortizes `wal_group_commit` steps per persistency barrier
+    wal_lanes: int = 1
+    wal_group_commit: int = 1
 
 
 class Trainer:
@@ -88,10 +92,12 @@ class Trainer:
         # --- persistence ------------------------------------------------
         wal_path = os.path.join(tc.out, "wal.pmem")
         self.wal_pool = Pool.open_or_create(
-            wal_path, TrainWAL.capacity_for(tc.wal_capacity_steps))
+            wal_path, TrainWAL.capacity_for(tc.wal_capacity_steps,
+                                            lanes=tc.wal_lanes))
         self.wal_pmem = self.wal_pool.pmem
         self.wal = self.wal_pool.wal(
-            "train_wal", capacity_steps=tc.wal_capacity_steps)
+            "train_wal", capacity_steps=tc.wal_capacity_steps,
+            lanes=tc.wal_lanes, group_commit=tc.wal_group_commit)
         self.manager = CheckpointManager(
             os.path.join(tc.out, "ckpt.pmem"),
             CheckpointConfig(page_size=128 * 1024))
@@ -142,16 +148,20 @@ class Trainer:
                 self.params, self.opt_state, batch)
             loss = float(metrics["loss"])
             losses.append(loss)
-            # WAL commit: ONE barrier on the critical path (Zero logging)
+            # WAL commit: ONE barrier on the critical path (Zero logging);
+            # with group commit enabled, steps buffer and the barrier is
+            # amortized per batch (crash loses at most a replayable tail)
             self.wal.commit_step(StepRecord(
                 step + 1, step + 1, (0, 0), loss,
-                float(metrics["grad_norm"]), 1.0, time.time_ns()))
+                float(metrics["grad_norm"]), 1.0, time.time_ns()),
+                sync=tc.wal_group_commit <= 1)
             if (step + 1) % tc.ckpt_every == 0:
                 state = self._ckpt_state()
                 if self.flusher is not None:
                     self.flusher.submit(step + 1, state)
                 else:
                     self.manager.save(step + 1, state)
+        self.wal.flush()   # drain any group-commit-buffered steps
         if self.flusher is not None:
             reports = self.flusher.wait()
         else:

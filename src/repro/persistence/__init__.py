@@ -13,7 +13,7 @@ regions); the training WAL is a pool log region (``pool.wal(name)``).
   logging: one durability barrier per training step).
 - :mod:`repro.persistence.flusher`    — asynchronous background flushing,
   overlapped with training (guideline G5: stage in DRAM, bound writer
-  concurrency per G4).
+  concurrency per G4; one repro.io worker lane per checkpoint shard).
 - :mod:`repro.persistence.restore`    — crash recovery + elastic re-shard.
 """
 

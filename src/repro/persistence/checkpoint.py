@@ -86,6 +86,8 @@ class SaveReport:
     barriers: int = 0
     blocks_written: int = 0
     modeled_ns: float = 0.0
+    #: flush lanes actually active in this save's epoch drain
+    active_lanes: int = 1
 
     @property
     def bytes_device(self) -> int:
@@ -110,6 +112,9 @@ class CheckpointManager:
         self.store: Optional[PageStore] = None
         self.manifest: Optional[LogHandle] = None
         self._pages: Optional[PagesHandle] = None
+        self._flushq = None                           # repro.io.FlushQueue
+        self._epoch_report: Optional[SaveReport] = None
+        self._epoch_prev_dirty: Dict[int, set] = {}
         self._layout: Optional[PageStoreLayout] = None
         self._leaf_pages: Dict[str, List[int]] = {}
         self._leaf_meta: Dict[str, Dict[str, Any]] = {}
@@ -158,6 +163,8 @@ class CheckpointManager:
             n_mulogs=cfg.threads, threads=cfg.threads)
         self.store = self._pages.store
         self._layout = self._pages.layout
+        self._flushq = self._pages.flush_queue(
+            lanes=cfg.threads, flush_fn=self._engine_flush_page)
 
     # ------------------------------------------------------------- save
 
@@ -196,46 +203,55 @@ class CheckpointManager:
         before: PMemStats = self.pmem.stats.snapshot()
         report = SaveReport(step=step)
         entry: Dict[str, Any] = {"step": step, "shard": self.shard_id, "leaves": {}}
-        new_prev_dirty: Dict[int, set] = {}
 
+        # Pass 1 — dirty scan + page build: clean pages keep their slot,
+        # dirty pages are enqueued on the engine's flush queue.
+        self._epoch_report = report
+        self._epoch_prev_dirty = {}
+        leaf_checks: Dict[str, List[int]] = {}
         for name in sorted(state):
             per_page, buf, counts = self._dirty_lines_per_page(name, state[name])
             report.bytes_logical += buf.size
             pages = self._leaf_pages[name]
             lpp = cfg.blocks_per_page
-            page_records = []
             checks = []
             for i, pid in enumerate(pages):
                 lo = i * cfg.page_size
                 page = np.zeros(cfg.page_size, dtype=np.uint8)
                 chunk = buf[lo : lo + cfg.page_size]
                 page[: chunk.size] = chunk
-                if per_page is None:
-                    dirty = set(range(lpp))          # first save / no delta
-                else:
-                    dirty = per_page.get(i, set())
                 report.pages_total += 1
                 # page checksum from the fused scan's per-block popcounts
                 # (zero padding beyond the leaf contributes 0 bits)
                 blk = counts[i * lpp : (i + 1) * lpp]
-                checksum = int((int(blk.sum(dtype=np.uint64)) + 1) & 0xFFFFFFFF)
-                if not dirty and per_page is not None:
-                    # untouched page: previous version still valid
-                    report.pages_clean += 1
-                    slot, pvn = self.store.table[pid]
-                    page_records.append([pid, slot, pvn])
-                    checks.append(checksum)
+                checks.append(int((int(blk.sum(dtype=np.uint64)) + 1) & 0xFFFFFFFF))
+                if per_page is None:
+                    # first save / no delta: full rewrite, forced CoW
+                    self._flushq.enqueue(pid, page, None, copy=False)
                     continue
-                self._flush_page(pid, page, sorted(dirty), per_page is None, report)
-                new_prev_dirty[pid] = set(dirty)
-                slot, pvn = self.store.table[pid]
-                page_records.append([pid, slot, pvn])
-                checks.append(checksum)
-            entry["leaves"][name] = dict(
-                self._leaf_meta[name], pages=page_records, checksums=checks)
+                dirty = per_page.get(i, set())
+                if not dirty:
+                    report.pages_clean += 1   # previous version still valid
+                    continue
+                self._flushq.enqueue(pid, page, sorted(dirty), copy=False)
+            leaf_checks[name] = checks
             self._snapshots[name] = buf.copy()
 
-        self._prev_dirty.update(new_prev_dirty)
+        # Pass 2 — one lane-partitioned epoch drains every dirty page; the
+        # Hybrid µLog-vs-CoW decision sees the epoch's ACTUAL active-lane
+        # count, not the constructor's thread constant.
+        epoch = self._flushq.flush_epoch()
+        report.active_lanes = max(1, epoch.active_lanes)
+        self._prev_dirty.update(self._epoch_prev_dirty)
+
+        # Pass 3 — manifest records from the post-epoch page table.
+        for name in sorted(state):
+            page_records = [[pid, *self.store.table[pid]]
+                            for pid in self._leaf_pages[name]]
+            entry["leaves"][name] = dict(
+                self._leaf_meta[name], pages=page_records,
+                checksums=leaf_checks[name])
+
         # commit: one Zero-log barrier makes the whole checkpoint durable
         self.manifest.append(json.dumps(entry).encode())
         self.pmem.fsync()
@@ -243,14 +259,28 @@ class CheckpointManager:
         delta = self.pmem.stats.delta(before)
         report.barriers = delta.barriers
         report.blocks_written = delta.blocks_written
-        report.modeled_ns = COST_MODEL.time_ns(
-            delta, kind=FlushKind.NT, pattern=AccessPattern.SEQUENTIAL,
-            threads=cfg.threads)
+        report.modeled_ns = COST_MODEL.engine_time_ns(
+            delta, active_lanes=report.active_lanes, kind=FlushKind.NT,
+            pattern=AccessPattern.SEQUENTIAL, burst=True)
         return report
 
+    def _engine_flush_page(self, pid: int, page: np.ndarray,
+                           dirty: Optional[List[int]], active: int) -> str:
+        """``flush_fn`` for the save epoch's flush queue: the shadow-slot
+        protocol of :meth:`_flush_page` with the Hybrid decision taken at
+        the epoch's actual active-lane count."""
+        force_cow = dirty is None
+        lines = list(range(self.cfg.blocks_per_page)) if force_cow else list(dirty)
+        tech = self._flush_page(pid, page, lines, force_cow,
+                                self._epoch_report, threads=active)
+        self._epoch_prev_dirty[pid] = set(lines)
+        return tech
+
     def _flush_page(self, pid: int, page: np.ndarray, dirty: List[int],
-                    force_cow: bool, report: SaveReport) -> None:
+                    force_cow: bool, report: SaveReport, *,
+                    threads: Optional[int] = None) -> str:
         store = self.store
+        t = self.cfg.threads if threads is None else threads
         shadow = self._shadow.get(pid)
         use_mulog = (
             not force_cow
@@ -258,7 +288,7 @@ class CheckpointManager:
             and shadow is not None
             and pid in store.table
             and store.policy.prefer_mulog(
-                len(set(dirty) | self._prev_dirty.get(pid, set())), self.cfg.threads)
+                len(set(dirty) | self._prev_dirty.get(pid, set())), t)
         )
         if use_mulog:
             # shadow-slot delta must cover change since v-1 = union of the
@@ -268,15 +298,16 @@ class CheckpointManager:
             store.flush_mulog(pid, page, lines, target_slot=shadow)
             self._shadow[pid] = old_current
             report.pages_mulog += 1
-        else:
-            old = store.table.get(pid)
-            store.flush_cow(pid, page, retire_old=False)
-            if old is not None:
-                prev_shadow = self._shadow.get(pid)
-                if prev_shadow is not None:
-                    store.free.append(prev_shadow)   # v-2 slot is released
-                self._shadow[pid] = old[0]
-            report.pages_cow += 1
+            return "mulog"
+        old = store.table.get(pid)
+        store.flush_cow(pid, page, retire_old=False)
+        if old is not None:
+            prev_shadow = self._shadow.get(pid)
+            if prev_shadow is not None:
+                store.free.append(prev_shadow)   # v-2 slot is released
+            self._shadow[pid] = old[0]
+        report.pages_cow += 1
+        return "cow"
 
     # ---------------------------------------------------------- restore
 
@@ -347,6 +378,8 @@ class CheckpointManager:
         self._pages = self.pool.pages("pages", threads=cfg.threads)
         self.store = self._pages.store
         self._layout = self._pages.layout
+        self._flushq = self._pages.flush_queue(
+            lanes=cfg.threads, flush_fn=self._engine_flush_page)
         referenced = set()
         for name, meta in entry["leaves"].items():
             self._leaf_pages[name] = [p[0] for p in meta["pages"]]

@@ -7,23 +7,31 @@ bounded background pool (guideline G4: over-saturating the durable tier
 degrades throughput, so writer concurrency is capped) runs the actual
 CoW/µLog flushing off the critical path.
 
-Ordering contract: saves for a given manager are serialized in submission
+Lane model (repro.io engine): the flusher runs **one worker lane per
+checkpoint shard**. A single manager keeps the original contract — saves
+serialized in submission order. A list of managers (one per shard of the
+host's state) flushes the shards concurrently, which is exactly the
+paper's multi-threaded page-flush setting (Fig. 5(b)): each shard's
+:class:`CheckpointManager` batches its own pages through a
+:class:`~repro.io.FlushQueue` epoch, and the per-shard worker count is
+the engine's active-lane count.
+
+Ordering contract: saves for a given shard are serialized in submission
 order (a single worker per shard region); ``wait()`` drains everything —
 the train loop calls it before intentionally stopping, and the WAL makes
 any un-flushed tail recoverable anyway.
 
 The flusher owns no layout: each :class:`CheckpointManager` manages its
 shard through its own :class:`repro.pool.Pool` (manifest + pages regions),
-so the worker thread only ever calls ``manager.save``.
+so the worker threads only ever call ``manager.save``.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Sequence, Union
 
-import jax
 import numpy as np
 
 from repro.persistence.checkpoint import CheckpointManager, SaveReport
@@ -32,29 +40,60 @@ __all__ = ["AsyncFlusher"]
 
 
 class AsyncFlusher:
-    """Background flusher for one :class:`CheckpointManager`."""
+    """Background flusher: one worker lane per checkpoint shard."""
 
-    def __init__(self, manager: CheckpointManager, *, max_pending: int = 2) -> None:
-        self.manager = manager
-        self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
-        self.reports: List[SaveReport] = []
+    def __init__(self,
+                 managers: Union[CheckpointManager, Sequence[CheckpointManager]],
+                 *, max_pending: int = 2) -> None:
+        if isinstance(managers, CheckpointManager):
+            managers = [managers]
+        self.managers: List[CheckpointManager] = list(managers)
+        if not self.managers:
+            raise ValueError("AsyncFlusher needs at least one manager")
+        #: first shard's manager — kept for the single-shard call sites
+        self.manager = self.managers[0]
+        self._queues: List["queue.Queue"] = [
+            queue.Queue(maxsize=max_pending) for _ in self.managers
+        ]
+        self._reports: List[List[SaveReport]] = [[] for _ in self.managers]
         self.errors: List[BaseException] = []
-        self._worker = threading.Thread(target=self._run, daemon=True)
-        self._worker.start()
+        self._workers = [
+            threading.Thread(target=self._run, args=(i,), daemon=True)
+            for i in range(len(self.managers))
+        ]
+        for w in self._workers:
+            w.start()
 
-    def _run(self) -> None:
+    @property
+    def lanes(self) -> int:
+        return len(self.managers)
+
+    @property
+    def reports(self) -> List[SaveReport]:
+        """All completed saves: submission order within a shard; across
+        shards, ordered by (step, shard)."""
+        if len(self._reports) == 1:
+            return list(self._reports[0])
+        merged = [
+            (r.step, shard, r)
+            for shard, reps in enumerate(self._reports) for r in reps
+        ]
+        return [r for _, _, r in sorted(merged, key=lambda t: (t[0], t[1]))]
+
+    def _run(self, lane: int) -> None:
+        q = self._queues[lane]
         while True:
-            item = self._q.get()
+            item = q.get()
             if item is None:
-                self._q.task_done()
+                q.task_done()
                 return
             step, state = item
             try:
-                self.reports.append(self.manager.save(step, state))
+                self._reports[lane].append(self.managers[lane].save(step, state))
             except BaseException as e:  # surfaced on wait()
                 self.errors.append(e)
             finally:
-                self._q.task_done()
+                q.task_done()
 
     @staticmethod
     def stage(state: Dict[str, Any]) -> Dict[str, np.ndarray]:
@@ -63,21 +102,34 @@ class AsyncFlusher:
         after submit()."""
         return {k: np.array(v, copy=True) for k, v in state.items()}
 
-    def submit(self, step: int, state: Dict[str, Any]) -> None:
-        """Stage and enqueue; blocks only if ``max_pending`` saves are
-        already in flight (back-pressure instead of unbounded host RAM)."""
-        self._q.put((step, self.stage(state)))
+    def submit(self, step: int, state: Dict[str, Any], *, shard: int = 0) -> None:
+        """Stage and enqueue one shard's save; blocks only if that shard
+        already has ``max_pending`` saves in flight (back-pressure instead
+        of unbounded host RAM)."""
+        self._queues[shard].put((step, self.stage(state)))
+
+    def submit_all(self, step: int, states: Sequence[Dict[str, Any]]) -> None:
+        """Stage and enqueue one save per shard (lane-parallel flush)."""
+        if len(states) != len(self.managers):
+            raise ValueError(
+                f"{len(states)} shard states for {len(self.managers)} managers")
+        for shard, state in enumerate(states):
+            self.submit(step, state, shard=shard)
 
     def wait(self) -> List[SaveReport]:
-        self._q.join()
+        for q in self._queues:
+            q.join()
         if self.errors:
             raise self.errors[0]
         return self.reports
 
     def close(self) -> List[SaveReport]:
-        self._q.put(None)
-        self._q.join()
-        self._worker.join(timeout=60)
+        for q in self._queues:
+            q.put(None)
+        for q in self._queues:
+            q.join()
+        for w in self._workers:
+            w.join(timeout=60)
         if self.errors:
             raise self.errors[0]
         return self.reports

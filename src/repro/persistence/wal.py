@@ -13,15 +13,19 @@ replaying the pipeline deterministically with no re-read of earlier batches.
 
 Construction goes through :class:`repro.pool.Pool` — ``pool.wal(name)`` or
 :meth:`TrainWAL.on_pool` — which open-or-create a named log region and
-recover automatically. The legacy ``TrainWAL(pmem, 0, capacity)`` signature
-survives as a deprecation shim that formats/attaches a pool over the given
-region in place.
+recover automatically. ``pool.wal(name, lanes=N, group_commit=k)`` runs
+the WAL on the repro.io engine's :class:`~repro.io.MultiLog` instead: N
+zero-log lanes, k steps amortized per persistency barrier (data-parallel
+trainers whose replicas commit steps concurrently). The legacy
+``TrainWAL(pmem, 0, capacity)`` signature survives as a deprecation shim
+that formats/attaches a pool over the given region in place.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import struct
+import warnings
 from typing import List, Optional, Tuple
 
 __all__ = ["StepRecord", "TrainWAL"]
@@ -77,6 +81,10 @@ class TrainWAL:
             # directory lives at the head, so base must be 0; the log gets
             # whatever the directory does not use (clamped to `capacity`).
             from repro.pool import Pool
+            warnings.warn(
+                "TrainWAL(pmem, base, capacity) raw-region construction is "
+                "deprecated; use pool.wal(name) / TrainWAL.on_pool(pool, "
+                "name) instead", DeprecationWarning, stacklevel=2)
             if pmem is None:
                 raise TypeError("TrainWAL needs a pool handle or a PMem")
             if base != 0:
@@ -97,7 +105,9 @@ class TrainWAL:
                           pool.free_bytes)
                 _handle = pool.log(self._LEGACY_REGION, capacity=cap,
                                    technique=technique)
+        from repro.io.multilog import MultiLog
         self.log = _handle
+        self._multilog = isinstance(_handle, MultiLog)
         self.technique = _handle.technique
         self.records: List[StepRecord] = [
             StepRecord.unpack(e) for e in _handle.recovered.entries
@@ -106,15 +116,53 @@ class TrainWAL:
     @classmethod
     def on_pool(cls, pool, name: str = "train_wal", *,
                 capacity_steps: Optional[int] = None,
-                technique: Optional[str] = None) -> "TrainWAL":
+                technique: Optional[str] = None,
+                lanes: int = 1, group_commit: int = 1) -> "TrainWAL":
         """Open-or-create a named WAL region on ``pool``.
 
         ``capacity_steps`` is required when creating; on open it is
         *verified* against the durable region (a region cannot grow, so
         asking for more steps than it holds raises rather than failing
         thousands of steps later with a full log). ``technique`` defaults
-        to "zero" when creating; on open the directory record decides."""
-        if pool.directory.lookup(name) is not None:
+        to "zero" when creating; on open the directory record decides.
+
+        ``lanes > 1`` creates the WAL on a lane-striped group-commit
+        :class:`~repro.io.MultiLog` (regions ``<name>.lane<i>``): commits
+        batch ``group_commit`` steps per barrier, and ``commit_step``
+        grows a ``sync=`` knob. A WAL created multi-lane is reopened
+        multi-lane automatically (the lane regions are discovered)."""
+        from repro.io.multilog import MultiLog
+        multi_exists = pool.directory.lookup(f"{name}.lane0") is not None
+        single_exists = pool.directory.lookup(name) is not None
+        if single_exists and lanes > 1:
+            raise ValueError(
+                f"WAL {name!r} exists as a single-lane region; it cannot "
+                f"be reopened with lanes={lanes} (recreate it, or open "
+                f"with lanes=1)")
+        if multi_exists or (lanes > 1 and not single_exists):
+            if multi_exists:
+                handle = MultiLog(pool, name, technique=technique,
+                                  group_commit=group_commit)
+                if capacity_steps is not None:
+                    held = sum(h.record.length for h in handle.handles)
+                    if held < capacity_steps * _BYTES_PER_STEP:
+                        raise ValueError(
+                            f"WAL {name!r} holds {held} B across "
+                            f"{handle.lanes} lanes, caller asked for "
+                            f"{capacity_steps} steps "
+                            f"({capacity_steps * _BYTES_PER_STEP} B) — "
+                            f"durable regions cannot grow")
+            else:
+                if capacity_steps is None:
+                    raise ValueError(
+                        f"creating WAL {name!r} requires capacity_steps=")
+                capacity = (capacity_steps * _BYTES_PER_STEP
+                            + 4096 * max(1, lanes))
+                handle = MultiLog(pool, name, lanes=lanes, capacity=capacity,
+                                  technique=technique or "zero",
+                                  group_commit=group_commit)
+            return cls(_handle=handle)
+        if single_exists:
             capacity = (capacity_steps * _BYTES_PER_STEP
                         if capacity_steps is not None else None)
             handle = pool.log(name, capacity=capacity, technique=technique)
@@ -127,22 +175,41 @@ class TrainWAL:
                               technique=technique or "zero")
         return cls(_handle=handle)
 
-    def commit_step(self, record: StepRecord) -> int:
-        """Durably commit a training step (one barrier under Zero)."""
-        lsn = self.log.append(record.pack())
+    def commit_step(self, record: StepRecord, *, sync: bool = True) -> int:
+        """Commit a training step (one barrier under single-lane Zero).
+
+        On a multi-lane WAL, ``sync=False`` buffers the record for group
+        commit — it becomes durable with the next full batch or
+        :meth:`flush`; the returned LSN is assigned immediately."""
+        if self._multilog:
+            lsn = self.log.append(record.pack(), sync=sync)
+        else:
+            lsn = self.log.append(record.pack())
         self.records.append(record)
         return lsn
+
+    def flush(self) -> None:
+        """Force group commit of any buffered steps (multi-lane WAL)."""
+        if self._multilog:
+            self.log.commit()
 
     @property
     def last(self) -> Optional[StepRecord]:
         return self.records[-1] if self.records else None
 
-    def barriers_per_step(self) -> int:
+    def barriers_per_step(self) -> float:
+        """Persistency barriers per committed step — amortized over the
+        group-commit batch on a multi-lane WAL."""
+        if self._multilog:
+            per_batch = self.log.handles[0].barriers_per_append
+            return per_batch / self.log.group_commit
         return self.log.barriers_per_append
 
     @classmethod
-    def capacity_for(cls, steps: int) -> int:
+    def capacity_for(cls, steps: int, *, lanes: int = 1) -> int:
         """Bytes for a pool region holding a `steps`-step WAL (directory
-        overhead included)."""
+        overhead included; a multi-lane WAL adds per-lane slack and
+        block-padding on top of the striped capacity)."""
         from repro.pool import Pool
-        return steps * _BYTES_PER_STEP + 8192 + Pool.overhead_bytes()
+        return (steps * _BYTES_PER_STEP + 8192 + 8192 * max(1, lanes)
+                + Pool.overhead_bytes())

@@ -151,6 +151,12 @@ class LogHandle(Handle):
         self._check_open()
         return self._writer.append(payload)
 
+    def append_batch(self, payloads: Sequence[bytes]) -> list:
+        """Group commit: durably append many entries, amortizing the
+        technique's barriers over the batch (repro.io engine path)."""
+        self._check_open()
+        return self._writer.append_batch(list(payloads))
+
     @property
     def tail(self) -> int:
         return self._writer.tail
@@ -225,9 +231,20 @@ class PagesHandle(Handle):
 
     # flush / read --------------------------------------------------------
     def flush(self, pid: int, page: np.ndarray,
-              dirty_lines: Optional[Sequence[int]] = None) -> str:
+              dirty_lines: Optional[Sequence[int]] = None, *,
+              threads: Optional[int] = None) -> str:
         self._check_open()
-        return self.store.flush(pid, page, dirty_lines=dirty_lines)
+        return self.store.flush(pid, page, dirty_lines=dirty_lines,
+                                threads=threads)
+
+    def flush_queue(self, *, lanes: int = 4, lane_id_base: int = 0,
+                    flush_fn=None):
+        """A :class:`repro.io.FlushQueue` over this region: enqueue dirty
+        pages, drain once per epoch with lane-partitioned, batched flushing
+        (the Hybrid crossover then follows the actual active-lane count)."""
+        from repro.io.flushq import FlushQueue
+        return FlushQueue(self, lanes=lanes, lane_id_base=lane_id_base,
+                          flush_fn=flush_fn)
 
     def flush_cow(self, pid: int, page: np.ndarray, **kw) -> None:
         self._check_open()
@@ -523,11 +540,29 @@ class Pool:
 
     def wal(self, name: str = "train_wal", *,
             capacity_steps: Optional[int] = None,
-            technique: Optional[str] = None):
+            technique: Optional[str] = None,
+            lanes: int = 1, group_commit: int = 1):
         """Open-or-create a training step WAL
         (:class:`~repro.persistence.wal.TrainWAL`) on this pool.
         ``technique`` defaults to "zero" when creating; on open the durable
-        record decides (passing one verifies it)."""
+        record decides (passing one verifies it). ``lanes > 1`` runs the
+        WAL on a lane-striped group-commit :class:`~repro.io.MultiLog`."""
         from repro.persistence.wal import TrainWAL
         return TrainWAL.on_pool(self, name, capacity_steps=capacity_steps,
-                                technique=technique)
+                                technique=technique, lanes=lanes,
+                                group_commit=group_commit)
+
+    def multilog(self, name: str, capacity: Optional[int] = None, *,
+                 lanes: Optional[int] = None,
+                 technique: Optional[str] = None,
+                 group_commit: int = 8,
+                 cfg: Optional[LogConfig] = None):
+        """Open-or-create a lane-striped group-commit log
+        (:class:`~repro.io.MultiLog`) over regions ``<name>.lane<i>``.
+        Creating requires ``capacity`` (total, split over ``lanes``);
+        opening discovers the lanes from the directory and runs merged
+        recovery automatically."""
+        from repro.io.multilog import MultiLog
+        return MultiLog(self, name, lanes=lanes, capacity=capacity,
+                        technique=technique, group_commit=group_commit,
+                        cfg=cfg)

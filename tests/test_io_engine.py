@@ -1,0 +1,339 @@
+"""repro.io engine tests: group-commit barrier amortization (the PR's
+acceptance criterion), batch-append parity, merged multi-lane recovery
+with truncation repair, batched lane-partitioned page flushing, lane
+accounting, and the legacy-shim deprecation warnings."""
+
+import numpy as np
+import pytest
+
+from repro.core import COST_MODEL, KVConfig, LOG_TECHNIQUES, PMem, PersistentKV
+from repro.io import FlushQueue, IOEngine, MultiLog
+from repro.persistence import StepRecord, TrainWAL
+from repro.pool import Pool
+
+
+def fresh_pool(size=1 << 22):
+    return Pool.create(None, size)
+
+
+# ===================================================================== batch
+
+@pytest.mark.parametrize("technique,expected", [("classic", 2), ("header", 2),
+                                                ("zero", 1)])
+def test_append_batch_barriers(technique, expected):
+    """A whole batch costs what ONE append costs in barriers."""
+    pool = fresh_pool()
+    log = pool.log("l", capacity=1 << 20, technique=technique)
+    log.append(b"warmup")
+    before = pool.stats.barriers
+    log.append_batch([bytes([i]) * 40 for i in range(16)])
+    assert pool.stats.barriers - before == expected
+
+
+@pytest.mark.parametrize("technique", ["classic", "header", "zero"])
+def test_append_batch_recovery_parity(technique):
+    """Batched appends recover identically to sequential appends."""
+    payloads = [bytes([i]) * (5 + 7 * i) for i in range(12)]
+    pool = fresh_pool()
+    log = pool.log("l", capacity=1 << 20, technique=technique)
+    log.append_batch(payloads[:5])
+    log.append(payloads[5])
+    log.append_batch(payloads[6:])
+    rec = log.recover()
+    assert rec.entries == payloads
+    assert rec.lsns == list(range(1, 13))
+    assert rec.offsets == sorted(rec.offsets)
+
+
+def test_append_batch_full_is_all_or_nothing():
+    pool = fresh_pool()
+    log = pool.log("l", capacity=1 << 10, technique="zero")
+    with pytest.raises(RuntimeError):
+        log.append_batch([bytes(64)] * 64)
+    assert log.recover().entries == []   # nothing was written
+
+
+# ================================================================== multilog
+
+def test_multilog_fewer_barriers_than_independent_lanes():
+    """ACCEPTANCE: MultiLog with group commit issues strictly fewer
+    barriers per appended entry than N independent single-lane logs."""
+    n_entries, lanes = 64, 4
+    pool = fresh_pool()
+    ml = pool.multilog("ml", capacity=1 << 20, lanes=lanes,
+                       technique="zero", group_commit=8)
+    before = pool.stats.snapshot()
+    for i in range(n_entries):
+        ml.append(bytes([i % 256]) * 48)
+    ml.commit()
+    grouped = pool.stats.delta(before).barriers
+
+    pool2 = fresh_pool()
+    logs = [pool2.log(f"l{i}", capacity=1 << 18, technique="zero")
+            for i in range(lanes)]
+    before2 = pool2.stats.snapshot()
+    for i in range(n_entries):
+        logs[i % lanes].append(bytes([i % 256]) * 48)
+    independent = pool2.stats.delta(before2).barriers
+
+    assert grouped / n_entries < independent / n_entries
+    assert independent == n_entries          # zero: 1 barrier per append
+    assert grouped == lanes * (n_entries // lanes // 8)
+
+
+def test_multilog_global_lsn_merge_recovery():
+    pool = fresh_pool()
+    ml = pool.multilog("ml", capacity=1 << 20, lanes=3, group_commit=4)
+    payloads = [b"entry-%03d" % i for i in range(25)]
+    for p in payloads:
+        ml.append(p)
+    ml.commit()
+    rec = ml.recover()
+    assert rec.entries == payloads           # glsn order, across lanes
+    assert rec.glsns == list(range(1, 26))
+
+    # reopen-by-name discovers lanes and merges
+    ml2 = pool.multilog("ml")
+    assert ml2.lanes == 3
+    assert ml2.recovered.entries == payloads
+    assert ml2.next_glsn == 26
+
+
+def test_multilog_crash_recovers_consistent_prefix_and_repairs():
+    """A lost batch in one lane cuts the global prefix; durable entries
+    beyond the gap are discarded and their lanes truncated, so appending
+    continues with no duplicate global LSNs."""
+    pool = fresh_pool()
+    ml = pool.multilog("ml", capacity=1 << 20, lanes=3, group_commit=2)
+    for i in range(6):            # glsns 1..6, all lanes auto-commit
+        ml.append(b"a%d" % i)
+    ml.commit()
+    ml.append(b"a6")              # glsn 7 -> lane 0, pending
+    ml.append(b"a7")              # glsn 8 -> lane 1, pending
+    ml._commit_lane(1)            # lane 1 commits glsn 8; glsn 7 is lost
+    pool.pmem.crash(evict=lambda li: True)   # everything in flight survives
+
+    pool2 = Pool.open(pmem=pool.pmem)
+    ml2 = pool2.multilog("ml")
+    assert ml2.recovered.glsns == [1, 2, 3, 4, 5, 6]
+    assert ml2.recovered.discarded == 1      # durable glsn 8, beyond the gap
+    assert ml2.next_glsn == 7
+    ml2.append(b"b0", sync=True)             # re-issues glsn 7
+    rec = ml2.recover()
+    assert rec.glsns == [1, 2, 3, 4, 5, 6, 7]
+    assert rec.entries[-1] == b"b0"          # not the discarded a7
+
+
+def test_multilog_lane_accounting_and_engine_time():
+    pool = fresh_pool()
+    eng = IOEngine(pool, lanes=4, group_commit=8)
+    ml = eng.multilog("ml", capacity=1 << 20)
+    before = pool.stats.snapshot()
+    for i in range(32):
+        ml.append(bytes(48))
+    ml.commit()
+    d = pool.stats.delta(before)
+    assert d.active_lanes() == 4
+    assert sum(d.lane_barriers.values()) == d.barriers
+    assert sum(d.lane_blocks_written.values()) == d.blocks_written
+    # overlapping lanes: engine wall-clock < serialized wall-clock
+    assert (COST_MODEL.engine_time_ns(d, active_lanes=4)
+            < COST_MODEL.time_ns(d, threads=1))
+
+
+def test_multilog_lane_sweep_fig2_shape():
+    """Modeled throughput rises with lanes, then flattens past the
+    write-combining lane limit (Fig. 2 shape)."""
+    tput = {}
+    for lanes in (1, 2, 4, 8):
+        pool = fresh_pool(1 << 23)
+        ml = pool.multilog("s", capacity=1 << 21, lanes=lanes, group_commit=8)
+        before = pool.stats.snapshot()
+        for _ in range(256):
+            ml.append(bytes(48))
+        ml.commit()
+        ns = COST_MODEL.engine_time_ns(pool.stats.delta(before),
+                                       active_lanes=lanes)
+        tput[lanes] = 256 / ns
+    assert tput[2] > 1.5 * tput[1]           # scales below the limit
+    assert tput[4] > tput[2]
+    assert tput[8] < 1.25 * tput[4]          # flattens past the limit
+
+
+def test_multilog_create_fails_before_leaking_lane_regions():
+    """Creation validates the worst lane name and the pool space BEFORE
+    allocating lane 0 — a mid-loop failure would leak durable regions."""
+    pool = fresh_pool()
+    with pytest.raises(ValueError, match="region-name cap"):
+        pool.multilog("abcdefghijklmn", capacity=1 << 16, lanes=12)
+    with pytest.raises(ValueError, match="free bytes"):
+        pool.multilog("big", capacity=1 << 30, lanes=4)
+    assert all(not n.startswith(("abcdefghijklmn", "big"))
+               for n in pool.regions())
+
+
+def test_trainwal_lane_config_conflicts_raise():
+    pool = fresh_pool()
+    pool.wal("w", capacity_steps=50)            # single-lane
+    with pytest.raises(ValueError, match="single-lane"):
+        pool.wal("w", lanes=4)
+    pool.wal("m", capacity_steps=50, lanes=2)   # multi-lane
+    with pytest.raises(ValueError, match="cannot grow"):
+        pool.wal("m", capacity_steps=10 ** 6)
+    assert pool.wal("m", capacity_steps=50)._multilog
+
+
+# =================================================================== flushq
+
+def page_bytes(seed, size=16384):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size, dtype=np.uint8)
+
+
+def make_pages(npages=8, nslots=18, page=16384):
+    pool = Pool.create(None, Pool.overhead_bytes() + nslots * (page + 4096)
+                       + 64 * 4096)
+    return pool, pool.pages("p", npages=npages, page_size=page, nslots=nslots)
+
+
+def test_flush_queue_coalesces_same_page():
+    pool, pages = make_pages()
+    fq = pages.flush_queue(lanes=2)
+    base = page_bytes(0)
+    pages.flush_cow(0, base)
+    p1 = base.copy()
+    p1[1 * 64 : 3 * 64] ^= 0xFF              # lines 1, 2
+    fq.enqueue(0, p1, [1, 2])
+    p2 = p1.copy()
+    p2[7 * 64 : 8 * 64] ^= 0xFF              # line 7
+    fq.enqueue(0, p2, [7])
+    assert len(fq) == 1
+    rep = fq.flush_epoch()                   # one flush, dirty = {1, 2, 7}
+    assert rep.pages == 1
+    assert rep.cow + rep.mulog == 1
+    np.testing.assert_array_equal(pages.read_page(0), p2)
+
+
+def test_flush_queue_epoch_lane_partitioned():
+    pool, pages = make_pages()
+    for pid in range(8):
+        pages.flush_cow(pid, page_bytes(pid))
+    fq = pages.flush_queue(lanes=4)
+    before = pool.stats.snapshot()
+    for pid in range(8):
+        fq.enqueue(pid, page_bytes(100 + pid))
+    rep = fq.flush_epoch()
+    assert rep.pages == 8 and rep.active_lanes == 4
+    d = pool.stats.delta(before)
+    assert d.active_lanes() == 4
+    assert rep.modeled_ns == pytest.approx(
+        COST_MODEL.engine_time_ns(d, active_lanes=4, burst=True))
+    assert len(fq) == 0
+
+
+def test_flush_queue_threads_move_hybrid_crossover():
+    """The epoch's actual lane count drives the µLog-vs-CoW decision: a
+    dirty count between the 7-lane and 1-lane crossovers flushes µLog in
+    a 1-page epoch but CoW in a 7-lane epoch."""
+    pool, pages = make_pages(npages=8, nslots=18)
+    policy = pages.policy
+    dirty = (policy.crossover(7) + policy.crossover(1)) // 2
+    for pid in range(8):
+        pages.flush_cow(pid, page_bytes(pid))
+        pages.flush_cow(pid, page_bytes(pid))   # current + shadow pvn
+    assert policy.prefer_mulog(dirty, 1)
+    assert not policy.prefer_mulog(dirty, 7)
+
+    fq1 = pages.flush_queue(lanes=7)
+    fq1.enqueue(0, page_bytes(50), list(range(dirty)))
+    rep1 = fq1.flush_epoch()                  # 1 page -> 1 active lane
+    assert rep1.active_lanes == 1 and rep1.mulog == 1
+
+    fq7 = pages.flush_queue(lanes=7)
+    for pid in range(1, 8):
+        fq7.enqueue(pid, page_bytes(60 + pid), list(range(dirty)))
+    rep7 = fq7.flush_epoch()                  # 7 pages -> 7 active lanes
+    assert rep7.active_lanes == 7
+    assert rep7.cow == 7 and rep7.mulog == 0
+
+
+# ============================================================ trainwal lanes
+
+def test_trainwal_multilane_group_commit_and_recovery():
+    pool = fresh_pool()
+    wal = pool.wal("wal", capacity_steps=1000, lanes=4, group_commit=8)
+    before = pool.stats.snapshot()
+    for s in range(32):
+        wal.commit_step(StepRecord(s, s * 16, (s, s + 1), float(s), 0.1, 1.0),
+                        sync=False)
+    wal.flush()
+    barriers = pool.stats.delta(before).barriers
+    assert barriers < 32                      # amortized vs 1/step single-lane
+    assert wal.barriers_per_step() < 1
+
+    pool.pmem.crash(evict=lambda li: True)
+    pool2 = Pool.open(pmem=pool.pmem)
+    wal2 = pool2.wal("wal")                   # lanes discovered on reopen
+    assert [r.step for r in wal2.records] == list(range(32))
+    assert wal2.last.data_cursor == 31 * 16
+
+
+def test_trainwal_unsynced_tail_lost_on_crash_is_a_prefix():
+    pool = fresh_pool()
+    wal = pool.wal("wal", capacity_steps=1000, lanes=2, group_commit=16)
+    for s in range(5):
+        wal.commit_step(StepRecord(s, s, (0, 0), 0.0, 0.0, 1.0), sync=False)
+    wal.flush()
+    for s in range(5, 9):                     # buffered, never committed
+        wal.commit_step(StepRecord(s, s, (0, 0), 0.0, 0.0, 1.0), sync=False)
+    pool.pmem.crash(evict=lambda li: False)
+    pool2 = Pool.open(pmem=pool.pmem)
+    wal2 = pool2.wal("wal")
+    assert [r.step for r in wal2.records] == list(range(5))
+
+
+# =============================================================== kv lanes
+
+def test_kv_checkpoint_with_flush_lanes():
+    cfg = KVConfig(npages=8, page_size=1024, value_size=64,
+                   log_capacity=1 << 15, flush_lanes=4)
+    pool = Pool.create(None, PersistentKV.region_bytes(cfg))
+    kv = pool.kv("kv", cfg)
+    for k in range(0, 120, 3):
+        kv.put(k, bytes([k % 256]) * 64)
+    before = pool.stats.snapshot()
+    kv.checkpoint()
+    assert pool.stats.delta(before).active_lanes() == 4
+    pool.pmem.crash(evict=lambda li: False)
+    kv2 = PersistentKV.open(pool, cfg, name="kv")
+    for k in range(0, 120, 3):
+        assert kv2.get(k) == bytes([k % 256]) * 64
+
+
+# ============================================================ deprecations
+
+def test_legacy_trainwal_constructor_warns():
+    pm = PMem(TrainWAL.capacity_for(10))
+    pm.memset_zero()
+    with pytest.warns(DeprecationWarning, match="TrainWAL"):
+        TrainWAL(pm, 0, pm.size)
+
+
+def test_legacy_kv_constructor_warns():
+    cfg = KVConfig(npages=4, page_size=1024, value_size=64,
+                   log_capacity=1 << 15)
+    pm = PMem(PersistentKV.region_bytes(cfg))
+    pm.memset_zero()
+    with pytest.warns(DeprecationWarning, match="PersistentKV"):
+        PersistentKV(pm, cfg)
+
+
+def test_pool_constructors_do_not_warn():
+    pool = fresh_pool()
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        cfg = KVConfig(npages=4, page_size=1024, value_size=64,
+                       log_capacity=1 << 15)
+        pool.kv("kv", cfg)
+        pool.wal("w", capacity_steps=10)
