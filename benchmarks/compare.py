@@ -1,0 +1,89 @@
+"""Cross-PR bench comparison: diff two ``BENCH_results.json`` files.
+
+Usage::
+
+    python benchmarks/compare.py PREV.json CURR.json [--threshold 0.10]
+
+Rows are matched by ``(suite, name)`` on their ``us_per_call`` values
+(the modeled-time column every suite emits). A row whose modeled time
+grew by more than the threshold is a **regression**; the exit code is
+non-zero if any exist, which is how CI gates a PR against the previous
+run's uploaded artifact. Rows present on only one side (new or retired
+benchmarks) are reported but never fail the gate — growing the suite
+must not be penalized. Rows at (near-)zero time on either side are
+skipped: they are labels, not measurements.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+#: below this many microseconds a row is a label, not a measurement
+EPS_US = 1e-3
+
+
+def load_rows(path: str) -> Dict[Tuple[str, str], float]:
+    """``{(suite, row name): us_per_call}`` from one results file."""
+    with open(path) as f:
+        doc = json.load(f)
+    rows: Dict[Tuple[str, str], float] = {}
+    for suite, rec in doc.get("suites", {}).items():
+        for row in rec.get("rows", []):
+            rows[(suite, row["name"])] = float(row["us_per_call"])
+    return rows
+
+
+def compare(prev: Dict[Tuple[str, str], float],
+            curr: Dict[Tuple[str, str], float],
+            threshold: float) -> Tuple[list, list, list]:
+    """Returns (regressions, improvements, only_one_side); each
+    regression/improvement is (suite, name, prev_us, curr_us, ratio)."""
+    regressions, improvements, lopsided = [], [], []
+    for key in sorted(set(prev) | set(curr)):
+        p, c = prev.get(key), curr.get(key)
+        if p is None or c is None:
+            lopsided.append((key, "new" if p is None else "removed"))
+            continue
+        if p < EPS_US or c < EPS_US:
+            continue
+        ratio = c / p
+        if ratio > 1.0 + threshold:
+            regressions.append((*key, p, c, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((*key, p, c, ratio))
+    return regressions, improvements, lopsided
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev", help="previous BENCH_results.json")
+    ap.add_argument("curr", help="current BENCH_results.json")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative modeled-time growth that counts as a "
+                         "regression (default 0.10 = 10%%)")
+    args = ap.parse_args()
+
+    prev, curr = load_rows(args.prev), load_rows(args.curr)
+    regressions, improvements, lopsided = compare(prev, curr, args.threshold)
+
+    for suite, name, p, c, r in improvements:
+        print(f"IMPROVED   {suite}/{name}: {p:.3f} -> {c:.3f} us "
+              f"({(1 - r) * 100:.0f}% faster)")
+    for key, status in lopsided:
+        print(f"{status.upper():10s} {key[0]}/{key[1]}")
+    for suite, name, p, c, r in regressions:
+        print(f"REGRESSED  {suite}/{name}: {p:.3f} -> {c:.3f} us "
+              f"(+{(r - 1) * 100:.0f}%)")
+
+    matched = len(set(prev) & set(curr))
+    print(f"# compared {matched} rows: {len(regressions)} regressed, "
+          f"{len(improvements)} improved, {len(lopsided)} one-sided "
+          f"(threshold {args.threshold * 100:.0f}%)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,7 @@ def main() -> None:
         fig5_pageflush,
         fig6_logging,
         tab_ycsb,
+        tier_capacity,
     )
 
     suites = [
@@ -47,6 +48,7 @@ def main() -> None:
         (fig5_pageflush, "Fig.5 failure-atomic page flush", True),
         (fig6_logging, "Fig.6 transaction log throughput", True),
         (tab_ycsb, "§3.3.2 YCSB validation", True),
+        (tier_capacity, "Tiered storage: capacity-pressure sweep", True),
     ]
     from benchmarks import common
 

@@ -1,0 +1,173 @@
+"""Capacity-pressure sweep: working set vs a fixed PMem budget.
+
+The paper positions PMem between DRAM and flash; this bench shows what
+the tier below buys. A :class:`PersistentKV` runs the same write+
+checkpoint workload at growing working-set sizes against ONE fixed PMem
+pool:
+
+* **seed engine** (no tier): classic sizing — every page needs a PMem
+  slot, so once the working set outgrows the pool the engine cannot even
+  be built (allocation fails).
+* **tiered engine**: a fixed ``slot_budget`` of PMem slots plus the SSD
+  spill tier — cold slots overflow at checkpoint epochs, the redo log
+  runs lane-striped over a generation ring that checkpoints roll and the
+  scheduler retires to SSD. Every point completes; modeled time degrades
+  *gracefully* (the SSD's Fig. 1 latency/bandwidth gap shows up as a
+  growing but bounded per-put cost, not an OOM).
+
+Also asserted here: the lane-striped WAL runs through >= 3
+checkpoint/truncate cycles with a bounded PMem log footprint (the
+generation ring never grows; the retired watermark advances).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    COST_MODEL,
+    AccessPattern,
+    FlushKind,
+    KVConfig,
+    PersistentKV,
+    SSD,
+)
+from repro.pool import Pool
+
+from benchmarks.common import check, emit
+
+PAGE = 1024
+VALUE = 64
+BUDGET = 8            # PMem page slots available to the tiered engine
+WAL_LANES = 4
+LOG_CAP = 1 << 13
+ROUNDS = 3            # write rounds, one checkpoint each → 3 WAL rolls
+SWEEP = (4, 8, 16, 32, 64)
+
+
+def _tiered_cfg(npages: int) -> KVConfig:
+    return KVConfig(npages=npages, page_size=PAGE, value_size=VALUE,
+                    log_capacity=LOG_CAP, slot_budget=BUDGET,
+                    wal_lanes=WAL_LANES, wal_gen_sets=2, flush_lanes=4)
+
+
+def _seed_cfg(npages: int) -> KVConfig:
+    return KVConfig(npages=npages, page_size=PAGE, value_size=VALUE,
+                    log_capacity=LOG_CAP)
+
+
+def pmem_budget_bytes() -> int:
+    """The fixed pool size: what the tiered engine needs at its slot
+    budget (independent of the working set — that is the point)."""
+    return PersistentKV.region_bytes(_tiered_cfg(max(SWEEP)))
+
+
+def run_seed(npages: int, pmem_bytes: int):
+    """Seed engine against the fixed budget. Returns modeled ns/put, or
+    None if the pool cannot hold the working set (allocation failure)."""
+    cfg = _seed_cfg(npages)
+    pool = Pool.create(None, pmem_bytes)
+    try:
+        kv = pool.kv("kv", cfg)
+    except (RuntimeError, ValueError):
+        return None   # pool full: the seed engine OOMs at this size
+    n = _workload(kv, cfg)
+    delta = pool.stats.delta(pool.stats.__class__())  # totals since create
+    ns = COST_MODEL.time_ns(delta, kind=FlushKind.NT,
+                            pattern=AccessPattern.SEQUENTIAL)
+    return ns / n
+
+
+def run_tiered(npages: int, pmem_bytes: int):
+    """Tiered engine against the same fixed budget. Returns
+    (modeled ns/put incl. SSD, pages spilled, WAL generation)."""
+    cfg = _tiered_cfg(npages)
+    pool = Pool.create(None, pmem_bytes)
+    ssd = pool.attach_ssd(SSD(1 << 26))
+    kv = pool.kv("kv", cfg)
+    n = _workload(kv, cfg)
+    pm_delta = pool.stats.delta(pool.stats.__class__())
+    pm_ns = COST_MODEL.engine_time_ns(pm_delta, kind=FlushKind.NT,
+                                      pattern=AccessPattern.SEQUENTIAL,
+                                      burst=True)
+    from repro.core import SSD_COST_MODEL
+    ssd_ns = SSD_COST_MODEL.time_ns(ssd.stats)
+    spilled = kv._spill.stats.pages_spilled if kv._spill is not None else 0
+    return (pm_ns + ssd_ns) / n, spilled, \
+        kv.wal.generation, kv.wal.retired_upto
+
+
+def _workload(kv: PersistentKV, cfg: KVConfig) -> int:
+    """ROUNDS passes touching every page once, checkpoint per pass.
+    Returns the number of puts."""
+    rng = np.random.default_rng(0)
+    n = 0
+    for r in range(ROUNDS):
+        for pid in range(cfg.npages):
+            key = pid * cfg.recs_per_page
+            kv.put(key, bytes(rng.integers(0, 256, VALUE, dtype=np.uint8)))
+            n += 1
+        kv.checkpoint()
+    return n
+
+
+def run() -> bool:
+    budget = pmem_budget_bytes()
+    emit("tier.pmem_budget_bytes", 0.0, f"{budget}B_{BUDGET}slots")
+    ok = True
+    seed_ns, tier_ns, n_spilled = {}, {}, {}
+    for npages in SWEEP:
+        s = run_seed(npages, budget)
+        t, spilled, gen, retired = run_tiered(npages, budget)
+        seed_ns[npages], tier_ns[npages] = s, t
+        n_spilled[npages] = spilled
+        emit(f"tier.seed.w{npages}", (s or 0.0) / 1e3,
+             "alloc_fail" if s is None else f"{s:.0f}ns/put")
+        emit(f"tier.spill.w{npages}", t / 1e3,
+             f"{t:.0f}ns/put_spilled{spilled}_gen{gen}")
+
+    over = [w for w in SWEEP if seed_ns[w] is None]
+    under = [w for w in SWEEP if seed_ns[w] is not None]
+    ok &= check("tier: seed engine fails allocation once the working set "
+                "outgrows the PMem budget",
+                bool(over) and max(SWEEP) in over,
+                f"fails at {over}")
+    ok &= check("tier: seed engine still works inside the budget",
+                bool(under) and min(SWEEP) in under,
+                f"completes at {under}")
+    ok &= check("tier: spill engine completes EVERY point on the same "
+                "budget",
+                all(tier_ns[w] is not None and np.isfinite(tier_ns[w])
+                    for w in SWEEP))
+    # graceful degradation: once the working set is WELL past the budget
+    # (>= 2x — fully in the spill regime, not the crossing ramp), each
+    # further doubling costs a bounded factor — flash bandwidth, not an
+    # OOM. (Crossing INTO the tier pays the Fig. 1 PMem-vs-flash gap by
+    # design; the ramp between "barely spilling" and "fully spilling" is
+    # part of that crossing.)
+    pressure = [w for w in SWEEP if n_spilled[w] > 0 and w >= 2 * BUDGET]
+    inside = [w for w in SWEEP if n_spilled[w] == 0]
+    steps = [tier_ns[b] / tier_ns[a] for a, b in zip(pressure, pressure[1:])]
+    ok &= check("tier: degradation under pressure is gradual "
+                "(each doubling < 2x)",
+                all(st < 2.0 for st in steps),
+                "x".join(f"{st:.2f}" for st in steps))
+    ok &= check("tier: cost grows monotonically under pressure (±5%)",
+                all(st > 0.95 for st in steps))
+    gap = tier_ns[pressure[0]] / tier_ns[inside[-1]]
+    ok &= check("tier: crossing the budget pays the PMem-vs-flash gap "
+                "(>5x, <500x)", 5.0 < gap < 500.0, f"{gap:.0f}x")
+
+    # WAL generation roll: >= 3 checkpoint cycles, bounded PMem footprint
+    _, _, gen, retired = run_tiered(max(SWEEP), budget)
+    ok &= check("tier: lane-striped WAL rolled >= 3 generations "
+                "(one per checkpoint)",
+                gen >= ROUNDS + 1, f"gen={gen}")
+    ok &= check("tier: WAL PMem footprint bounded (ring of 2 generation "
+                "sets; retired watermark advances)",
+                retired >= gen - 2, f"retired={retired} gen={gen}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -16,6 +16,9 @@ directory and uniform named handles (``pool.log`` / ``pool.pages`` /
 - :mod:`repro.core.costmodel` — counts → time, calibrated to the paper
   (incl. ``engine_time_ns``: lane-concurrent wall-clock for
   :mod:`repro.io`, the lane-partitioned I/O engine built on all of this)
+- :mod:`repro.core.ssd`       — functional flash model (block-granular,
+  write-buffered, crash-simulated) — the capacity tier below PMem that
+  :mod:`repro.tier` spills to, costed by ``SSDCostModel``
 """
 
 from repro.core.blocks import (  # noqa: F401
@@ -26,11 +29,18 @@ from repro.core.blocks import (  # noqa: F401
     TPU_GEOMETRY,
     TPU_TILE,
 )
-from repro.core.costmodel import COST_MODEL, DRAMCostModel, PMemCostModel  # noqa: F401
+from repro.core.costmodel import (  # noqa: F401
+    COST_MODEL,
+    DRAMCostModel,
+    PMemCostModel,
+    SSD_COST_MODEL,
+    SSDCostModel,
+)
 from repro.core.directory import (  # noqa: F401
     KIND_LOG,
     KIND_PAGES,
     KIND_RAW,
+    KIND_SSD,
     RegionDirectory,
     RegionRecord,
     directory_bytes,
@@ -53,3 +63,4 @@ from repro.core.pageflush import (  # noqa: F401
 from repro.core.persist import AccessPattern, FlushKind, INVALID_PID  # noqa: F401
 from repro.core.pmem import CrashImage, PMem, PMemStats  # noqa: F401
 from repro.core.recovery import KVConfig, PersistentKV  # noqa: F401
+from repro.core.ssd import SSD, SSDStats  # noqa: F401

@@ -50,6 +50,7 @@ __all__ = [
     "KIND_RAW",
     "KIND_LOG",
     "KIND_PAGES",
+    "KIND_SSD",
     "RegionRecord",
     "RegionDirectory",
     "directory_bytes",
@@ -64,6 +65,12 @@ KIND_RAW = 1    # untyped byte range
 KIND_LOG = 2    # Classic/Header/Zero log; meta = (technique, flags, dancing, 0)
 KIND_PAGES = 3  # PageStore slot array + µlogs; meta = (page_size, npages,
                 #                                       nslots, n_mulogs)
+KIND_SSD = 4    # SSD-backed range: ``base`` is an offset in the pool's
+                # attached SSD device's address space, NOT in PMem. The
+                # entry itself (the name → range binding) lives durably in
+                # this PMem table; the range's *content* validity is the
+                # consumer's problem (the spill tier gates reads with
+                # checksummed map records).
 
 # magic, version, cache_line, block, max_regions, pool_size
 _SUPER = struct.Struct("<8sIIIIQ")
@@ -179,23 +186,41 @@ class RegionDirectory:
 
     @property
     def data_end(self) -> int:
-        """Current bump pointer: first byte past every committed region."""
+        """Current PMem bump pointer: first byte past every committed
+        PMem-resident region (``KIND_SSD`` records address the SSD device's
+        space and do not consume PMem bytes)."""
         end = self.data_start
         for rec in self.records.values():
-            end = max(end, rec.end)
+            if rec.kind != KIND_SSD:
+                end = max(end, rec.end)
         return align_up(end, self.pmem.geometry.block)
 
     @property
     def free_bytes(self) -> int:
         return self.pmem.size - self.data_end
 
+    @property
+    def ssd_data_end(self) -> int:
+        """Bump pointer over the SSD address space: first SSD byte past
+        every committed ``KIND_SSD`` region."""
+        end = 0
+        for rec in self.records.values():
+            if rec.kind == KIND_SSD:
+                end = max(end, rec.end)
+        return end
+
     def _read_entry(self, img: np.ndarray, slot: int) -> Optional[RegionRecord]:
         raw_name, kind, gen, base, length, *meta = _ENTRY.unpack_from(
             img, self._entry_off(slot))
         if gen == 0:
             return None
-        # defensive sanity — a record that fails these is ignored, never fatal
-        if base < self.data_start or length <= 0 or base + length > self.pmem.size:
+        # defensive sanity — a record that fails these is ignored, never
+        # fatal. KIND_SSD bases live in the SSD device's address space, so
+        # the PMem bounds do not apply to them.
+        if length <= 0:
+            return None
+        if kind != KIND_SSD and (
+                base < self.data_start or base + length > self.pmem.size):
             return None
         try:
             name = raw_name.rstrip(b"\x00").decode("utf-8")
@@ -231,9 +256,40 @@ class RegionDirectory:
         self._commit(rec, slot)
         return rec
 
-    def _place(self, name: str, kind: int, length: int,
-               meta: Tuple[int, int, int, int]) -> Tuple[RegionRecord, int]:
-        """Pick the byte range and entry slot. Purely volatile."""
+    def allocate_ssd(self, name: str, length: int, ssd_size: int,
+                     meta: Tuple[int, int, int, int] = (0, 0, 0, 0)
+                     ) -> RegionRecord:
+        """Allocate a named range of the pool's SSD address space.
+
+        The binding (name → SSD byte range) is committed in this PMem
+        table with the same single-line atomic entry commit as a PMem
+        region; the SSD bytes themselves are NOT zero-initialized (the
+        directory does not own the device — consumers must gate reads on
+        their own validity metadata, e.g. the spill tier's checksummed
+        map records).
+
+        Args:
+            name: region name (≤ 20 bytes UTF-8, unique in the pool).
+            length: SSD bytes to claim.
+            ssd_size: capacity of the attached SSD device — the bump
+                allocation is bounds-checked against it.
+            meta: four consumer-defined ints stored in the entry.
+        """
+        slot = self._claim_slot(name, length)
+        base = self.ssd_data_end
+        if base + length > ssd_size:
+            raise RuntimeError(
+                f"SSD full: need {length} B at {base}, device is "
+                f"{ssd_size} B")
+        rec = RegionRecord(name, KIND_SSD, self._next_gen, base, int(length),
+                           tuple(int(m) for m in meta))
+        self._commit(rec, slot)
+        return rec
+
+    def _claim_slot(self, name: str, length: int) -> int:
+        """Shared entry admission: validate the name/length and pick a
+        free entry slot (purely volatile). One source of truth for both
+        the PMem and SSD allocation paths."""
         if name in self.records:
             raise ValueError(f"region {name!r} already exists")
         if len(name.encode("utf-8")) > _NAME_BYTES:
@@ -244,6 +300,12 @@ class RegionDirectory:
         slot = next((s for s in range(self.max_regions) if s not in used), None)
         if slot is None:
             raise RuntimeError(f"directory full ({self.max_regions} regions)")
+        return slot
+
+    def _place(self, name: str, kind: int, length: int,
+               meta: Tuple[int, int, int, int]) -> Tuple[RegionRecord, int]:
+        """Pick the byte range and entry slot. Purely volatile."""
+        slot = self._claim_slot(name, length)
         base = self.data_end
         if base + length > self.pmem.size:
             raise RuntimeError(

@@ -132,6 +132,13 @@ class _LogBase:
     def append(self, payload: bytes) -> int:
         raise NotImplementedError
 
+    def stride(self, payload_len: int) -> int:
+        """Region bytes one appended entry of this payload size occupies
+        (technique framing + padding included) — lets a batching caller
+        (MultiLog) reserve capacity at submit time, so a buffered batch
+        can never fail its later commit with "log full"."""
+        raise NotImplementedError
+
     def append_batch(self, payloads: "List[bytes]") -> List[int]:
         """Group commit: append many entries amortizing the technique's
         barriers over the whole batch (k entries cost what one append
@@ -188,6 +195,10 @@ class ClassicLog(_LogBase):
         if self.cfg.pad_to_line or self.cfg.pad_to_block:
             return self.cfg.geometry.pad_to_line(head_len)
         return head_len
+
+    def stride(self, payload_len: int) -> int:
+        """See :meth:`_LogBase.stride`: header + payload + own-line footer."""
+        return self.cfg.pad(self._footer_off(payload_len) + _CL_FTR.size)
 
     def append(self, payload: bytes) -> int:
         n = len(payload)
@@ -297,6 +308,10 @@ class HeaderLog(_LogBase):
         cfg = self.cfg  # always set by _LogBase.__init__ before _data_start()
         return align_up(cfg.dancing * cfg.geometry.cache_line, cfg.geometry.block)
 
+    def stride(self, payload_len: int) -> int:
+        """See :meth:`_LogBase.stride`: (len, lsn) header + payload."""
+        return self.cfg.pad(_HD_HDR.size + payload_len)
+
     def append(self, payload: bytes) -> int:
         n = len(payload)
         entry = _HD_HDR.pack(n, self.next_lsn) + payload
@@ -387,6 +402,10 @@ class ZeroLog(_LogBase):
     pre-zeroed file (paper §3.3.1 "Zero")."""
 
     BARRIERS_PER_APPEND = 1
+
+    def stride(self, payload_len: int) -> int:
+        """See :meth:`_LogBase.stride`: (len, lsn, cnt) header + payload."""
+        return self.cfg.pad(_ZR_HDR.size + payload_len)
 
     def append(self, payload: bytes) -> int:
         n = len(payload)

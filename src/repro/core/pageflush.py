@@ -67,10 +67,17 @@ class PageStoreLayout:
     npages: int
     nslots: int
     geometry: BlockGeometry = PAPER_GEOMETRY
+    #: ``nslots <= npages`` is normally an error (CoW must always find a
+    #: free slot). A store *overcommits* when a spill tier stands behind
+    #: it: the PMem slot array is a cache of a larger logical page space
+    #: and the :class:`repro.tier.SpillScheduler` evicts cold slots to SSD
+    #: before CoW would run dry.
+    overcommit: bool = False
 
     def __post_init__(self) -> None:
-        if self.nslots <= self.npages:
-            raise ValueError("CoW needs nslots > npages")
+        if self.nslots <= self.npages and not self.overcommit:
+            raise ValueError("CoW needs nslots > npages (or overcommit=True "
+                             "with a spill tier attached)")
         if self.page_size % self.geometry.cache_line != 0:
             raise ValueError("page_size must be cache-line aligned")
 
@@ -201,6 +208,11 @@ class PageStore:
         # Volatile state rebuilt on open: pid -> (slot, pvn); free slots.
         self.table: Dict[int, Tuple[int, int]] = {}
         self.free: List[int] = list(range(layout.nslots))
+        # pid -> minimum pvn history (maintained by the spill tier): a
+        # page whose version history continued on SSD must re-enter PMem
+        # strictly above it, or recovery's max-pvn rule could resurrect a
+        # stale durable header or a stale SSD copy.
+        self.pvn_floor: Dict[int, int] = {}
         self.policy = HybridPolicy(layout, cost_model)
 
     # ------------------------------------------------------------ sizing
@@ -236,13 +248,19 @@ class PageStore:
                 continue
             slot, slot_pvn = store.table[pid]
             if target != SLOT_CURRENT:
-                # checkpoint-layer shadow-slot delta: apply onto the recorded
-                # slot, regardless of which slot currently has max pvn
+                # checkpoint-layer shadow-slot delta: apply onto the
+                # recorded slot — but ONLY while that slot still belongs
+                # to this page at a not-newer version. The slot may have
+                # been freed (spill-tier eviction) and reused by another
+                # page, or re-CoW'd by this page at a higher pvn; an
+                # unconditional apply would corrupt the new occupant. A
+                # torn apply (header at pvn, some data lines lost) still
+                # replays: hdr_pid matches and hdr_pvn <= pvn.
                 slot = target
                 hdr_pid, hdr_pvn = _SLOT_HDR.unpack_from(
                     pmem.durable_view(), layout.slot_off(target))
-                if hdr_pid == pid and hdr_pvn >= pvn:
-                    pass  # apply already completed; replay is idempotent
+                if hdr_pid != pid or hdr_pvn > pvn:
+                    continue  # slot reused / superseded: µlog is stale
             elif pvn < slot_pvn:
                 continue  # stale in-place µlog, superseded by a newer CoW
             g = layout.geometry
@@ -272,19 +290,24 @@ class PageStore:
         dirty_lines: Optional[Sequence[int]] = None,
         invalidate_first: bool = False,
         retire_old: bool = True,
+        pvn_floor: int = 0,
     ) -> None:
         """Copy-on-write flush. ``dirty_lines`` given ⇒ the ☆ variant of
         Fig. 5: only dirty lines are in DRAM, clean lines are read back
         from the old PMem slot (device reads). ``invalidate_first`` selects
         the legacy 3-barrier protocol (≈10 % slower, §3.2.1).
         ``retire_old=False`` leaves the superseded slot OUT of the free
-        list — the caller owns it (checkpoint shadow slots)."""
+        list — the caller owns it (checkpoint shadow slots). ``pvn_floor``
+        forces the new version number past a given value — the spill
+        tier's promotion path re-installs a page whose pvn history
+        continued on SSD, and must stay above any stale durable slot."""
         layout, g = self.layout, self.layout.geometry
         page = np.asarray(page, dtype=np.uint8).ravel()
         if page.size != layout.page_size:
             raise ValueError("page size mismatch")
         old = self.table.get(pid)
-        new_pvn = (old[1] if old else 0) + 1
+        new_pvn = max((old[1] if old else 0) + 1, int(pvn_floor),
+                      self.pvn_floor.get(pid, 0) + 1)
         slot = self._alloc_slot()
 
         if invalidate_first and old is not None:
@@ -377,6 +400,28 @@ class PageStore:
             return "mulog"
         self.flush_cow(pid, page)
         return "cow"
+
+    # ------------------------------------------------------------- evict
+
+    def release(self, pid: int) -> int:
+        """Give ``pid``'s PMem slot back: durably invalidate the slot
+        header (one barrier) and return the slot to the free list.
+
+        This is the *last* step of the spill tier's eviction — the caller
+        must already have made the page bytes durable on the lower tier
+        (SSD extent + map record), so a crash before this call leaves two
+        identical copies, which recovery resolves by preferring the PMem
+        version at equal-or-higher pvn. Returns the released pvn."""
+        layout = self.layout
+        if pid not in self.table:
+            raise KeyError(pid)
+        slot, pvn = self.table.pop(pid)
+        self.pmem.store(layout.slot_off(slot),
+                        _SLOT_HDR.pack(INVALID_PID, 0), streaming=True)
+        self.pmem.persist(layout.slot_off(slot), _SLOT_HDR.size,
+                          kind=FlushKind.NT)
+        self.free.append(slot)
+        return pvn
 
     # ------------------------------------------------------------- read
 

@@ -9,20 +9,34 @@ write-ahead log using any of the three logging techniques. It exists to
   * provide the crash-recovery property-test target (arbitrary eviction
     subsets at crash time must never lose a committed put).
 
-All persistent layout goes through :class:`repro.pool.Pool`: the engine
-owns three named directory regions — ``<name>.root`` (failure-atomic
-ping-pong root: two slots, max-generation rule, same line-atomicity
-argument as the pvn), ``<name>.pages`` (PageStore slots + µlogs) and
-``<name>.wal`` (redo log). The preferred constructor is
+All persistent layout goes through :class:`repro.pool.Pool` — the engine
+never sees a raw byte offset. Its named directory regions are
+``<name>.root`` (failure-atomic ping-pong root: two slots, max-generation
+rule, same line-atomicity argument as the pvn), ``<name>.pages``
+(PageStore slots + µlogs) and the redo log: a single region
+``<name>.wal`` by default, or — with ``KVConfig(wal_lanes > 1)`` — a
+generational lane-striped :class:`~repro.io.multilog.MultiLog` over
+``<name>.wal.g<j>.lane<i>`` plus the ``<name>.wal.gen`` ring header. A
+tiered engine (``KVConfig(slot_budget=…)``) adds the spill scheduler's
+regions (``<name>.sp.*``) and requires a flash device on the pool
+(``pool.attach_ssd``). The preferred constructor is
 ``pool.kv(name, cfg)``; passing a bare :class:`PMem` still works as a
-deprecation shim (the engine formats/attaches a pool in place).
+deprecation shim (the engine formats/attaches a pool in place — raw
+base offsets are gone, the shim exists only for old call sites).
 
 Commit protocol per ``put``: modify the DRAM page (track dirty lines),
 append a redo record to the WAL, persist per the technique. Background
-``checkpoint()`` flushes dirty pages (hybrid CoW/µLog) and then advances
-the root recording the checkpoint LSN. Recovery = page table scan + µlog
-replay + redo of WAL entries past the checkpoint LSN (puts are idempotent,
-so the §3.2.1 "log entries might be reapplied" caveat is benign here).
+``checkpoint()`` flushes dirty pages (hybrid CoW/µLog; through a
+spill-aware flush-queue epoch when tiered, so a working set larger than
+the PMem slot budget overflows to SSD instead of failing) and then
+advances the root recording the checkpoint LSN, and truncates the WAL —
+``reset`` in place for a single-lane log, a generation ``roll`` for the
+striped one (the sealed generation is retired to SSD by the same
+epoch's spill drain, which is what bounds the PMem log footprint over
+an unbounded run). Recovery = page table scan (cross-tier max-pvn rule
+when spilled) + µlog replay + redo of WAL entries past the checkpoint
+LSN (puts are idempotent, so the §3.2.1 "log entries might be
+reapplied" caveat is benign here).
 """
 
 from __future__ import annotations
@@ -30,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 import struct
 import warnings
-from typing import Dict, Set, Tuple, Union
+from typing import Dict, Optional, Set, Tuple, Union
 
 import numpy as np
 
@@ -44,9 +58,20 @@ __all__ = ["PersistentKV", "KVConfig"]
 _ROOT = struct.Struct("<QQ")  # generation, checkpoint_lsn
 _REC = struct.Struct("<II")   # key, value_len   (redo record header)
 
+#: spill-map log capacity per buffer for a tiered KV — referenced by both
+#: the scheduler construction and the region_bytes sizing, which must agree
+_SPILL_MAP_CAPACITY = 1 << 14
+
 
 @dataclasses.dataclass(frozen=True)
 class KVConfig:
+    """Engine configuration. The tiered-storage knobs (``slot_budget``,
+    ``wal_lanes``/``wal_gen_sets``) turn the fixed-size engine into one
+    whose working set may exceed its PMem budget: cold page slots spill
+    to the pool's attached SSD, and the redo log runs lane-striped over a
+    generation ring that a checkpoint rolls (and the spill tier retires)
+    instead of growing without bound."""
+
     npages: int = 16
     page_size: int = 4096
     value_size: int = 64
@@ -59,6 +84,26 @@ class KVConfig:
     #: repro.io FlushQueue when > 1 (the Hybrid crossover then follows
     #: the actual active-lane count of each checkpoint epoch)
     flush_lanes: int = 1
+    #: PMem page-slot budget. None = the classic sizing (every page fits:
+    #: npages + 25 % slack). A value <= npages *overcommits* the slot
+    #: array — the pool must have an SSD attached, and a SpillScheduler
+    #: evicts cold slots at checkpoint epochs instead of failing.
+    slot_budget: Optional[int] = None
+    #: redo-log stripe width; > 1 runs the WAL on a generational
+    #: repro.io MultiLog (regions <name>.wal.g<j>.lane<i>) whose
+    #: generations a checkpoint seals and rolls
+    wal_lanes: int = 1
+    #: appends batched per lane barrier on the multi-lane WAL. 1 (the
+    #: default) keeps every put() durable at return, like the single-lane
+    #: WAL; > 1 trades that for amortized barriers (a put is durable at
+    #: the next full batch or checkpoint)
+    wal_group_commit: int = 1
+    #: generation ring size for the multi-lane WAL (>= 2): bounded PMem
+    #: log footprint = wal_gen_sets x log_capacity
+    wal_gen_sets: int = 2
+    #: fraction of page slots the spill keeps free beyond each epoch's
+    #: immediate need (eviction slack)
+    spill_low_watermark: float = 0.25
 
     @property
     def recs_per_page(self) -> int:
@@ -70,7 +115,14 @@ class KVConfig:
 
     @property
     def nslots(self) -> int:
+        if self.slot_budget is not None:
+            return self.slot_budget
         return self.npages + max(2, self.npages // 4)
+
+    @property
+    def tiered(self) -> bool:
+        """Whether this config needs the SSD tier (overcommitted slots)."""
+        return self.slot_budget is not None and self.slot_budget <= self.npages
 
 
 class PersistentKV:
@@ -102,8 +154,31 @@ class PersistentKV:
         pages = pmpool.pages(f"{name}.pages", npages=cfg.npages,
                              page_size=cfg.page_size, nslots=cfg.nslots)
         self.store: PageStore = pages.store
-        self.wal = pmpool.log(f"{name}.wal", capacity=cfg.log_capacity,
-                              technique=cfg.technique, cfg=cfg.log)
+        self._spill = None
+        if cfg.tiered:
+            from repro.tier import SpillScheduler
+            if pmpool.ssd_dev is None:
+                raise ValueError(
+                    f"KVConfig(slot_budget={cfg.slot_budget}) overcommits "
+                    f"{cfg.npages} pages onto {cfg.nslots} PMem slots; "
+                    f"attach a flash device first (pool.attach_ssd)")
+            self._spill = SpillScheduler(
+                pmpool, name=f"{name}.sp",
+                low_watermark=cfg.spill_low_watermark,
+                map_capacity=_SPILL_MAP_CAPACITY)
+            self._spill.attach_pages(pages)
+        if cfg.wal_lanes > 1:
+            from repro.io.multilog import MultiLog
+            self.wal = MultiLog(pmpool, f"{name}.wal", lanes=cfg.wal_lanes,
+                                capacity=cfg.log_capacity,
+                                technique=cfg.technique,
+                                group_commit=cfg.wal_group_commit,
+                                cfg=cfg.log, gen_sets=cfg.wal_gen_sets)
+            if self._spill is not None:
+                self.wal.attach_spill(self._spill)
+        else:
+            self.wal = pmpool.log(f"{name}.wal", capacity=cfg.log_capacity,
+                                  technique=cfg.technique, cfg=cfg.log)
         self.checkpoint_lsn = 0
         self._root_gen = 0
         # --- volatile state ------------------------------------------------
@@ -116,16 +191,36 @@ class PersistentKV:
 
     @staticmethod
     def region_bytes(cfg: KVConfig) -> int:
-        """Pool region size that fits this engine (directory included)."""
+        """Pool region size that fits this engine (directory included).
+
+        Accounts for whichever WAL shape the config selects — single-lane
+        (one log region) or generational multi-lane (``wal_gen_sets``
+        lane sets plus the generation header) — and for the spill
+        scheduler's PMem-side regions (map double buffer + head) when the
+        slot budget overcommits."""
         from repro.pool import DEFAULT_MAX_REGIONS, Pool
         g = cfg.geometry
         layout = PageStoreLayout(base=0, page_size=cfg.page_size,
                                  npages=cfg.npages, nslots=cfg.nslots,
-                                 geometry=g)
+                                 geometry=g,
+                                 overcommit=cfg.nslots <= cfg.npages)
+        if cfg.wal_lanes > 1:
+            per_lane = g.pad_to_block(
+                max(1, cfg.log_capacity // cfg.wal_lanes))
+            wal_bytes = (cfg.wal_gen_sets * cfg.wal_lanes
+                         * (per_lane + g.block)
+                         + align_up(2 * g.cache_line, g.block))
+        else:
+            wal_bytes = cfg.log_capacity + 4 * g.block
+        spill_bytes = 0
+        if cfg.tiered:
+            # map double buffer + ping-pong head (see PersistentKV.__init__)
+            spill_bytes = 2 * (_SPILL_MAP_CAPACITY + g.block) \
+                + align_up(2 * g.cache_line, g.block)
         return (Pool.overhead_bytes(g, DEFAULT_MAX_REGIONS)
                 + align_up(2 * g.cache_line, g.block)
                 + PageStore.region_bytes(layout, n_mulogs=1)
-                + cfg.log_capacity + 4 * g.block)
+                + wal_bytes + spill_bytes)
 
     # --------------------------------------------------------------- api
 
@@ -160,16 +255,26 @@ class PersistentKV:
     # -------------------------------------------------------- checkpoint
 
     def checkpoint(self) -> None:
-        """Flush all dirty pages (hybrid), advance the root, reset the WAL.
+        """Flush all dirty pages (hybrid), advance the root, truncate the
+        WAL.
 
         Page flushes precede the root update; a crash in between merely
         replays redo records onto already-flushed pages (idempotent puts).
         With ``cfg.flush_lanes > 1`` the flushes run through a lane-
-        partitioned engine epoch (batched, actual-lane-count Hybrid).
+        partitioned engine epoch (batched, actual-lane-count Hybrid); a
+        tiered engine additionally spills cold slots to SSD during that
+        epoch instead of failing allocation.
+
+        WAL truncation depends on the log: a single-lane WAL starts a new
+        generation in place (``reset`` re-zeroes the region); a multi-lane
+        WAL *rolls* — the sealed generation moves to the next ring slot,
+        stays recoverable, and the spill scheduler retires it to SSD in
+        the same checkpoint epoch.
         """
-        if self.cfg.flush_lanes > 1:
+        if self.cfg.flush_lanes > 1 or self._spill is not None:
             from repro.io.flushq import FlushQueue
-            fq = FlushQueue(self.store, lanes=self.cfg.flush_lanes)
+            fq = FlushQueue(self.store, lanes=self.cfg.flush_lanes,
+                            spill=self._spill)
             for pid, lines in sorted(self.dirty.items()):
                 fq.enqueue(pid, self.pool[pid], sorted(lines))
             fq.flush_epoch()
@@ -185,9 +290,16 @@ class PersistentKV:
                         _ROOT.pack(self._root_gen, ckpt_lsn), streaming=True)
         self.root.persist(slot * g.cache_line, _ROOT.size)
         self.checkpoint_lsn = ckpt_lsn
-        # New WAL generation (re-zeroes the region — Zero logging requires
-        # it — and restarts the writer at LSN 1).
-        self.wal.reset()
+        # New WAL generation. Multi-lane: seal + ring roll (and retire the
+        # sealed generation to SSD within this checkpoint epoch). Single-
+        # lane: re-zero in place (Zero logging requires it) and restart
+        # the writer at LSN 1.
+        if getattr(self.wal, "generational", False):
+            self.wal.roll()
+            if self._spill is not None:
+                self._spill.drain()
+        else:
+            self.wal.reset()
 
     # ----------------------------------------------------------- recovery
 
@@ -203,10 +315,21 @@ class PersistentKV:
 
     def _recover_state(self) -> None:
         self._root_gen, self.checkpoint_lsn = self._read_root()
-        # load persistent pages into the buffer pool
-        for pid in range(self.cfg.npages):
-            if pid in self.store.table:
-                self.pool[pid] = self.store.read_page(pid)
+        # load persistent pages into the buffer pool. With a spill tier
+        # the scheduler resolves which tier holds each page's newest
+        # version (cross-tier max-pvn rule); no promotion — recovery
+        # should not churn the slot budget before the workload tells us
+        # which pages are actually hot.
+        if self._spill is not None:
+            spilled = self._spill.spilled_pages(self.store)
+            for pid in range(self.cfg.npages):
+                if pid in self.store.table or pid in spilled:
+                    self.pool[pid] = self._spill.read_page(
+                        self.store, pid, promote=False)
+        else:
+            for pid in range(self.cfg.npages):
+                if pid in self.store.table:
+                    self.pool[pid] = self.store.read_page(pid)
         # redo WAL entries past the checkpoint (the handle recovered them
         # when it was opened, and is already positioned at the tail)
         cl = self.cfg.geometry.cache_line

@@ -10,11 +10,13 @@ batches and barriers":
 - :mod:`repro.io.multilog` — :class:`MultiLog`: appends striped over N
   per-lane Zero/Classic/Header logs with a global LSN, group-commit
   batching (k appends per barrier), merge-on-recovery reconstructing the
-  exact durable global prefix across lanes.
+  exact durable global prefix across lanes; ``gen_sets >= 2`` adds the
+  generation ring (``roll()`` seals, the spill tier retires to SSD).
 - :mod:`repro.io.flushq`   — :class:`FlushQueue`: coalescing flush queue
   in front of a :class:`~repro.core.pageflush.PageStore`; each epoch is
   lane-partitioned and the Hybrid crossover uses the *actual* number of
-  active lanes.
+  active lanes; with ``spill=`` attached, epochs that outgrow the PMem
+  slot budget evict cold slots to the SSD tier instead of raising.
 - :mod:`repro.io.engine`   — :class:`IOEngine`: facade allocating
   non-overlapping lane ids and converting per-lane op counts to modeled
   wall-clock (``costmodel.engine_time_ns``: max over lanes, Fig. 2

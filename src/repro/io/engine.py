@@ -42,6 +42,9 @@ class IOEngine:
     def __init__(self, pool, *, lanes: int = 4,
                  group_commit: int = DEFAULT_GROUP_COMMIT,
                  cost_model: PMemCostModel = COST_MODEL) -> None:
+        """One engine per pool: ``lanes`` and ``group_commit`` are the
+        defaults handed to front ends; ``cost_model`` converts op-count
+        deltas to modeled time."""
         if lanes < 1:
             raise ValueError("lanes must be >= 1")
         self.pool = pool
@@ -61,26 +64,40 @@ class IOEngine:
                  technique: Optional[str] = None,
                  lanes: Optional[int] = None,
                  group_commit: Optional[int] = None,
-                 cfg: Optional[LogConfig] = None) -> MultiLog:
+                 cfg: Optional[LogConfig] = None,
+                 gen_sets: int = 1) -> MultiLog:
         """Open-or-create a lane-striped group-commit log (defaults to the
-        engine's lane/group-commit configuration)."""
+        engine's lane/group-commit configuration). ``gen_sets >= 2``
+        creates it generational — sealable/rollable, with sealed
+        generations retirable to the SSD tier."""
         n = lanes if lanes is not None else self.lanes
         ml = MultiLog(self.pool, name, lanes=n if capacity is not None else lanes,
                       capacity=capacity, technique=technique,
                       group_commit=group_commit if group_commit is not None
                       else self.group_commit,
-                      cfg=cfg, lane_id_base=0)
+                      cfg=cfg, lane_id_base=0, gen_sets=gen_sets)
         ml.lane_id_base = self._alloc_lane_ids(ml.lanes)
         return ml
 
     def flush_queue(self, pages, *, lanes: Optional[int] = None,
-                    flush_fn: Optional[Callable[..., Optional[str]]] = None
-                    ) -> FlushQueue:
-        """A batched flush queue over a pages handle / page store."""
+                    flush_fn: Optional[Callable[..., Optional[str]]] = None,
+                    spill=None) -> FlushQueue:
+        """A batched flush queue over a pages handle / page store; pass
+        ``spill=`` (a :class:`repro.tier.SpillScheduler`) to let epochs
+        overflow cold slots to the SSD tier instead of raising."""
         n = lanes if lanes is not None else self.lanes
         return FlushQueue(pages, lanes=n,
                           lane_id_base=self._alloc_lane_ids(n),
-                          flush_fn=flush_fn, cost_model=self.cost_model)
+                          flush_fn=flush_fn, cost_model=self.cost_model,
+                          spill=spill)
+
+    def spill_scheduler(self, ssd=None, *, name: str = "spill", **kw):
+        """The pool's :class:`repro.tier.SpillScheduler` — the engine's
+        third front end, feeding the SSD capacity tier at epoch
+        boundaries. ``ssd`` attaches a device if the pool has none yet;
+        remaining keywords pass through (watermarks, arena sizing)."""
+        from repro.tier import SpillScheduler
+        return SpillScheduler(self.pool, ssd, name=name, **kw)
 
     # ---------------------------------------------------------- accounting
 

@@ -19,6 +19,14 @@ dirty pages and the queue drains them once per *epoch*. The epoch drain
 A custom ``flush_fn(pid, page, dirty_lines, active_lanes)`` replaces the
 default ``store.flush`` for callers with their own protocol on top (the
 checkpoint manager's shadow-slot deltas).
+
+With a :class:`repro.tier.SpillScheduler` attached (``spill=``), the
+epoch drain is also where the SSD tier gets fed: before flushing, cold
+PMem slots are evicted to SSD until the batch fits (the *low watermark*
+keeps slack beyond the bare minimum), and a mid-batch ``no free slots``
+condition evicts and retries instead of failing the epoch — an epoch
+that misses the PMem capacity budget overflows asynchronously (off the
+caller's critical path) instead of raising.
 """
 
 from __future__ import annotations
@@ -44,6 +52,11 @@ class EpochReport:
     barriers: int = 0
     blocks_written: int = 0
     modeled_ns: float = 0.0
+    #: cold pages evicted to the SSD tier during this epoch
+    pages_spilled: int = 0
+    #: modeled SSD time of those evictions (drained concurrently with the
+    #: PMem lane work in a real system; reported separately, not summed)
+    spill_ns: float = 0.0
 
 
 class FlushQueue:
@@ -51,13 +64,27 @@ class FlushQueue:
 
     def __init__(self, pages, *, lanes: int = 4, lane_id_base: int = 0,
                  flush_fn: Optional[Callable[..., Optional[str]]] = None,
-                 cost_model: PMemCostModel = COST_MODEL) -> None:
+                 cost_model: PMemCostModel = COST_MODEL,
+                 spill=None) -> None:
+        """Wrap a page store (or :class:`~repro.pool.PagesHandle`).
+
+        Args:
+            pages: the store whose pages this queue flushes.
+            lanes: maximum concurrent flush lanes per epoch.
+            lane_id_base: first lane id for stats attribution.
+            flush_fn: optional ``(pid, page, dirty_lines, active_lanes)``
+                override of ``store.flush`` (checkpoint shadow slots).
+            cost_model: converts the epoch's op-count delta to time.
+            spill: optional :class:`repro.tier.SpillScheduler`; evicts
+                cold slots to SSD when an epoch outgrows the PMem budget.
+        """
         # accepts a PageStore or anything exposing one (PagesHandle)
         self.store = getattr(pages, "store", pages)
         self.lanes = max(1, int(lanes))
         self.lane_id_base = int(lane_id_base)
         self.cost_model = cost_model
         self._flush_fn = flush_fn
+        self.spill = spill
         # pid -> (latest page image, dirty line set | None=all dirty)
         self._pending: Dict[int, Tuple[np.ndarray, Optional[Set[int]]]] = {}
 
@@ -75,6 +102,9 @@ class FlushQueue:
         until the drain, so avoiding the extra copy halves that spike)."""
         page = (np.array(page, dtype=np.uint8, copy=True) if copy
                 else np.asarray(page, dtype=np.uint8)).ravel()
+        if self.spill is not None:
+            # enqueue = recent use (LRU signal, attributed to OUR store)
+            self.spill.touch(int(pid), self.store)
         prev = self._pending.get(int(pid))
         if prev is not None and prev[1] is not None and dirty_lines is not None:
             dirty: Optional[Set[int]] = prev[1] | set(int(i) for i in dirty_lines)
@@ -97,19 +127,51 @@ class FlushQueue:
         active = max(1, min(self.lanes, len(items)))
         pm = self.store.pmem
         before = pm.stats.snapshot()
+        ssd_before = (self.spill.ssd.stats.snapshot()
+                      if self.spill is not None else None)
         rep = EpochReport(pages=len(items), active_lanes=active)
+        protect = {pid for pid, _ in items}
+        new_pages = sum(1 for pid in protect if pid not in self.store.table)
+        if self.spill is not None and new_pages:
+            # feed the SSD tier BEFORE touching PMem: evict cold slots so
+            # the batch's NET slot demand fits (first-time pages consume a
+            # slot permanently; a resident page's CoW is net zero and the
+            # +1 covers its transient double-occupancy). An epoch of pure
+            # re-flushes triggers no eviction at all.
+            rep.pages_spilled += self.spill.ensure_slots(
+                self.store, need=new_pages + 1, protect=protect)
         for j, (pid, (page, dirty)) in enumerate(items):
             lines = None if dirty is None else sorted(dirty)
             with pm.lane(self.lane_id_base + (j % active)):
-                if self._flush_fn is not None:
-                    tech = self._flush_fn(pid, page, lines, active)
-                else:
-                    tech = self.store.flush(pid, page, dirty_lines=lines,
-                                            threads=active)
+                try:
+                    if self._flush_fn is not None:
+                        tech = self._flush_fn(pid, page, lines, active)
+                    else:
+                        tech = self.store.flush(pid, page, dirty_lines=lines,
+                                                threads=active)
+                except RuntimeError:
+                    if self.spill is None:
+                        raise
+                    # mid-batch slot exhaustion (CoW retiring slower than
+                    # allocating): evict and retry once. Here eviction MAY
+                    # take a batch member (already-flushed ones are cold
+                    # and perfectly spillable) — a batch larger than the
+                    # whole slot budget has to cycle through itself.
+                    rep.pages_spilled += self.spill.ensure_slots(
+                        self.store, need=1, protect=protect,
+                        allow_protected=True)
+                    if self._flush_fn is not None:
+                        tech = self._flush_fn(pid, page, lines, active)
+                    else:
+                        tech = self.store.flush(pid, page, dirty_lines=lines,
+                                                threads=active)
             if tech == "mulog":
                 rep.mulog += 1
             elif tech is not None:
                 rep.cow += 1
+        if self.spill is not None:
+            rep.spill_ns = self.spill.ssd_cost.time_ns(
+                self.spill.ssd.stats.delta(ssd_before))
         delta = pm.stats.delta(before)
         rep.barriers = delta.barriers
         rep.blocks_written = delta.blocks_written

@@ -26,6 +26,19 @@ lane while an *earlier* entry died with another lane's lost batch) is
 discarded by durably re-zeroing each lane's tail back to its last kept
 entry. Without that repair, re-appending after recovery would produce
 two different entries carrying the same global LSN.
+
+Generations (``gen_sets >= 2``): the log runs a *ring* of lane sets
+(regions ``<name>.g<j>.lane<i>``) plus a ping-pong generation header
+(``<name>.gen``). :meth:`MultiLog.roll` seals the current generation —
+commit everything, then atomically advance the header to generation
+``g+1``, whose lane set takes over with LSNs restarting at 1. Sealed
+generations stay PMem-resident (readable, crash-recoverable) until a
+:class:`repro.tier.SpillScheduler` retires them to SSD (or, with no
+scheduler, until their ring slot is reused — plain truncation). The
+header's ``retired_upto`` watermark is the single atomic source of
+truth for *where* a generation lives: ``gen > retired_upto`` recovers
+from PMem, ``gen <= retired_upto`` from SSD, never both — the
+crash-during-spill property of ``tests/test_tier_props.py``.
 """
 
 from __future__ import annotations
@@ -41,6 +54,8 @@ from repro.core.log import HeaderLog, LogConfig, RecoveredLog
 __all__ = ["MultiLog", "MultiLogRecovered"]
 
 _GLSN = struct.Struct("<Q")
+# generation header slot: counter, current_gen, retired_upto, gen_sets, lanes
+_GENHDR = struct.Struct("<QQQII")
 
 #: default number of appends batched per lane commit
 DEFAULT_GROUP_COMMIT = 8
@@ -67,6 +82,15 @@ class MultiLog:
     from the pool directory and merged recovery runs automatically.
     Region names are capped at 20 bytes, so ``name`` must leave room for
     the ``.lane<i>`` suffix.
+
+    ``gen_sets >= 2`` makes the log *generational*: a ring of
+    ``gen_sets`` lane sets (regions ``<name>.g<j>.lane<i>``, generation
+    ``g`` living in slot ``(g-1) % gen_sets``) plus a ping-pong header
+    region ``<name>.gen``. ``capacity`` is then *per generation*;
+    :meth:`roll` seals the live generation and moves appends to the next
+    set with LSNs restarting at 1, so a checkpoint-driven consumer (the
+    KV redo log) can run indefinitely in ``gen_sets × capacity`` bytes
+    of PMem. A generational log is reopened generational automatically.
     """
 
     def __init__(self, pool, name: str, *, lanes: Optional[int] = None,
@@ -74,12 +98,44 @@ class MultiLog:
                  technique: Optional[str] = None,
                  group_commit: int = DEFAULT_GROUP_COMMIT,
                  cfg: Optional[LogConfig] = None,
-                 lane_id_base: int = 0) -> None:
+                 lane_id_base: int = 0,
+                 gen_sets: int = 1) -> None:
+        """Open-or-create the log.
+
+        Args:
+            pool: the :class:`repro.pool.Pool` holding the lane regions.
+            name: base region name; lane regions are ``<name>.lane<i>``
+                (or ``<name>.g<j>.lane<i>`` when generational).
+            lanes: stripe width when creating (default 2); on reopen the
+                durable directory decides and a conflicting value raises.
+            capacity: total log bytes when creating (per generation for
+                a generational log), split evenly over the lanes.
+            technique: per-lane log technique when creating (default
+                "zero"); on reopen the durable record decides.
+            group_commit: appends buffered per lane before an automatic
+                batch commit (1 = commit every append immediately).
+            cfg: :class:`~repro.core.log.LogConfig` for the lanes.
+            lane_id_base: first lane id used for per-lane stats
+                attribution (the :class:`~repro.io.IOEngine` hands out
+                non-overlapping ranges).
+            gen_sets: size of the generation ring; 1 (default) is the
+                plain non-generational log.
+        """
         self.pool = pool
         self.name = name
         self.group_commit = max(1, int(group_commit))
         self.lane_id_base = int(lane_id_base)
+        #: spill scheduler registered via ``attach_spill`` (generational)
+        self._spill = None
 
+        gen_rec = pool.directory.lookup(f"{name}.gen")
+        self.generational = gen_rec is not None or int(gen_sets) > 1
+        if self.generational:
+            self._init_generational(lanes, capacity, technique, cfg,
+                                    int(gen_sets), existing=gen_rec is not None)
+            return
+
+        self.gen_sets = 1
         existing = 0
         while pool.directory.lookup(f"{name}.lane{existing}") is not None:
             existing += 1
@@ -120,9 +176,270 @@ class MultiLog:
             ]
         self.technique = self.handles[0].technique
         self._pending: List[List[bytes]] = [[] for _ in range(self.lanes)]
+        self._pending_bytes: List[int] = [0] * self.lanes
         self._rr = 0
         self.recovered = self._merge_recovery()
         self._next_glsn = self.recovered.next_glsn
+        self._live: List[Tuple[int, bytes]] = list(
+            zip(self.recovered.glsns, self.recovered.entries))
+
+    # ------------------------------------------------------- generations
+
+    def _init_generational(self, lanes: Optional[int],
+                           capacity: Optional[int],
+                           technique: Optional[str],
+                           cfg: Optional[LogConfig],
+                           gen_sets: int, *, existing: bool) -> None:
+        """Create or reopen the generation ring + header (see class doc)."""
+        pool = self.pool
+        name = self.name
+        cl = pool.geometry.cache_line
+        if existing:
+            self._gen_root = pool.raw(f"{name}.gen")
+            hdr = self._read_gen_header()
+            if hdr is None:
+                raise ValueError(f"multilog {name!r}: generation header "
+                                 f"region exists but holds no valid slot")
+            self._gen_counter, self.current_gen, self.retired_upto, \
+                k, n_lanes = hdr
+            if gen_sets > 1 and gen_sets != k:
+                raise ValueError(
+                    f"multilog {name!r} has {k} durable generation sets, "
+                    f"caller asked for {gen_sets}")
+            if lanes is not None and lanes != n_lanes:
+                raise ValueError(
+                    f"multilog {name!r} has {n_lanes} durable lanes, "
+                    f"caller asked for {lanes}")
+            self.gen_sets, self.lanes = k, n_lanes
+            self._sets = [
+                [pool.log(f"{name}.g{j}.lane{i}", technique=technique,
+                          cfg=cfg) for i in range(self.lanes)]
+                for j in range(self.gen_sets)
+            ]
+        else:
+            if capacity is None:
+                raise ValueError(
+                    f"creating multilog {name!r} requires capacity=")
+            if gen_sets < 2:
+                raise ValueError("generational logs need gen_sets >= 2")
+            self.gen_sets = gen_sets
+            self.lanes = int(lanes) if lanes is not None else 2
+            if self.lanes < 1:
+                raise ValueError("lanes must be >= 1")
+            per_lane = pool.geometry.pad_to_block(
+                max(1, int(capacity) // self.lanes))
+            last_name = f"{name}.g{self.gen_sets - 1}.lane{self.lanes - 1}"
+            if len(last_name.encode("utf-8")) > 20:
+                raise ValueError(
+                    f"multilog name {name!r} too long for {self.gen_sets} "
+                    f"generation sets x {self.lanes} lanes ({last_name!r} "
+                    f"exceeds the 20 B region-name cap)")
+            need = self.gen_sets * self.lanes * per_lane + 2 * cl
+            if need > pool.free_bytes:
+                raise ValueError(
+                    f"multilog {name!r}: {self.gen_sets} generation sets x "
+                    f"{self.lanes} lanes x {per_lane} B exceed the pool's "
+                    f"{pool.free_bytes} free bytes")
+            # Lane regions first, header last: the header's single-line
+            # entry commit is the atomic creation point, and re-running
+            # this path after a crash mid-creation reopens/creates the
+            # lane regions idempotently.
+            self._sets = [
+                [pool.log(f"{name}.g{j}.lane{i}", capacity=per_lane,
+                          technique=technique or "zero", cfg=cfg)
+                 for i in range(self.lanes)]
+                for j in range(self.gen_sets)
+            ]
+            self._gen_root = pool.raw(f"{name}.gen", nbytes=2 * cl)
+            self._gen_counter = 0
+            self.current_gen = 1
+            self.retired_upto = 0
+            self._write_gen_header(1, 0)
+
+        self._active = (self.current_gen - 1) % self.gen_sets
+        self.handles = self._sets[self._active]
+        self.technique = self.handles[0].technique
+        self._pending = [[] for _ in range(self.lanes)]
+        self._pending_bytes = [0] * self.lanes
+        self._rr = 0
+        # Which ring slot holds which PMem-resident generation. Slots
+        # holding only retired (spilled/discarded) generations are
+        # conservatively dirty: a crash may have landed between the
+        # retired-watermark commit and the slot re-zero.
+        occupied: Dict[int, int] = {
+            (g - 1) % self.gen_sets: g
+            for g in range(self.retired_upto + 1, self.current_gen + 1)
+        }
+        self._sealed: Dict[int, List[Tuple[int, bytes]]] = {}
+        self._slot_clean: Dict[int, bool] = {}
+        for j in range(self.gen_sets):
+            self._slot_clean[j] = False
+            g = occupied.get(j)
+            if g is None or j == self._active:
+                continue
+            rec = self._merge_recovery(self._sets[j])
+            self._sealed[g] = list(zip(rec.glsns, rec.entries))
+        self.recovered = self._merge_recovery()
+        self._next_glsn = self.recovered.next_glsn
+        self._live = list(zip(self.recovered.glsns, self.recovered.entries))
+
+    def _read_gen_header(self) -> Optional[Tuple[int, int, int, int, int]]:
+        """Durable generation header: max-counter slot of the ping-pong
+        pair, or ``None`` if neither slot was ever written."""
+        img = self._gen_root.durable_view()
+        cl = self.pool.geometry.cache_line
+        best = None
+        for slot in range(2):
+            rec = _GENHDR.unpack_from(img, slot * cl)
+            if rec[0] and (best is None or rec[0] > best[0]):
+                best = rec
+        return best
+
+    def _write_gen_header(self, current_gen: int, retired_upto: int) -> None:
+        """Durably advance the generation header (one barrier; the slot
+        fits a single cache line, so the commit is atomic)."""
+        from repro.core.persist import FlushKind
+        self._gen_counter += 1
+        slot = self._gen_counter % 2
+        cl = self.pool.geometry.cache_line
+        self._gen_root.store(
+            slot * cl,
+            _GENHDR.pack(self._gen_counter, current_gen, retired_upto,
+                         self.gen_sets, self.lanes),
+            streaming=True)
+        self._gen_root.persist(slot * cl, _GENHDR.size, kind=FlushKind.NT)
+        self.current_gen = current_gen
+        self.retired_upto = retired_upto
+
+    @property
+    def generation(self) -> int:
+        """The live generation number (1 for a non-generational log)."""
+        return self.current_gen if self.generational else 1
+
+    def attach_spill(self, spill) -> None:
+        """Register the :class:`repro.tier.SpillScheduler` that retires
+        sealed generations to SSD (:meth:`roll` enqueues onto it, and
+        reads of retired generations route through it).
+
+        Sealed-but-unretired generations recovered at open time are
+        re-enqueued here: a crash that landed between a roll and its
+        drain must not leave the generation orphaned — without the
+        re-enqueue, the next ring reuse would discard it while the
+        watermark advanced past it."""
+        self._spill = spill
+        for g in sorted(getattr(self, "_sealed", {})):
+            spill.enqueue_generation(self, g)
+
+    def roll(self, spill=None) -> int:
+        """Seal the live generation and start the next one. Returns the
+        sealed generation's number.
+
+        The sequence is: group-commit everything pending (the sealed
+        content is now durable in the current lane set), make sure the
+        target ring slot is free — if it still holds an unretired sealed
+        generation, drain the spill scheduler (or, with no scheduler,
+        advance the retired watermark: plain truncation) and re-zero it —
+        then atomically advance the header to generation ``g+1``. A crash
+        anywhere in between recovers consistently: before the header
+        commit the old generation is still live; after it, the new
+        (empty) one is.
+
+        The sealed generation stays PMem-resident and readable
+        (:meth:`read_generation`) until the scheduler durably retires it.
+        """
+        if not self.generational:
+            raise RuntimeError(
+                f"multilog {self.name!r} is not generational; create it "
+                f"with gen_sets >= 2 to roll")
+        spill = spill if spill is not None else self._spill
+        self.commit()
+        g = self.current_gen
+        sealed = list(self._live)
+        nxt = g + 1
+        target = (nxt - 1) % self.gen_sets
+        evictee = nxt - self.gen_sets   # generation previously in that slot
+        if evictee >= 1 and evictee > self.retired_upto:
+            if spill is not None:
+                spill.drain()
+            if evictee > self.retired_upto:
+                # No scheduler (or the drain did not cover it): discard —
+                # the ring slot is reclaimed and the generation's history
+                # is gone, exactly the old reset() truncation semantics.
+                self._write_gen_header(g, evictee)
+                self._sealed.pop(evictee, None)
+        if not self._slot_clean.get(target, False):
+            for h in self._sets[target]:
+                h.reset()
+        self._sealed[g] = sealed
+        self._write_gen_header(nxt, self.retired_upto)
+        self._active = target
+        self.handles = self._sets[target]
+        self._slot_clean[target] = False
+        self._pending = [[] for _ in range(self.lanes)]
+        self._pending_bytes = [0] * self.lanes
+        self._rr = 0
+        self._next_glsn = 1
+        self._live = []
+        if spill is not None:
+            spill.enqueue_generation(self, g)
+        return g
+
+    def mark_retired(self, gen: int) -> None:
+        """Durably advance the retired watermark to ``gen`` (called by the
+        spill scheduler once the generation is safely on SSD — SSD flush
+        and map record first, THEN this; the watermark is what recovery
+        consults, so a crash in between still recovers from PMem). Newly
+        retired ring slots are re-zeroed for reuse."""
+        if not self.generational:
+            raise RuntimeError("not a generational multilog")
+        if gen >= self.current_gen:
+            raise ValueError(f"cannot retire the live generation {gen}")
+        if gen <= self.retired_upto:
+            return
+        old = self.retired_upto
+        self._write_gen_header(self.current_gen, gen)
+        for g in range(old + 1, gen + 1):
+            self._sealed.pop(g, None)
+            slot = (g - 1) % self.gen_sets
+            if slot == self._active:
+                continue
+            for h in self._sets[slot]:
+                h.reset()
+            self._slot_clean[slot] = True
+
+    def sealed_generations(self) -> Dict[int, List[bytes]]:
+        """PMem-resident sealed generations: ``{gen: [payload, ...]}`` for
+        every generation that is sealed but not yet retired to SSD."""
+        if not self.generational:
+            return {}
+        return {g: [p for _, p in items]
+                for g, items in sorted(self._sealed.items())}
+
+    def read_generation(self, gen: int, *, spill=None
+                        ) -> Tuple[str, List[bytes]]:
+        """Read one generation's payloads and report where they came from.
+
+        Returns ``("pmem", entries)`` for the live or a sealed-but-
+        unretired generation (recovered from the lane regions) and
+        ``("ssd", entries)`` for a retired one (read through the spill
+        scheduler, checksum-verified). The header's retired watermark
+        decides — never both tiers, which is the crash-during-spill
+        invariant ``tests/test_tier_props.py`` asserts."""
+        if not self.generational:
+            raise RuntimeError("not a generational multilog")
+        if gen < 1 or gen > self.current_gen:
+            raise ValueError(f"no generation {gen} (live is "
+                             f"{self.current_gen})")
+        if gen > self.retired_upto:
+            if gen == self.current_gen:
+                return "pmem", [p for _, p in self._live]
+            return "pmem", [p for _, p in self._sealed.get(gen, [])]
+        spill = spill if spill is not None else self._spill
+        if spill is None:
+            raise RuntimeError(
+                f"generation {gen} is retired to SSD; pass the spill "
+                f"scheduler that owns the spill map")
+        return "ssd", spill.read_generation(self.name, gen)
 
     # ------------------------------------------------------------ recovery
 
@@ -144,14 +461,15 @@ class MultiLog:
             m += 1
         return items, m
 
-    def _merge_recovery(self) -> MultiLogRecovered:
-        per_lane = [h.recovered for h in self.handles]
+    def _merge_recovery(self, handles=None) -> MultiLogRecovered:
+        handles = self.handles if handles is None else handles
+        per_lane = [h.recovered for h in handles]
         items, m = self._global_prefix([rec.entries for rec in per_lane])
-        keep = [0] * self.lanes
+        keep = [0] * len(handles)
         for g in range(1, m + 1):
             keep[items[g][0]] += 1
         discarded = 0
-        for lane_i, (h, rec) in enumerate(zip(self.handles, per_lane)):
+        for lane_i, (h, rec) in enumerate(zip(handles, per_lane)):
             extra = len(rec.entries) - keep[lane_i]
             if extra > 0:
                 discarded += extra
@@ -193,11 +511,26 @@ class MultiLog:
         The entry becomes durable at the next :meth:`commit` (``sync=True``
         issues one right away). A lane whose buffer reaches ``group_commit``
         entries commits that batch automatically."""
+        lane = self._rr
+        # Reserve capacity at SUBMIT time: the lane's buffered batch must
+        # always fit its region, so a later commit()/roll() can never
+        # fail with "log full" (the invariant the KV auto-checkpoint
+        # path relies on). If this entry would overflow the reservation,
+        # flush the partial batch first; if it still does not fit, the
+        # lane is genuinely full and nothing was submitted.
+        w = self.handles[lane]._writer
+        framed = w.stride(_GLSN.size + len(payload))
+        if self._pending_bytes[lane] + framed > w.capacity - w.tail:
+            self._commit_lane(lane)
+            if framed > w.capacity - w.tail:
+                raise RuntimeError("log full")
         glsn = self._next_glsn
         self._next_glsn += 1
-        lane = self._rr
         self._rr = (self._rr + 1) % self.lanes
         self._pending[lane].append(_GLSN.pack(glsn) + payload)
+        self._pending_bytes[lane] += framed
+        if self.generational:
+            self._live.append((glsn, bytes(payload)))
         if sync:
             self.commit()
         elif len(self._pending[lane]) >= self.group_commit:
@@ -211,6 +544,7 @@ class MultiLog:
         with self.pool.pmem.lane(self.lane_id_base + lane):
             self.handles[lane].append_batch(batch)
         self._pending[lane] = []
+        self._pending_bytes[lane] = 0
 
     def commit(self) -> None:
         """Group-commit every buffered entry on every lane. After this
@@ -218,20 +552,46 @@ class MultiLog:
         for lane in range(self.lanes):
             self._commit_lane(lane)
 
+    def reset(self) -> None:
+        """Truncate in place: durably re-zero every (active-set) lane and
+        restart the global LSN at 1. Pending un-committed entries are
+        dropped. Generational logs should prefer :meth:`roll`, which
+        preserves the sealed generation; ``reset`` is the bare per-lane
+        primitive beneath it."""
+        for h in self.handles:
+            h.reset()
+        self._pending = [[] for _ in range(self.lanes)]
+        self._pending_bytes = [0] * self.lanes
+        self._rr = 0
+        self._next_glsn = 1
+        self._live = []
+        self.recovered = MultiLogRecovered([], [], 1, [0] * self.lanes, 0)
+
     def close(self, *, commit: bool = True) -> None:
+        """Commit pending entries (unless ``commit=False``) and close
+        every lane handle (all generation sets included)."""
         if commit:
             self.commit()
-        for h in self.handles:
+        for h in (h for s in getattr(self, "_sets", [self.handles])
+                  for h in s):
             h.close()
 
     # --------------------------------------------------------------- misc
 
     @property
     def pending(self) -> int:
+        """Entries buffered (submitted, not yet durable) across lanes."""
         return sum(len(b) for b in self._pending)
 
     @property
     def next_glsn(self) -> int:
+        """Global LSN the next append will receive."""
+        return self._next_glsn
+
+    @property
+    def next_lsn(self) -> int:
+        """Alias for :attr:`next_glsn` — lets consumers treat a MultiLog
+        and a single-lane :class:`~repro.pool.LogHandle` uniformly."""
         return self._next_glsn
 
     def recover(self) -> MultiLogRecovered:
@@ -253,5 +613,6 @@ class MultiLog:
         return self.handles[0].stats()
 
     def reset_stats(self) -> None:
+        """Restart every lane handle's stats window."""
         for h in self.handles:
             h.reset_stats()

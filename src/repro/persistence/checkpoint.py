@@ -56,6 +56,11 @@ __all__ = ["CheckpointConfig", "CheckpointManager", "SaveReport"]
 #: checkpoint geometry: dirty unit = 4 KiB TPU tile, write granule = 16 KiB
 CKPT_GEOMETRY = BlockGeometry(cache_line=TPU_TILE, block=4 * TPU_TILE)
 
+#: spill-map log capacity per buffer for a tiered shard — 4 KiB lines pad
+#: each map record to a line, so the maps need real capacity; referenced by
+#: the pool sizing AND every SpillScheduler construction, which must agree
+_SPILL_MAP_CAPACITY = 1 << 20
+
 
 @dataclasses.dataclass(frozen=True)
 class CheckpointConfig:
@@ -65,6 +70,15 @@ class CheckpointConfig:
     threads: int = 1                 # writer threads (G4: bounded; feeds policy)
     kernel_impl: str = "auto"        # dirty_diff dispatch
     extra_slots: int = 4             # beyond the 2-per-page steady state
+    #: PMem page-slot budget for the shard. None = classic sizing (two
+    #: slots per page: current + shadow). A smaller budget makes the
+    #: save epoch *spill*: cold slots overflow to the shard's SSD device
+    #: instead of the pool allocation failing, and manifests record the
+    #: spilled pages' SSD residence so restore still verifies end-to-end.
+    pmem_slot_budget: Optional[int] = None
+    #: SSD device size auto-created per shard when a budget is set and no
+    #: device is passed to the manager
+    ssd_bytes: int = 1 << 28
 
     @property
     def geometry(self) -> BlockGeometry:
@@ -88,6 +102,10 @@ class SaveReport:
     modeled_ns: float = 0.0
     #: flush lanes actually active in this save's epoch drain
     active_lanes: int = 1
+    #: cold PMem slots evicted to SSD during this save's epoch
+    pages_spilled: int = 0
+    #: modeled SSD time of those evictions (overlappable with PMem work)
+    spill_ns: float = 0.0
 
     @property
     def bytes_device(self) -> int:
@@ -103,10 +121,16 @@ class CheckpointManager:
     """
 
     def __init__(self, path: Optional[str], cfg: CheckpointConfig = CheckpointConfig(),
-                 *, shard_id: int = 0) -> None:
+                 *, shard_id: int = 0, ssd=None) -> None:
+        """``path`` backs the shard's pool file (``None`` = in-memory);
+        ``ssd`` is the shard's flash device when ``cfg.pmem_slot_budget``
+        turns on the spill tier (auto-created in memory if omitted)."""
         self.cfg = cfg
         self.path = path
         self.shard_id = shard_id
+        self._ssd = ssd
+        self._spill = None
+        self._spilled_pvn: Dict[int, int] = {}   # evicted pid -> pvn on SSD
         self.pool: Optional[Pool] = None
         self.pmem: Optional[PMem] = None
         self.store: Optional[PageStore] = None
@@ -146,14 +170,25 @@ class CheckpointManager:
             }
             pid += npages
         npages = pid
-        nslots = 2 * npages + cfg.extra_slots
+        if cfg.pmem_slot_budget is not None:
+            nslots = int(cfg.pmem_slot_budget)
+        else:
+            nslots = 2 * npages + cfg.extra_slots
+        tiered = nslots <= 2 * npages and cfg.pmem_slot_budget is not None
         sizing = PageStoreLayout(base=0, page_size=cfg.page_size,
-                                 npages=npages, nslots=nslots, geometry=g)
-        total = (Pool.overhead_bytes(g, max_regions=8)
+                                 npages=npages, nslots=nslots, geometry=g,
+                                 overcommit=nslots <= npages)
+        spill_bytes = 0
+        if tiered:
+            # spill map double buffer + ping-pong head (4 KiB lines pad
+            # each map record to a line, so the maps need real capacity)
+            spill_bytes = 2 * (_SPILL_MAP_CAPACITY + g.block) \
+                + align_up(2 * g.cache_line, g.block)
+        total = (Pool.overhead_bytes(g, max_regions=16)
                  + align_up(cfg.manifest_capacity, g.block)
                  + PageStore.region_bytes(sizing, n_mulogs=cfg.threads)
-                 + 2 * g.block)
-        self.pool = Pool.create(self.path, total, geometry=g, max_regions=8)
+                 + spill_bytes + 2 * g.block)
+        self.pool = Pool.create(self.path, total, geometry=g, max_regions=16)
         self.pmem = self.pool.pmem
         self.manifest = self.pool.log(
             "manifest", capacity=cfg.manifest_capacity, technique="zero",
@@ -163,8 +198,35 @@ class CheckpointManager:
             n_mulogs=cfg.threads, threads=cfg.threads)
         self.store = self._pages.store
         self._layout = self._pages.layout
+        if tiered:
+            self._spill = self._make_spill()
         self._flushq = self._pages.flush_queue(
             lanes=cfg.threads, flush_fn=self._engine_flush_page)
+        self._flushq.spill = self._spill
+
+    def _make_spill(self):
+        """The shard's spill scheduler (creates the SSD device if none
+        was passed) — the save epoch feeds it, restore reads through it."""
+        from repro.core.ssd import SSD
+        from repro.tier import SpillScheduler
+        if self._ssd is None:
+            self._ssd = SSD(self.cfg.ssd_bytes)
+        self.pool.attach_ssd(self._ssd)
+        spill = SpillScheduler(self.pool, name="sp", map_capacity=_SPILL_MAP_CAPACITY)
+        spill.attach_pages(self._pages, on_evict=self._on_page_evicted)
+        return spill
+
+    def _on_page_evicted(self, pid: int) -> None:
+        """Spill-tier callback: a pid's *current* slot left PMem. Drop
+        the shadow bookkeeping that referenced PMem slots (the shadow
+        slot is freed — its stale durable header loses the cross-tier
+        max-pvn rule) and pin the SSD-resident version for the next
+        manifest."""
+        self._spilled_pvn[pid] = self.store.pvn_floor.get(pid, 0)
+        shadow = self._shadow.pop(pid, None)
+        if shadow is not None:
+            self.store.free.append(shadow)
+        self._prev_dirty.pop(pid, None)
 
     # ------------------------------------------------------------- save
 
@@ -242,11 +304,16 @@ class CheckpointManager:
         # count, not the constructor's thread constant.
         epoch = self._flushq.flush_epoch()
         report.active_lanes = max(1, epoch.active_lanes)
+        report.pages_spilled = epoch.pages_spilled
+        report.spill_ns = epoch.spill_ns
         self._prev_dirty.update(self._epoch_prev_dirty)
 
-        # Pass 3 — manifest records from the post-epoch page table.
+        # Pass 3 — manifest records from the post-epoch page table. A
+        # page whose slot spilled during the epoch is recorded with
+        # slot -1 and its SSD-resident pvn: restore reads it back through
+        # the spill map (same checksum verification, different tier).
         for name in sorted(state):
-            page_records = [[pid, *self.store.table[pid]]
+            page_records = [self._page_record(pid)
                             for pid in self._leaf_pages[name]]
             entry["leaves"][name] = dict(
                 self._leaf_meta[name], pages=page_records,
@@ -263,6 +330,15 @@ class CheckpointManager:
             delta, active_lanes=report.active_lanes, kind=FlushKind.NT,
             pattern=AccessPattern.SEQUENTIAL, burst=True)
         return report
+
+    def _page_record(self, pid: int) -> List[int]:
+        """Manifest record for one page: ``[pid, slot, pvn]`` when PMem-
+        resident, ``[pid, -1, pvn]`` when its current version lives on
+        the shard's SSD tier."""
+        rec = self.store.table.get(pid)
+        if rec is not None:
+            return [pid, rec[0], rec[1]]
+        return [pid, -1, self._spilled_pvn[pid]]
 
     def _engine_flush_page(self, pid: int, page: np.ndarray,
                            dirty: Optional[List[int]], active: int) -> str:
@@ -331,6 +407,16 @@ class CheckpointManager:
             self.pool = Pool.open(path)
             self.pmem = self.pool.pmem
             self.manifest = self.pool.log("manifest")
+        if cfg.pmem_slot_budget is not None and self._spill is None:
+            from repro.tier import SpillScheduler
+            if self._ssd is None:
+                raise ValueError(
+                    "this shard was saved with a PMem slot budget — its "
+                    "cold pages live on SSD; pass the shard's SSD device "
+                    "to CheckpointManager(ssd=...) before restoring")
+            self.pool.attach_ssd(self._ssd)
+            self._spill = SpillScheduler(self.pool, name="sp",
+                                         map_capacity=_SPILL_MAP_CAPACITY)
         rec = self.manifest.recover()
         if not rec.entries:
             raise FileNotFoundError("no committed checkpoint manifest")
@@ -357,11 +443,22 @@ class CheckpointManager:
             buf = np.zeros(len(meta["pages"]) * cfg.page_size, dtype=np.uint8)
             for i, ((pid, slot, pvn), csum) in enumerate(
                     zip(meta["pages"], meta["checksums"])):
-                hdr_pid, hdr_pvn = _s.unpack_from("<IQ", img, layout.slot_off(slot))
-                if hdr_pid != pid or hdr_pvn != pvn:
-                    return None   # slot was reused; manifest not restorable
-                off = layout.slot_data_off(slot)
-                page = img[off : off + cfg.page_size]
+                if slot == -1:
+                    # SSD-resident page: the manifest pinned its pvn; the
+                    # spill map must still hold exactly that version
+                    if self._spill is None:
+                        return None
+                    try:
+                        page = self._spill.read_spilled("pages", pid, pvn)
+                    except (KeyError, RuntimeError):
+                        return None
+                else:
+                    hdr_pid, hdr_pvn = _s.unpack_from("<IQ", img,
+                                                      layout.slot_off(slot))
+                    if hdr_pid != pid or hdr_pvn != pvn:
+                        return None   # slot was reused; not restorable
+                    off = layout.slot_data_off(slot)
+                    page = img[off : off + cfg.page_size]
                 if verify and csum and int((popcount(page) + 1) & 0xFFFFFFFF) != csum:
                     return None
                 buf[i * cfg.page_size : (i + 1) * cfg.page_size] = page
@@ -378,13 +475,25 @@ class CheckpointManager:
         self._pages = self.pool.pages("pages", threads=cfg.threads)
         self.store = self._pages.store
         self._layout = self._pages.layout
+        if self._spill is not None:
+            self._spill.attach_pages(self._pages,
+                                     on_evict=self._on_page_evicted)
         self._flushq = self._pages.flush_queue(
-            lanes=cfg.threads, flush_fn=self._engine_flush_page)
+            lanes=cfg.threads, flush_fn=self._engine_flush_page,
+            spill=self._spill)
         referenced = set()
+        self._spilled_pvn = {}
         for name, meta in entry["leaves"].items():
             self._leaf_pages[name] = [p[0] for p in meta["pages"]]
             self._leaf_meta[name] = {k: meta[k] for k in ("shape", "dtype", "nbytes")}
             for pid, slot, pvn in meta["pages"]:
+                if slot == -1:
+                    # SSD-resident: stays with the spill map; keep any
+                    # stale PMem header out of the table (lower pvn loses
+                    # the cross-tier rule anyway)
+                    self._spilled_pvn[pid] = pvn
+                    self.store.table.pop(pid, None)
+                    continue
                 referenced.add(slot)
                 # trust the committed manifest over µlog-advanced versions
                 self.store.table[pid] = (slot, pvn)

@@ -13,12 +13,16 @@ replaying the pipeline deterministically with no re-read of earlier batches.
 
 Construction goes through :class:`repro.pool.Pool` — ``pool.wal(name)`` or
 :meth:`TrainWAL.on_pool` — which open-or-create a named log region and
-recover automatically. ``pool.wal(name, lanes=N, group_commit=k)`` runs
-the WAL on the repro.io engine's :class:`~repro.io.MultiLog` instead: N
-zero-log lanes, k steps amortized per persistency barrier (data-parallel
-trainers whose replicas commit steps concurrently). The legacy
-``TrainWAL(pmem, 0, capacity)`` signature survives as a deprecation shim
-that formats/attaches a pool over the given region in place.
+recover automatically; the WAL never computes a byte offset itself (all
+layout lives behind the pool directory). ``pool.wal(name, lanes=N,
+group_commit=k)`` runs the WAL on the repro.io engine's
+:class:`~repro.io.MultiLog` instead: N zero-log lanes, k steps amortized
+per persistency barrier (data-parallel trainers whose replicas commit
+steps concurrently). The legacy ``TrainWAL(pmem, base, capacity)``
+signature survives only as a deprecation shim: it formats (or attaches)
+a pool directory over the caller's region and opens the WAL as the
+named region ``train_wal`` inside it — ``base`` must be 0 and is not a
+raw offset into anything; nonzero values are rejected.
 """
 
 from __future__ import annotations
@@ -76,6 +80,13 @@ class TrainWAL:
         recover: bool = False,
         _handle=None,
     ) -> None:
+        """Open the WAL. Preferred: :meth:`on_pool` / ``pool.wal(name)``
+        (``_handle`` carries the pool log handle). The positional
+        ``(pmem, base, capacity)`` form is the deprecated shim described
+        in the module docstring: it adopts the region as a pool and opens
+        the ``train_wal`` directory region — no raw offsets are used, and
+        ``base`` must be 0. ``recover=False`` on the shim starts a fresh
+        generation over an existing region instead of resuming it."""
         if _handle is None:
             # Legacy shim: adopt the caller's raw region as a pool. The
             # directory lives at the head, so base must be 0; the log gets

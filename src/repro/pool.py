@@ -43,6 +43,7 @@ from repro.core.directory import (
     KIND_LOG,
     KIND_PAGES,
     KIND_RAW,
+    KIND_SSD,
     RegionDirectory,
     RegionRecord,
     directory_bytes,
@@ -52,6 +53,7 @@ from repro.core.log import LOG_TECHNIQUES, LogConfig, RecoveredLog
 from repro.core.pageflush import PageStore, PageStoreLayout
 from repro.core.persist import FlushKind
 from repro.core.pmem import PMem, PMemStats
+from repro.core.ssd import SSD
 
 __all__ = [
     "Pool",
@@ -59,6 +61,7 @@ __all__ = [
     "LogHandle",
     "PagesHandle",
     "RawHandle",
+    "SSDRegionHandle",
     "DEFAULT_MAX_REGIONS",
 ]
 
@@ -93,6 +96,7 @@ class Handle:
     """Base of every pool handle: name/record access and a stats window."""
 
     def __init__(self, pool: "Pool", record: RegionRecord) -> None:
+        """Bind to ``record`` in ``pool`` and open a stats window."""
         self.pool = pool
         self.record = record
         self._stats0 = pool.pmem.stats.snapshot()
@@ -101,14 +105,18 @@ class Handle:
     # -- identity ---------------------------------------------------------
     @property
     def name(self) -> str:
+        """The region's directory name."""
         return self.record.name
 
     @property
     def base(self) -> int:
+        """First byte of the region (pool-absolute; SSD-space for
+        ``KIND_SSD`` records)."""
         return self.record.base
 
     @property
     def length(self) -> int:
+        """Region size in bytes."""
         return self.record.length
 
     # -- lifecycle --------------------------------------------------------
@@ -118,6 +126,7 @@ class Handle:
         return self.pool.pmem.stats.delta(self._stats0)
 
     def reset_stats(self) -> None:
+        """Restart the stats window at the current pool counters."""
         self._stats0 = self.pool.pmem.stats.snapshot()
 
     def close(self) -> None:
@@ -139,6 +148,8 @@ class LogHandle(Handle):
 
     def __init__(self, pool: "Pool", record: RegionRecord, technique: str,
                  cfg: LogConfig, writer, recovered: RecoveredLog) -> None:
+        """Wrap an opened per-technique writer (built by :meth:`Pool.log`)
+        together with what recovery found at open time."""
         super().__init__(pool, record)
         self.technique = technique
         self.cfg = cfg
@@ -159,18 +170,22 @@ class LogHandle(Handle):
 
     @property
     def tail(self) -> int:
+        """Byte offset (region-relative) where the next entry goes."""
         return self._writer.tail
 
     @property
     def next_lsn(self) -> int:
+        """LSN the next append will receive."""
         return self._writer.next_lsn
 
     @property
     def barriers_per_append(self) -> int:
+        """Persistency barriers per append (1 Zero, 2 Header/Classic)."""
         return self._writer.BARRIERS_PER_APPEND
 
     @property
     def capacity(self) -> int:
+        """Region bytes available to the log."""
         return self.record.length
 
     # -- recovery ---------------------------------------------------------
@@ -205,60 +220,75 @@ class PagesHandle(Handle):
 
     def __init__(self, pool: "Pool", record: RegionRecord,
                  store: PageStore) -> None:
+        """Wrap an opened :class:`PageStore` (built by :meth:`Pool.pages`)."""
         super().__init__(pool, record)
         self.store = store
 
     # layout / policy passthroughs ---------------------------------------
     @property
     def layout(self) -> PageStoreLayout:
+        """The store's byte layout (slots, µlogs, geometry)."""
         return self.store.layout
 
     @property
     def policy(self):
+        """The µLog-vs-CoW :class:`~repro.core.pageflush.HybridPolicy`."""
         return self.store.policy
 
     @property
     def table(self) -> Dict[int, Tuple[int, int]]:
+        """Volatile page table: pid -> (slot, pvn)."""
         return self.store.table
 
     @property
     def npages(self) -> int:
+        """Logical pages the region addresses."""
         return self.store.layout.npages
 
     @property
     def page_size(self) -> int:
+        """Bytes per page."""
         return self.store.layout.page_size
 
     # flush / read --------------------------------------------------------
     def flush(self, pid: int, page: np.ndarray,
               dirty_lines: Optional[Sequence[int]] = None, *,
               threads: Optional[int] = None) -> str:
+        """Hybrid flush (µLog vs CoW by the cost model); returns the
+        technique used. See :meth:`PageStore.flush`."""
         self._check_open()
         return self.store.flush(pid, page, dirty_lines=dirty_lines,
                                 threads=threads)
 
     def flush_queue(self, *, lanes: int = 4, lane_id_base: int = 0,
-                    flush_fn=None):
+                    flush_fn=None, spill=None):
         """A :class:`repro.io.FlushQueue` over this region: enqueue dirty
         pages, drain once per epoch with lane-partitioned, batched flushing
-        (the Hybrid crossover then follows the actual active-lane count)."""
+        (the Hybrid crossover then follows the actual active-lane count).
+        ``spill`` attaches a :class:`repro.tier.SpillScheduler` so epochs
+        that outgrow the slot budget evict to SSD instead of raising."""
         from repro.io.flushq import FlushQueue
         return FlushQueue(self, lanes=lanes, lane_id_base=lane_id_base,
-                          flush_fn=flush_fn)
+                          flush_fn=flush_fn, spill=spill)
 
     def flush_cow(self, pid: int, page: np.ndarray, **kw) -> None:
+        """Force a CoW(+pvn) flush. See :meth:`PageStore.flush_cow`."""
         self._check_open()
         self.store.flush_cow(pid, page, **kw)
 
     def flush_mulog(self, pid: int, page: np.ndarray,
                     dirty_lines: Sequence[int], **kw) -> None:
+        """Force a µLog delta flush. See :meth:`PageStore.flush_mulog`."""
         self._check_open()
         self.store.flush_mulog(pid, page, dirty_lines, **kw)
 
     def read_page(self, pid: int) -> np.ndarray:
+        """Program-order read of the page's current slot."""
         return self.store.read_page(pid)
 
     def durable_page(self, pid: int) -> Optional[np.ndarray]:
+        """The page's durable image (what recovery would see), or
+        ``None`` if no valid slot holds it."""
         return self.store.durable_page(pid)
 
 
@@ -275,6 +305,7 @@ class RawHandle(Handle):
 
     def store(self, off: int, data: bytes | np.ndarray, *,
               streaming: bool = False) -> None:
+        """Store bytes at a handle-relative offset (bounds-checked)."""
         self._check_open()
         data = np.frombuffer(bytes(data), dtype=np.uint8) \
             if not isinstance(data, np.ndarray) else data
@@ -282,51 +313,114 @@ class RawHandle(Handle):
         self.pool.pmem.store(self.base + off, data, streaming=streaming)
 
     def load(self, off: int, size: int, **kw) -> np.ndarray:
+        """Program-order read at a handle-relative offset."""
         self._span(off, size)
         return self.pool.pmem.load(self.base + off, size, **kw)
 
     def persist(self, off: int, size: int,
                 kind: FlushKind = FlushKind.CLWB) -> None:
+        """persist() a handle-relative range (flush covering lines +
+        fence; ``kind=NT`` fences streaming stores)."""
         self._span(off, size)
         self.pool.pmem.persist(self.base + off, size, kind=kind)
 
     def durable_view(self) -> np.ndarray:
+        """The region's durable image (what recovery would see)."""
         return self.pool.pmem.durable_slice(self.base, self.length)
+
+
+class SSDRegionHandle(Handle):
+    """A named range of the pool's attached SSD device (``KIND_SSD``).
+
+    The *binding* (name → SSD byte range) is a durable single-line entry
+    in the pool's PMem directory; the *bytes* live on the SSD attached
+    via :meth:`Pool.attach_ssd`. Reads/writes are bounds-checked against
+    the record and routed to the device; durability requires
+    :meth:`flush` (the device's FLUSH CACHE), mirroring how PMem stores
+    require a fence. Content validity across crashes is the consumer's
+    protocol — the spill tier gates every read on a checksummed map
+    record committed in PMem *after* the SSD flush."""
+
+    def __init__(self, pool: "Pool", record: RegionRecord, ssd: SSD) -> None:
+        """Bind a ``KIND_SSD`` record to the attached flash device."""
+        super().__init__(pool, record)
+        self.ssd = ssd
+
+    def _span(self, off: int, size: int) -> None:
+        if off < 0 or size < 0 or off + size > self.length:
+            raise ValueError(
+                f"access [{off}, {off + size}) outside SSD region "
+                f"{self.name!r} of {self.length} B")
+
+    def pwrite(self, off: int, data) -> None:
+        """Write into the region (device write cache; durable at
+        :meth:`flush`)."""
+        self._check_open()
+        data = np.frombuffer(bytes(data), dtype=np.uint8) \
+            if not isinstance(data, np.ndarray) else data
+        self._span(off, data.size)
+        self.ssd.pwrite(self.base + off, data)
+
+    def pread(self, off: int, size: int) -> np.ndarray:
+        """Read from the region (sees unflushed writes)."""
+        self._span(off, size)
+        return self.ssd.pread(self.base + off, size)
+
+    def flush(self) -> None:
+        """Make every buffered write of the *device* durable (FLUSH
+        CACHE is device-wide, like sfence is core-wide)."""
+        self.ssd.flush()
+
+    def durable_read(self, off: int, size: int) -> np.ndarray:
+        """The durable image of a range (what recovery would see)."""
+        self._span(off, size)
+        return self.ssd.durable_read(self.base + off, size)
 
 
 class Pool:
     """One PMem region + durable directory + uniform handles."""
 
     def __init__(self, pmem: PMem, directory: RegionDirectory) -> None:
+        """Bind a PMem to its loaded directory (prefer :meth:`create` /
+        :meth:`open` / :meth:`attach`)."""
         self.pmem = pmem
         self.directory = directory
+        #: SSD device backing ``KIND_SSD`` regions (see :meth:`attach_ssd`)
+        self.ssd_dev: Optional[SSD] = None
 
     # ------------------------------------------------------------ basics
 
     @property
     def geometry(self) -> BlockGeometry:
+        """The pool's block geometry (from the superblock)."""
         return self.pmem.geometry
 
     @property
     def path(self) -> Optional[str]:
+        """Backing file path, or ``None`` for an in-memory pool."""
         return self.pmem.path
 
     @property
     def size(self) -> int:
+        """Pool size in bytes."""
         return self.pmem.size
 
     @property
     def free_bytes(self) -> int:
+        """PMem bytes not yet claimed by any directory region."""
         return self.directory.free_bytes
 
     def regions(self) -> Dict[str, RegionRecord]:
+        """Snapshot of every committed directory record, by name."""
         return dict(self.directory.records)
 
     def fsync(self) -> None:
+        """Push a file-backed pool's durable image to stable media."""
         self.pmem.fsync()
 
     @property
     def stats(self) -> PMemStats:
+        """The pool's exact PMem op counters (pool-wide)."""
         return self.pmem.stats
 
     @staticmethod
@@ -383,6 +477,8 @@ class Pool:
     def open_or_create(cls, path: str, size: int, *,
                        geometry: BlockGeometry = PAPER_GEOMETRY,
                        max_regions: int = DEFAULT_MAX_REGIONS) -> "Pool":
+        """Open ``path`` if it is a formatted pool, else create one there
+        (refusing to overwrite a non-pool file)."""
         if probe_file(path) is not None:
             return cls.open(path)
         if os.path.exists(path) and os.path.getsize(path) > 0:
@@ -470,7 +566,13 @@ class Pool:
               threads: int = 1) -> PagesHandle:
         """Open-or-create a named failure-atomic page region (slot array +
         µlogs). Geometry-tagged via the pool; on open, the slot table is
-        rebuilt from slot headers and valid µlogs are replayed."""
+        rebuilt from slot headers and valid µlogs are replayed.
+
+        Passing ``nslots <= npages`` creates an *overcommitted* region:
+        the PMem slot array holds fewer slots than logical pages and a
+        :class:`repro.tier.SpillScheduler` must stand behind it to evict
+        cold slots to SSD before CoW runs out (on reopen, overcommit is
+        inferred from the durable geometry)."""
         rec = self.directory.lookup(name)
         if rec is None:
             if npages is None or page_size is None:
@@ -479,7 +581,8 @@ class Pool:
             nslots = nslots if nslots is not None else npages + max(2, npages // 4)
             layout = PageStoreLayout(base=0, page_size=page_size,
                                      npages=npages, nslots=nslots,
-                                     geometry=self.geometry)
+                                     geometry=self.geometry,
+                                     overcommit=nslots <= npages)
             length = PageStore.region_bytes(layout, n_mulogs=n_mulogs)
             rec = self.directory.allocate(
                 name, KIND_PAGES, length,
@@ -499,7 +602,8 @@ class Pool:
                                  f"with durable record ({stored})")
         layout = PageStoreLayout(base=rec.base, page_size=m_page,
                                  npages=m_npages, nslots=m_nslots,
-                                 geometry=self.geometry)
+                                 geometry=self.geometry,
+                                 overcommit=m_nslots <= m_npages)
         store = PageStore.open(self.pmem, layout, n_mulogs=m_mulogs,
                                threads=threads)
         return PagesHandle(self, rec, store)
@@ -512,7 +616,8 @@ class Pool:
         m_page, m_npages, m_nslots, _ = rec.meta
         return PageStoreLayout(base=rec.base, page_size=m_page,
                                npages=m_npages, nslots=m_nslots,
-                               geometry=self.geometry)
+                               geometry=self.geometry,
+                               overcommit=m_nslots <= m_npages)
 
     def raw(self, name: str, nbytes: Optional[int] = None) -> RawHandle:
         """Open-or-create a named untyped region."""
@@ -528,6 +633,50 @@ class Pool:
                 raise ValueError(f"raw {name!r} holds {rec.length} B, "
                                  f"wanted {nbytes}")
         return RawHandle(self, rec)
+
+    # ------------------------------------------------------- SSD tier
+
+    def attach_ssd(self, ssd: SSD) -> SSD:
+        """Attach the flash device backing this pool's ``KIND_SSD`` regions.
+
+        The attachment is volatile (like the PMem object itself): on
+        reopen after a crash, attach the device again before opening any
+        SSD region handle. Returns the device for chaining."""
+        if self.ssd_dev is not None and self.ssd_dev is not ssd:
+            raise ValueError("pool already has an attached SSD device")
+        end = self.directory.ssd_data_end
+        if end > ssd.size:
+            raise ValueError(
+                f"directory has {end} B of committed SSD regions but the "
+                f"attached device holds only {ssd.size} B")
+        self.ssd_dev = ssd
+        return ssd
+
+    def ssd_region(self, name: str, nbytes: Optional[int] = None
+                   ) -> SSDRegionHandle:
+        """Open-or-create a named SSD-backed region (``KIND_SSD``).
+
+        Requires an attached device (:meth:`attach_ssd`). Creation
+        bump-allocates ``nbytes`` of the SSD address space and commits the
+        binding as a single-line directory entry; the SSD bytes are not
+        zeroed (consumers gate reads on their own validity metadata)."""
+        if self.ssd_dev is None:
+            raise RuntimeError(
+                f"SSD region {name!r} needs a device: call "
+                f"pool.attach_ssd(SSD(...)) first")
+        rec = self.directory.lookup(name)
+        if rec is None:
+            if nbytes is None:
+                raise ValueError(f"creating SSD region {name!r} requires "
+                                 f"nbytes=")
+            rec = self.directory.allocate_ssd(name, int(nbytes),
+                                              self.ssd_dev.size)
+        else:
+            rec = self.directory.require(name, KIND_SSD)
+            if nbytes is not None and nbytes > rec.length:
+                raise ValueError(f"SSD region {name!r} holds {rec.length} B, "
+                                 f"wanted {nbytes}")
+        return SSDRegionHandle(self, rec, self.ssd_dev)
 
     # --------------------------------------------------- typed consumers
 

@@ -1,0 +1,29 @@
+"""``repro.tier`` — the SSD capacity tier below PMem.
+
+The paper positions PMem *between* DRAM and flash: fast enough to
+absorb the I/O critical path, but capacity-constrained, with NAND flash
+as the cheap cold tier underneath. This package completes that
+hierarchy for the whole stack:
+
+- :mod:`repro.core.ssd`      — the modeled flash device (block-granular,
+  write-buffered, crash-simulated) and its exact op counts.
+- :class:`~repro.core.costmodel.SSDCostModel` — counts → modeled time
+  with the Fig. 1 latency/bandwidth gap and NAND's read/write asymmetry.
+- :mod:`repro.tier.spill`    — :class:`SpillScheduler`: evicts cold page
+  slots and sealed WAL generations to SSD-backed directory regions
+  (``KIND_SSD``), promotes pages back on access, and keeps everything
+  reachable across crashes through a checksummed, double-buffered spill
+  map.
+
+Wiring: a :class:`~repro.io.flushq.FlushQueue` takes ``spill=`` and
+feeds the tier at epoch drains (an epoch that outgrows the PMem slot
+budget evicts cold pages instead of failing allocation); a generational
+:class:`~repro.io.multilog.MultiLog` enqueues sealed generations at
+:meth:`~repro.io.multilog.MultiLog.roll`; and
+:class:`~repro.core.recovery.PersistentKV` drives both from its
+checkpoint path (``KVConfig(slot_budget=…, wal_lanes=…)``), which is
+what lets it run a lane-striped redo log indefinitely in bounded PMem.
+"""
+
+from repro.core.ssd import SSD, SSDStats  # noqa: F401
+from repro.tier.spill import SpillScheduler, SpillStats  # noqa: F401

@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Docs gate for CI: fail on (a) public symbols in ``repro.pool``,
+``repro.io`` and ``repro.tier`` missing docstrings, and (b) broken
+intra-repo links in README.md and docs/.
+
+Pure stdlib (ast + re): runs before any dependency is installed.
+
+Usage::
+
+    python tools/check_docs.py            # check everything
+    python tools/check_docs.py --docstrings-only
+    python tools/check_docs.py --links-only
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: modules whose public API must be fully docstringed
+DOC_SCOPES = ["src/repro/pool.py", "src/repro/io", "src/repro/tier"]
+
+#: markdown files whose intra-repo links must resolve
+LINK_ROOTS = ["README.md", "docs"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def check_docstrings() -> list:
+    """Every module, public class, and public function/method in scope
+    must carry a docstring. ``__init__`` may lean on its class docstring
+    only if it takes no parameters beyond ``self``."""
+    problems = []
+    files = []
+    for scope in DOC_SCOPES:
+        p = REPO / scope
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    for path in files:
+        rel = path.relative_to(REPO)
+        tree = ast.parse(path.read_text(), filename=str(rel))
+        if not ast.get_docstring(tree):
+            problems.append(f"{rel}: module missing docstring")
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and is_public(node.name):
+                if not ast.get_docstring(node):
+                    problems.append(
+                        f"{rel}:{node.lineno}: class {node.name} missing "
+                        f"docstring")
+                for item in node.body:
+                    if not isinstance(item, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                        continue
+                    name = item.name
+                    if name == "__init__":
+                        takes_args = len(item.args.args) > 1 or \
+                            item.args.vararg or item.args.kwonlyargs
+                        if takes_args and not ast.get_docstring(item):
+                            problems.append(
+                                f"{rel}:{item.lineno}: "
+                                f"{node.name}.__init__ missing docstring")
+                        continue
+                    if not is_public(name):
+                        continue
+                    if not ast.get_docstring(item):
+                        problems.append(
+                            f"{rel}:{item.lineno}: {node.name}.{name} "
+                            f"missing docstring")
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and is_public(node.name) and not ast.get_docstring(node):
+                problems.append(
+                    f"{rel}:{node.lineno}: function {node.name} missing "
+                    f"docstring")
+    return problems
+
+
+def check_links() -> list:
+    """Every relative markdown link in README/docs must point at an
+    existing file (anchors are checked for file existence only)."""
+    problems = []
+    files = []
+    for root in LINK_ROOTS:
+        p = REPO / root
+        files.extend(sorted(p.rglob("*.md")) if p.is_dir() else
+                     ([p] if p.exists() else []))
+    for path in files:
+        rel = path.relative_to(REPO)
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                target = target.split("#", 1)[0]
+                if not target:
+                    continue   # pure in-page anchor
+                resolved = (path.parent / target).resolve()
+                if not resolved.exists():
+                    problems.append(
+                        f"{rel}:{lineno}: broken link -> {m.group(1)}")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--docstrings-only", action="store_true")
+    ap.add_argument("--links-only", action="store_true")
+    args = ap.parse_args()
+
+    problems = []
+    if not args.links_only:
+        problems += check_docstrings()
+    if not args.docstrings_only:
+        problems += check_links()
+    for p in problems:
+        print(p)
+    scope = ", ".join(DOC_SCOPES)
+    print(f"# checked docstrings in [{scope}] and links in "
+          f"[{', '.join(LINK_ROOTS)}]: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
