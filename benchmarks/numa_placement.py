@@ -1,0 +1,159 @@
+"""NUMA lane placement: near- vs far-socket PMem, and what the placer recovers.
+
+The paper's bandwidth figures are per-socket; Izraelevitz et al.
+(arXiv:1903.05714) measure far-socket PMem access at roughly 2-3x the
+near-socket cost. This sweep runs the Fig. 2 workload (concurrent
+lane-striped group-commit logging) on a modeled 2-socket pool under
+three placements:
+
+  * ``near``  — every lane's CPU socket == its region's home socket;
+  * ``far``   — every lane runs on the *other* socket (worst case);
+  * ``placer``— :class:`repro.io.LanePlacer` decides (spread regions,
+    near-first CPU assignment, adaptive group commit).
+
+Checks: far-only placement costs >= 2x near (the Izraelevitz gap on the
+modeled engine); the placer lands within 20% of near; with more lanes
+than near-socket CPU capacity it degrades gracefully between near and
+far; and dynamic group-commit sizing recovers most of a remote lane's
+barrier overhead. A page-flush epoch (Fig. 5 side) is swept near-vs-far
+too.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import COST_MODEL
+from repro.io.multilog import MultiLog
+from repro.io.placer import LanePlacer
+from repro.pool import Pool
+
+from benchmarks.common import check, emit
+
+LANES = 4
+APPENDS = 512
+PAYLOAD = b"x" * 48
+GROUP_COMMIT = 8
+
+
+class _PinnedPlacer:
+    """Degenerate placer that pins every flush lane to one CPU socket
+    (the benchmark's far-socket-only page-flush configuration)."""
+
+    def __init__(self, socket: int) -> None:
+        self.socket = socket
+
+    def place(self, region_sockets):
+        return [self.socket] * len(region_sockets)
+
+
+def _wal_time(lane_sockets, lane_cpu, *, placer=False, lanes=LANES,
+              group_commit=GROUP_COMMIT, appends=APPENDS) -> float:
+    """Modeled engine time of the Fig. 2 log workload under a placement."""
+    pool = Pool.create(None, 1 << 22, sockets=2)
+    ml = MultiLog(pool, "wal", lanes=lanes, capacity=lanes << 18,
+                  technique="zero", group_commit=group_commit,
+                  lane_sockets=lane_sockets, lane_cpu_sockets=lane_cpu,
+                  placer=placer)
+    before = pool.stats.snapshot()
+    for _ in range(appends):
+        ml.append(PAYLOAD)
+    ml.commit()
+    return COST_MODEL.engine_time_ns(pool.stats.delta(before),
+                                     active_lanes=lanes)
+
+
+def _flush_time(cpu_socket) -> float:
+    """Modeled engine time of one page-flush epoch (Fig. 5 side) with the
+    page region homed on socket 1 and the flush lanes pinned to
+    ``cpu_socket`` (None = near)."""
+    pool = Pool.create(None, 1 << 23, sockets=2)
+    pages = pool.pages("heap", npages=16, page_size=4096, socket=1)
+    placer = None if cpu_socket is None else _PinnedPlacer(cpu_socket)
+    fq = pages.flush_queue(lanes=4, placer=placer)
+    for pid in range(16):
+        fq.enqueue(pid, np.full(4096, pid + 1, dtype=np.uint8))
+    rep = fq.flush_epoch()
+    return rep.modeled_ns
+
+
+def run() -> bool:
+    ok = True
+
+    # --- log side: the Fig. 2 workload under three placements ------------
+    spread = [i % 2 for i in range(LANES)]
+    far_cpu = [1 - s for s in spread]
+    t_near = _wal_time(spread, spread)
+    t_far = _wal_time(spread, far_cpu)
+    t_placer = _wal_time(None, None, placer=None)   # pool placer (adaptive)
+    emit("numa.wal.near", t_near / 1e3 / APPENDS, "all lanes near-socket")
+    emit("numa.wal.far", t_far / 1e3 / APPENDS, "all lanes far-socket")
+    emit("numa.wal.placer", t_placer / 1e3 / APPENDS, "LanePlacer placement")
+    ok &= check("numa: far-socket-only costs >= 2x near (Izraelevitz gap)",
+                t_far >= 2.0 * t_near, f"ratio {t_far / t_near:.2f}")
+    ok &= check("numa: placer lands within 20% of near-socket-only",
+                t_placer <= 1.2 * t_near,
+                f"ratio {t_placer / t_near:.2f}")
+
+    # --- under load: more lanes homed on a socket than its CPUs ----------
+    # (an existing pool whose six lane regions all live on socket 0: the
+    # placer keeps four near and overflows two to socket-1 CPUs, remote)
+    pool = Pool.create(None, 1 << 23, sockets=2)
+    tight = LanePlacer(pool.pmem, cpu_lanes_per_socket=4)
+    n = 6
+    ml = MultiLog(pool, "wal", lanes=n, capacity=n << 18, technique="zero",
+                  group_commit=GROUP_COMMIT, lane_sockets=[0] * n,
+                  placer=tight)
+    remote_lanes = sum(1 for c, h in zip(ml.lane_cpu, ml.lane_sockets)
+                       if c != h)
+    before = pool.stats.snapshot()
+    for _ in range(APPENDS):
+        ml.append(PAYLOAD)
+    ml.commit()
+    t_loaded = COST_MODEL.engine_time_ns(pool.stats.delta(before),
+                                         active_lanes=n)
+    emit("numa.wal.overloaded", t_loaded / 1e3 / APPENDS,
+         f"{n} lanes, {remote_lanes} remote")
+    ok &= check("numa: placer spills to remote lanes only under load",
+                0 < remote_lanes < n, f"{remote_lanes}/{n} remote")
+
+    # --- dynamic group commit on a remote lane ---------------------------
+    # (base k=2: a caller already batching; base=1 is a durability
+    # contract the placer never overrides)
+    t_static = _wal_time(spread, far_cpu, group_commit=2)
+    pool = Pool.create(None, 1 << 22, sockets=2)
+    ml = MultiLog(pool, "wal", lanes=LANES, capacity=LANES << 18,
+                  technique="zero", group_commit=2, lane_sockets=spread,
+                  lane_cpu_sockets=far_cpu, placer=LanePlacer(pool.pmem))
+    before = pool.stats.snapshot()
+    for _ in range(APPENDS):
+        ml.append(PAYLOAD)
+    ml.commit()
+    t_adaptive = COST_MODEL.engine_time_ns(pool.stats.delta(before),
+                                           active_lanes=LANES)
+    emit("numa.wal.remote.static_k2", t_static / 1e3 / APPENDS,
+         "far lanes, group_commit=2")
+    emit("numa.wal.remote.adaptive_k", t_adaptive / 1e3 / APPENDS,
+         f"far lanes, adaptive k -> {ml.lane_group_commit}")
+    ok &= check("numa: dynamic group-commit amortizes remote barriers",
+                t_adaptive < 0.7 * t_static,
+                f"adaptive/static {t_adaptive / t_static:.2f}")
+
+    # --- page-flush side (Fig. 5 epoch) ----------------------------------
+    f_near = _flush_time(None)
+    f_far = _flush_time(0)      # region homed on socket 1, lanes pinned to 0
+    emit("numa.flush.near", f_near / 1e3, "epoch near-socket")
+    emit("numa.flush.far", f_far / 1e3, "epoch far-socket")
+    ok &= check("numa: far-socket page-flush epoch costs >= 1.8x near",
+                f_far >= 1.8 * f_near, f"ratio {f_far / f_near:.2f}")
+    return ok
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="same sweep (it is all modeled and fast); kept "
+                         "for CI symmetry with benchmarks/run.py --smoke")
+    ap.parse_args()
+    raise SystemExit(0 if run() else 1)

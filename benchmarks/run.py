@@ -36,6 +36,7 @@ def main() -> None:
         fig4_persist_latency,
         fig5_pageflush,
         fig6_logging,
+        numa_placement,
         tab_ycsb,
         tier_capacity,
     )
@@ -49,6 +50,7 @@ def main() -> None:
         (fig6_logging, "Fig.6 transaction log throughput", True),
         (tab_ycsb, "§3.3.2 YCSB validation", True),
         (tier_capacity, "Tiered storage: capacity-pressure sweep", True),
+        (numa_placement, "NUMA lane placement: near vs far socket", True),
     ]
     from benchmarks import common
 

@@ -183,6 +183,20 @@ class PMemCostModel:
     wc_defeat_lanes: int = 4
     wc_defeat_stall_ns: float = 320.0
 
+    # NUMA remote-access multipliers (Izraelevitz et al., "Basic
+    # Performance Measurements of the Intel Optane DC Persistent Memory
+    # Module", arXiv:1903.05714): far-socket PMem access crosses the UPI
+    # interconnect — sequential write bandwidth drops ~2-3x vs
+    # near-socket (remote stores also defeat the DIMM's write combining
+    # earlier), and persist latency roughly doubles (the fence waits for
+    # the remote ADR domain's ack across the interconnect). Applied by
+    # ``engine_time_ns`` to the ``lane_remote_*`` counts a socket-tagged
+    # lane accrues; a lane with no remote work pays exactly the local
+    # cost, so an all-near placement is bit-identical to the pre-NUMA
+    # model.
+    numa_remote_block_mult: float = 2.3
+    numa_remote_barrier_mult: float = 2.0
+
     # ----------------------------------------------------------- helpers
 
     def persist_latency_ns(
@@ -311,6 +325,14 @@ class PMemCostModel:
         lane (setup, shared-structure commits) is serialized and added on
         top. With no lane-attributed work at all this degrades exactly to
         :meth:`time_ns` at ``threads=active_lanes``.
+
+        NUMA: a lane's *remote* work (``lane_remote_*``, accrued when the
+        lane's CPU socket differs from the touched bytes' home socket)
+        pays the Izraelevitz far-socket multipliers — barriers x
+        ``numa_remote_barrier_mult``, device blocks (and the WC-defeat
+        stall, which is a device-side RMW) x ``numa_remote_block_mult``.
+        With every lane near its memory the remote counts are zero and
+        the result is identical to the pre-NUMA model.
         """
         lanes = set()
         for field in (stats.lane_barriers, stats.lane_lines,
@@ -325,10 +347,19 @@ class PMemCostModel:
         defeated = n > self.wc_defeat_lanes
         critical = 0.0
         for li in lanes:
-            t = stats.lane_barriers.get(li, 0) * barrier_ns
-            t += stats.lane_blocks_written.get(li, 0) * per_block
+            bar = stats.lane_barriers.get(li, 0)
+            rbar = min(stats.lane_remote_barriers.get(li, 0), bar)
+            blk = stats.lane_blocks_written.get(li, 0)
+            rblk = min(stats.lane_remote_blocks_written.get(li, 0), blk)
+            t = (bar - rbar) * barrier_ns \
+                + rbar * barrier_ns * self.numa_remote_barrier_mult
+            t += (blk - rblk) * per_block \
+                + rblk * per_block * self.numa_remote_block_mult
             if defeated:
-                t += stats.lane_partial_blocks.get(li, 0) * self.wc_defeat_stall_ns
+                par = stats.lane_partial_blocks.get(li, 0)
+                rpar = min(stats.lane_remote_partial_blocks.get(li, 0), par)
+                t += (par - rpar) * self.wc_defeat_stall_ns
+                t += rpar * self.wc_defeat_stall_ns * self.numa_remote_block_mult
             critical = max(critical, t)
         # Unattributed (shared, serialized) remainder at single-writer cost.
         shared_barriers = stats.barriers - sum(stats.lane_barriers.values())

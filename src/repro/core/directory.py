@@ -72,11 +72,15 @@ KIND_SSD = 4    # SSD-backed range: ``base`` is an offset in the pool's
                 # consumer's problem (the spill tier gates reads with
                 # checksummed map records).
 
-# magic, version, cache_line, block, max_regions, pool_size
-_SUPER = struct.Struct("<8sIIIIQ")
-# name, kind, generation, base, length, meta[4]  — exactly 64 bytes
+# magic, version, cache_line, block, max_regions, pool_size, sockets
+# (sockets == 0 in a pre-NUMA superblock and is read as 1)
+_SUPER = struct.Struct("<8sIIIIQI")
+# name, kind, generation, base, length, meta[4]  — exactly 64 bytes.
+# meta[3]'s high 16 bits carry the region's NUMA home socket for every
+# kind (consumers own only the low 16 bits); see RegionRecord.socket.
 _ENTRY = struct.Struct("<20sIQQQ4I")
 _NAME_BYTES = 20
+_SOCKET_SHIFT = 16
 
 assert _ENTRY.size == 64
 
@@ -95,6 +99,14 @@ class RegionRecord:
     @property
     def end(self) -> int:
         return self.base + self.length
+
+    @property
+    def socket(self) -> int:
+        """NUMA home socket of the region's bytes (high 16 bits of
+        ``meta[3]``; 0 for regions created socket-unaware). A placement
+        hint for the cost model and the lane placer — never a durability
+        input: recovery is byte-identical under any socket tag."""
+        return (self.meta[3] >> _SOCKET_SHIFT) & 0xFFFF
 
 
 def directory_bytes(geometry: BlockGeometry, max_regions: int) -> int:
@@ -130,7 +142,7 @@ class RegionDirectory:
         # committed entries, then commit the superblock.
         pmem.store(0, np.zeros(table_bytes, dtype=np.uint8), streaming=True)
         sb = _SUPER.pack(DIRECTORY_MAGIC, _FORMAT_VERSION, g.cache_line,
-                         g.block, max_regions, pmem.size)
+                         g.block, max_regions, pmem.size, pmem.sockets)
         pmem.store(0, sb, streaming=True)
         pmem.persist(0, table_bytes, kind=FlushKind.NT)
         return d
@@ -142,7 +154,8 @@ class RegionDirectory:
         sb = pmem.durable_slice(0, min(_SUPER.size, pmem.size))
         if sb.size < _SUPER.size:
             raise ValueError("region too small to hold a pool superblock")
-        magic, version, cl, blk, max_regions, size = _SUPER.unpack_from(sb, 0)
+        magic, version, cl, blk, max_regions, size, sockets = \
+            _SUPER.unpack_from(sb, 0)
         if magic != DIRECTORY_MAGIC:
             raise ValueError("not a pool region (bad directory magic)")
         if version != _FORMAT_VERSION:
@@ -155,6 +168,11 @@ class RegionDirectory:
         if size != pmem.size:
             raise ValueError(f"pool was formatted for {size} B, region is "
                              f"{pmem.size} B")
+        # the superblock records the socket topology the pool was
+        # formatted for; adopt it (sockets affect accounting only, never
+        # layout — unlike geometry, a mismatch cannot corrupt anything)
+        if sockets:
+            pmem.sockets = max(pmem.sockets, int(sockets))
         d = cls(pmem, max_regions)
         # the table is tiny — read just it, not the whole durable image
         img = pmem.durable_slice(0, (1 + max_regions) * g.cache_line)
@@ -167,6 +185,9 @@ class RegionDirectory:
                 d.records[rec.name] = rec
                 d._slot_of[rec.name] = slot
             d._next_gen = max(d._next_gen, rec.generation + 1)
+        for rec in d.records.values():
+            if rec.kind != KIND_SSD:
+                pmem.set_home(rec.base, rec.length, rec.socket)
         return d
 
     @staticmethod
@@ -247,10 +268,22 @@ class RegionDirectory:
     # ---------------------------------------------------------- allocate
 
     def allocate(self, name: str, kind: int, length: int,
-                 meta: Tuple[int, int, int, int] = (0, 0, 0, 0)) -> RegionRecord:
+                 meta: Tuple[int, int, int, int] = (0, 0, 0, 0),
+                 socket: int = 0) -> RegionRecord:
         """Failure-atomically allocate a named region: place → zero-init →
         single-line entry commit. See the module docstring for the crash
-        argument."""
+        argument. ``socket`` tags the region's NUMA home socket (stored in
+        the high 16 bits of ``meta[4]``'s last word; a pure performance
+        hint — see :attr:`RegionRecord.socket`)."""
+        socket = int(socket)
+        if not 0 <= socket < max(1, self.pmem.sockets):
+            raise ValueError(
+                f"socket {socket} outside the pool's {self.pmem.sockets}"
+                f"-socket topology")
+        if meta[3] >> _SOCKET_SHIFT:
+            raise ValueError("meta[3] high bits are reserved for the socket tag")
+        meta = (meta[0], meta[1], meta[2],
+                (meta[3] & 0xFFFF) | (socket << _SOCKET_SHIFT))
         rec, slot = self._place(name, kind, length, meta)
         self._initialize(rec)
         self._commit(rec, slot)
@@ -336,12 +369,15 @@ class RegionDirectory:
         self.records[rec.name] = rec
         self._slot_of[rec.name] = slot
         self._next_gen += 1
+        if rec.kind != KIND_SSD:
+            self.pmem.set_home(rec.base, rec.length, rec.socket)
 
 
-def probe_file(path: str) -> Optional[Tuple[int, int, int, int]]:
+def probe_file(path: str) -> Optional[Tuple[int, int, int, int, int]]:
     """Read a pool file's superblock without mapping the region.
-    Returns ``(cache_line, block, max_regions, size)`` or ``None`` if the
-    file is missing or not a formatted pool."""
+    Returns ``(cache_line, block, max_regions, size, sockets)`` or
+    ``None`` if the file is missing or not a formatted pool (``sockets``
+    is 1 for a pre-NUMA superblock)."""
     try:
         with open(path, "rb") as f:
             buf = f.read(_SUPER.size)
@@ -349,7 +385,7 @@ def probe_file(path: str) -> Optional[Tuple[int, int, int, int]]:
         return None
     if len(buf) < _SUPER.size:
         return None
-    magic, version, cl, blk, max_regions, size = _SUPER.unpack(buf)
+    magic, version, cl, blk, max_regions, size, sockets = _SUPER.unpack(buf)
     if magic != DIRECTORY_MAGIC or version != _FORMAT_VERSION:
         return None
-    return cl, blk, max_regions, size
+    return cl, blk, max_regions, size, max(1, sockets)

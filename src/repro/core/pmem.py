@@ -27,6 +27,7 @@ operates on the in-memory cache layers only.
 
 from __future__ import annotations
 
+import bisect
 import collections
 import contextlib
 import dataclasses
@@ -78,6 +79,18 @@ class PMemStats:
     lane_blocks_written: Dict[int, int] = dataclasses.field(default_factory=dict)
     lane_partial_blocks: Dict[int, int] = dataclasses.field(default_factory=dict)
 
+    # NUMA accounting: persistent work performed by a lane whose CPU socket
+    # (``PMem.lane(i, socket=s)``) differs from the *home* socket of the
+    # touched bytes (``PMem.set_home``). Far-socket PMem access costs
+    # ~2-3x near-socket (Izraelevitz et al.); ``engine_time_ns`` charges
+    # these counts the remote multipliers. Remote counts are always a
+    # subset of the corresponding totals above.
+    remote_barriers: int = 0
+    remote_blocks_written: int = 0
+    lane_remote_barriers: Dict[int, int] = dataclasses.field(default_factory=dict)
+    lane_remote_blocks_written: Dict[int, int] = dataclasses.field(default_factory=dict)
+    lane_remote_partial_blocks: Dict[int, int] = dataclasses.field(default_factory=dict)
+
     def snapshot(self) -> "PMemStats":
         d = dataclasses.replace(self)
         for f in dataclasses.fields(PMemStats):
@@ -124,9 +137,14 @@ class PMem:
         *,
         path: Optional[str] = None,
         geometry: BlockGeometry = PAPER_GEOMETRY,
+        sockets: int = 1,
     ) -> None:
         self.size = int(size)
         self.geometry = geometry
+        #: socket topology: byte ranges have a *home* socket (set_home) and
+        #: lanes an executing CPU socket (lane(i, socket=s)); a mismatch is
+        #: a remote access and is counted in the ``remote_*`` stats.
+        self.sockets = max(1, int(sockets))
         if path is not None:
             exists = os.path.exists(path) and os.path.getsize(path) == self.size
             mode = "r+" if exists else "w+"
@@ -154,29 +172,77 @@ class PMem:
         self._recent_nt: collections.deque = collections.deque(maxlen=_RECENCY_WINDOW)
         #: lane currently executing (repro.io engine); None = unattributed.
         self._lane: Optional[int] = None
+        #: CPU socket of the executing lane; None = topology-agnostic work
+        #: (never counted remote).
+        self._lane_socket: Optional[int] = None
+        # home-socket interval map: parallel sorted arrays (base, end, socket)
+        self._home_bases: list = []
+        self._home_ends: list = []
+        self._home_sockets: list = []
         self.stats = PMemStats()
 
     # ----------------------------------------------------------------- lanes
 
     @contextlib.contextmanager
-    def lane(self, lane_id: int) -> Iterator[None]:
+    def lane(self, lane_id: int, *, socket: Optional[int] = None) -> Iterator[None]:
         """Attribute all persistent work inside the block to ``lane_id``.
 
         Lanes model *concurrently executing* writers (the sim itself runs
         them sequentially): each lane's barrier / line / block counts are
         recorded separately so ``costmodel.engine_time_ns`` can take the
         wall-clock max over lanes and apply the Fig. 2 concurrency curve
-        for the number of simultaneously-active lanes."""
-        prev = self._lane
+        for the number of simultaneously-active lanes.
+
+        ``socket`` names the CPU socket the lane executes on: persistent
+        work it performs against bytes whose home socket (:meth:`set_home`)
+        differs is *remote* and additionally counted in the
+        ``remote_*`` / ``lane_remote_*`` stats, which the cost model
+        charges the Izraelevitz far-socket multipliers."""
+        prev, prev_socket = self._lane, self._lane_socket
         self._lane = int(lane_id)
+        self._lane_socket = None if socket is None else int(socket)
         try:
             yield
         finally:
-            self._lane = prev
+            self._lane, self._lane_socket = prev, prev_socket
 
     def _lane_add(self, field: Dict[int, int], n: int = 1) -> None:
         if self._lane is not None and n:
             field[self._lane] = field.get(self._lane, 0) + n
+
+    # --------------------------------------------------------------- sockets
+
+    def set_home(self, off: int, size: int, socket: int) -> None:
+        """Declare the home socket of byte range ``[off, off+size)`` —
+        which socket's DIMMs back it. Unregistered bytes default to
+        socket 0. Re-registering a base replaces its span (pool regions
+        re-register on every open). Sockets beyond the topology clamp to
+        the last socket (defensive: a durable tag from a wider machine)."""
+        if size <= 0:
+            return
+        socket = min(max(0, int(socket)), self.sockets - 1)
+        i = bisect.bisect_left(self._home_bases, off)
+        if i < len(self._home_bases) and self._home_bases[i] == off:
+            self._home_ends[i] = off + size
+            self._home_sockets[i] = socket
+        else:
+            self._home_bases.insert(i, off)
+            self._home_ends.insert(i, off + size)
+            self._home_sockets.insert(i, socket)
+
+    def home_socket(self, off: int) -> int:
+        """Home socket of byte ``off`` (0 when unregistered)."""
+        i = bisect.bisect_right(self._home_bases, off) - 1
+        if i >= 0 and off < self._home_ends[i]:
+            return self._home_sockets[i]
+        return 0
+
+    def _is_remote(self, line: int) -> bool:
+        """Whether touching cache line ``line`` from the executing lane's
+        CPU socket crosses a socket boundary."""
+        if self._lane_socket is None:
+            return False
+        return self.home_socket(line * self.geometry.cache_line) != self._lane_socket
 
     # ------------------------------------------------------------------ io
 
@@ -282,6 +348,11 @@ class PMem:
         if pending:
             self.stats.barriers += 1
             self._lane_add(self.stats.lane_barriers)
+            if self._lane_socket is not None and any(
+                    self._is_remote(li) for li in pending):
+                # the fence waits for the far socket's ADR domain to ack
+                self.stats.remote_barriers += 1
+                self._lane_add(self.stats.lane_remote_barriers)
             self._commit(pending)
         self._staged.clear()
         self._wc.clear()
@@ -306,12 +377,18 @@ class PMem:
             lo = li * self.geometry.cache_line
             self._durable[lo : lo + data.size] = data
             blocks[li // lpb] = blocks.get(li // lpb, 0) + 1
-        for _, nlines in blocks.items():
+        for blk, nlines in blocks.items():
             self.stats.blocks_written += 1
             self._lane_add(self.stats.lane_blocks_written)
+            remote = self._is_remote(blk * lpb)
+            if remote:
+                self.stats.remote_blocks_written += 1
+                self._lane_add(self.stats.lane_remote_blocks_written)
             if nlines < lpb:
                 self.stats.partial_block_writes += 1
                 self._lane_add(self.stats.lane_partial_blocks)
+                if remote:
+                    self._lane_add(self.stats.lane_remote_partial_blocks)
 
     # --------------------------------------------------------------- crash
 

@@ -104,6 +104,10 @@ class KVConfig:
     #: fraction of page slots the spill keeps free beyond each epoch's
     #: immediate need (eviction slack)
     spill_low_watermark: float = 0.25
+    #: NUMA home socket for the engine's root/pages (and single-lane WAL)
+    #: regions on a multi-socket pool; multi-lane WAL regions are spread
+    #: over the sockets by the pool's LanePlacer regardless
+    socket: int = 0
 
     @property
     def recs_per_page(self) -> int:
@@ -150,9 +154,14 @@ class PersistentKV:
         g = cfg.geometry
 
         recover = _recover or pmpool.directory.lookup(f"{name}.root") is not None
-        self.root = pmpool.raw(f"{name}.root", nbytes=2 * g.cache_line)
+        #: lane placer for the WAL stripes and checkpoint flush epochs
+        #: (None on a single-socket pool — placement is then a no-op)
+        self._placer = pmpool.placer() if pmpool.sockets > 1 else None
+        self.root = pmpool.raw(f"{name}.root", nbytes=2 * g.cache_line,
+                               socket=cfg.socket)
         pages = pmpool.pages(f"{name}.pages", npages=cfg.npages,
-                             page_size=cfg.page_size, nslots=cfg.nslots)
+                             page_size=cfg.page_size, nslots=cfg.nslots,
+                             socket=cfg.socket)
         self.store: PageStore = pages.store
         self._spill = None
         if cfg.tiered:
@@ -173,12 +182,14 @@ class PersistentKV:
                                 capacity=cfg.log_capacity,
                                 technique=cfg.technique,
                                 group_commit=cfg.wal_group_commit,
-                                cfg=cfg.log, gen_sets=cfg.wal_gen_sets)
+                                cfg=cfg.log, gen_sets=cfg.wal_gen_sets,
+                                placer=self._placer)
             if self._spill is not None:
                 self.wal.attach_spill(self._spill)
         else:
             self.wal = pmpool.log(f"{name}.wal", capacity=cfg.log_capacity,
-                                  technique=cfg.technique, cfg=cfg.log)
+                                  technique=cfg.technique, cfg=cfg.log,
+                                  socket=cfg.socket)
         self.checkpoint_lsn = 0
         self._root_gen = 0
         # --- volatile state ------------------------------------------------
@@ -274,7 +285,7 @@ class PersistentKV:
         if self.cfg.flush_lanes > 1 or self._spill is not None:
             from repro.io.flushq import FlushQueue
             fq = FlushQueue(self.store, lanes=self.cfg.flush_lanes,
-                            spill=self._spill)
+                            spill=self._spill, placer=self._placer)
             for pid, lines in sorted(self.dirty.items()):
                 fq.enqueue(pid, self.pool[pid], sorted(lines))
             fq.flush_epoch()

@@ -21,6 +21,12 @@ batches and barriers":
   non-overlapping lane ids and converting per-lane op counts to modeled
   wall-clock (``costmodel.engine_time_ns``: max over lanes, Fig. 2
   concurrency curve, write-combining-defeat penalty).
+- :mod:`repro.io.placer`   — :class:`LanePlacer`: NUMA-aware lane
+  placement — spreads new lane regions over the sockets, runs each lane
+  on a CPU socket near its region (falling back to remote sockets only
+  under load), and adapts per-lane group-commit sizes to the observed
+  submit rate and socket distance. Consulted automatically on any
+  multi-socket pool.
 
 Consumers: ``pool.multilog(...)`` / ``pool.wal(..., lanes=N)`` for the
 training WAL, ``CheckpointManager`` (page flushes batched per save
@@ -31,3 +37,4 @@ epoch), ``PersistentKV`` (checkpoint flushing with ``flush_lanes``), and
 from repro.io.engine import IOEngine  # noqa: F401
 from repro.io.flushq import EpochReport, FlushQueue  # noqa: F401
 from repro.io.multilog import MultiLog, MultiLogRecovered  # noqa: F401
+from repro.io.placer import LanePlacer  # noqa: F401

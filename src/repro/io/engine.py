@@ -41,16 +41,23 @@ class IOEngine:
 
     def __init__(self, pool, *, lanes: int = 4,
                  group_commit: int = DEFAULT_GROUP_COMMIT,
-                 cost_model: PMemCostModel = COST_MODEL) -> None:
+                 cost_model: PMemCostModel = COST_MODEL,
+                 placer=None) -> None:
         """One engine per pool: ``lanes`` and ``group_commit`` are the
         defaults handed to front ends; ``cost_model`` converts op-count
-        deltas to modeled time."""
+        deltas to modeled time. ``placer`` (a
+        :class:`~repro.io.placer.LanePlacer`) is handed to every front
+        end so lanes run near their regions' NUMA home sockets; it
+        defaults to the pool's placer on a multi-socket pool."""
         if lanes < 1:
             raise ValueError("lanes must be >= 1")
         self.pool = pool
         self.lanes = int(lanes)
         self.group_commit = int(group_commit)
         self.cost_model = cost_model
+        if placer is None and getattr(pool, "sockets", 1) > 1:
+            placer = pool.placer()
+        self.placer = placer
         self._next_lane_id = 0
 
     def _alloc_lane_ids(self, n: int) -> int:
@@ -75,7 +82,8 @@ class IOEngine:
                       capacity=capacity, technique=technique,
                       group_commit=group_commit if group_commit is not None
                       else self.group_commit,
-                      cfg=cfg, lane_id_base=0, gen_sets=gen_sets)
+                      cfg=cfg, lane_id_base=0, gen_sets=gen_sets,
+                      placer=self.placer)
         ml.lane_id_base = self._alloc_lane_ids(ml.lanes)
         return ml
 
@@ -89,7 +97,7 @@ class IOEngine:
         return FlushQueue(pages, lanes=n,
                           lane_id_base=self._alloc_lane_ids(n),
                           flush_fn=flush_fn, cost_model=self.cost_model,
-                          spill=spill)
+                          spill=spill, placer=self.placer)
 
     def spill_scheduler(self, ssd=None, *, name: str = "spill", **kw):
         """The pool's :class:`repro.tier.SpillScheduler` — the engine's

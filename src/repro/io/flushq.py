@@ -65,7 +65,7 @@ class FlushQueue:
     def __init__(self, pages, *, lanes: int = 4, lane_id_base: int = 0,
                  flush_fn: Optional[Callable[..., Optional[str]]] = None,
                  cost_model: PMemCostModel = COST_MODEL,
-                 spill=None) -> None:
+                 spill=None, placer=None) -> None:
         """Wrap a page store (or :class:`~repro.pool.PagesHandle`).
 
         Args:
@@ -77,6 +77,11 @@ class FlushQueue:
             cost_model: converts the epoch's op-count delta to time.
             spill: optional :class:`repro.tier.SpillScheduler`; evicts
                 cold slots to SSD when an epoch outgrows the PMem budget.
+            placer: optional :class:`~repro.io.placer.LanePlacer`; each
+                epoch's flush lanes then run on CPU sockets near the page
+                region's home socket, overflowing to remote sockets only
+                past the near capacity (remote lanes pay the Izraelevitz
+                far-socket multipliers in ``engine_time_ns``).
         """
         # accepts a PageStore or anything exposing one (PagesHandle)
         self.store = getattr(pages, "store", pages)
@@ -85,6 +90,7 @@ class FlushQueue:
         self.cost_model = cost_model
         self._flush_fn = flush_fn
         self.spill = spill
+        self.placer = placer
         # pid -> (latest page image, dirty line set | None=all dirty)
         self._pending: Dict[int, Tuple[np.ndarray, Optional[Set[int]]]] = {}
 
@@ -126,6 +132,13 @@ class FlushQueue:
         self._pending.clear()
         active = max(1, min(self.lanes, len(items)))
         pm = self.store.pmem
+        # NUMA: run every flush lane near the page region's home socket,
+        # overflowing to remote CPU sockets only past the near capacity
+        home = pm.home_socket(self.store.layout.base)
+        if self.placer is not None:
+            lane_cpu = self.placer.place([home] * active)
+        else:
+            lane_cpu = [home] * active
         before = pm.stats.snapshot()
         ssd_before = (self.spill.ssd.stats.snapshot()
                       if self.spill is not None else None)
@@ -142,7 +155,8 @@ class FlushQueue:
                 self.store, need=new_pages + 1, protect=protect)
         for j, (pid, (page, dirty)) in enumerate(items):
             lines = None if dirty is None else sorted(dirty)
-            with pm.lane(self.lane_id_base + (j % active)):
+            with pm.lane(self.lane_id_base + (j % active),
+                         socket=lane_cpu[j % active]):
                 try:
                     if self._flush_fn is not None:
                         tech = self._flush_fn(pid, page, lines, active)

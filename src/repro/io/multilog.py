@@ -99,7 +99,10 @@ class MultiLog:
                  group_commit: int = DEFAULT_GROUP_COMMIT,
                  cfg: Optional[LogConfig] = None,
                  lane_id_base: int = 0,
-                 gen_sets: int = 1) -> None:
+                 gen_sets: int = 1,
+                 lane_sockets: Optional[List[int]] = None,
+                 lane_cpu_sockets: Optional[List[int]] = None,
+                 placer=None) -> None:
         """Open-or-create the log.
 
         Args:
@@ -113,13 +116,26 @@ class MultiLog:
             technique: per-lane log technique when creating (default
                 "zero"); on reopen the durable record decides.
             group_commit: appends buffered per lane before an automatic
-                batch commit (1 = commit every append immediately).
+                batch commit (1 = commit every append immediately). With
+                a placer this is the *base* of per-lane adaptive sizes
+                (see :attr:`lane_group_commit`).
             cfg: :class:`~repro.core.log.LogConfig` for the lanes.
             lane_id_base: first lane id used for per-lane stats
                 attribution (the :class:`~repro.io.IOEngine` hands out
                 non-overlapping ranges).
             gen_sets: size of the generation ring; 1 (default) is the
                 plain non-generational log.
+            lane_sockets: NUMA home socket per lane region when creating
+                (default: the placer spreads them round-robin, or all 0);
+                on reopen the durable tags decide and a conflicting list
+                raises.
+            lane_cpu_sockets: explicit CPU socket per lane — pins where
+                each lane *executes*, overriding the placer (benchmarks
+                force far-socket-only placement with this).
+            placer: :class:`~repro.io.placer.LanePlacer` consulted for
+                region spreading, CPU placement and dynamic group-commit
+                sizing. Defaults to the pool's placer on a multi-socket
+                pool; pass ``placer=False`` to disable.
         """
         self.pool = pool
         self.name = name
@@ -127,12 +143,25 @@ class MultiLog:
         self.lane_id_base = int(lane_id_base)
         #: spill scheduler registered via ``attach_spill`` (generational)
         self._spill = None
+        if placer is None and getattr(pool, "sockets", 1) > 1:
+            placer = pool.placer()
+        self._placer = placer or None
+        self._lane_cpu_override = lane_cpu_sockets
 
         gen_rec = pool.directory.lookup(f"{name}.gen")
+        if (gen_rec is None and int(gen_sets) > 1
+                and pool.directory.lookup(f"{name}.lane0") is not None):
+            # upgrading in place would create a fresh empty ring and
+            # orphan every committed entry in the existing lane regions
+            raise ValueError(
+                f"multilog {name!r} exists as a non-generational log; it "
+                f"cannot be reopened with gen_sets={gen_sets} (recreate "
+                f"it under a new name, or open without gen_sets)")
         self.generational = gen_rec is not None or int(gen_sets) > 1
         if self.generational:
             self._init_generational(lanes, capacity, technique, cfg,
-                                    int(gen_sets), existing=gen_rec is not None)
+                                    int(gen_sets), lane_sockets,
+                                    existing=gen_rec is not None)
             return
 
         self.gen_sets = 1
@@ -169,12 +198,15 @@ class MultiLog:
                 raise ValueError(
                     f"multilog {name!r}: {self.lanes} lanes x {per_lane} B "
                     f"exceed the pool's {pool.free_bytes} free bytes")
+            homes = self._home_sockets(lane_sockets)
             self.handles = [
                 pool.log(f"{name}.lane{i}", capacity=per_lane,
-                         technique=technique or "zero", cfg=cfg)
+                         technique=technique or "zero", cfg=cfg,
+                         socket=homes[i])
                 for i in range(self.lanes)
             ]
         self.technique = self.handles[0].technique
+        self._setup_placement(lane_sockets)
         self._pending: List[List[bytes]] = [[] for _ in range(self.lanes)]
         self._pending_bytes: List[int] = [0] * self.lanes
         self._rr = 0
@@ -183,14 +215,66 @@ class MultiLog:
         self._live: List[Tuple[int, bytes]] = list(
             zip(self.recovered.glsns, self.recovered.entries))
 
+    # ------------------------------------------------------- NUMA placement
+
+    def _home_sockets(self, requested: Optional[List[int]]) -> List[int]:
+        """Home socket per lane region for the create path: the caller's
+        list, else the placer's round-robin spread, else all socket 0."""
+        if requested is not None:
+            if len(requested) != self.lanes:
+                raise ValueError(
+                    f"multilog {self.name!r}: {len(requested)} lane_sockets "
+                    f"for {self.lanes} lanes")
+            return [int(s) for s in requested]
+        if self._placer is not None:
+            return self._placer.spread(self.lanes)
+        return [0] * self.lanes
+
+    def _setup_placement(self, requested: Optional[List[int]]) -> None:
+        """Resolve, from the (now open) lane handles' durable socket tags,
+        where each lane's bytes live and which CPU socket runs it; seed
+        the per-lane adaptive group-commit sizes."""
+        #: NUMA home socket of each lane's region (durable directory tag)
+        self.lane_sockets: List[int] = [h.record.socket for h in self.handles]
+        if requested is not None and [int(s) for s in requested] != self.lane_sockets:
+            raise ValueError(
+                f"multilog {self.name!r} lanes live on sockets "
+                f"{self.lane_sockets}, caller asked for {list(requested)} — "
+                f"home sockets are fixed at creation")
+        if self._lane_cpu_override is not None:
+            if len(self._lane_cpu_override) != self.lanes:
+                raise ValueError(
+                    f"multilog {self.name!r}: {len(self._lane_cpu_override)} "
+                    f"lane_cpu_sockets for {self.lanes} lanes")
+            #: CPU socket each lane executes on
+            self.lane_cpu: List[int] = [int(s) for s in self._lane_cpu_override]
+        elif self._placer is not None:
+            self.lane_cpu = self._placer.place(self.lane_sockets)
+        else:
+            self.lane_cpu = list(self.lane_sockets)   # run every lane near
+        #: per-lane group-commit target (adapted by the placer; see
+        #: LanePlacer.adapt_k) — starts at the configured base
+        self._lane_k: List[int] = [self.group_commit] * self.lanes
+
+    @property
+    def lane_group_commit(self) -> List[int]:
+        """Current per-lane group-commit sizes (== ``group_commit``
+        everywhere until a placer adapts them to each lane's observed
+        submit rate and socket distance)."""
+        return list(self._lane_k)
+
     # ------------------------------------------------------- generations
 
     def _init_generational(self, lanes: Optional[int],
                            capacity: Optional[int],
                            technique: Optional[str],
                            cfg: Optional[LogConfig],
-                           gen_sets: int, *, existing: bool) -> None:
-        """Create or reopen the generation ring + header (see class doc)."""
+                           gen_sets: int,
+                           lane_sockets: Optional[List[int]] = None,
+                           *, existing: bool) -> None:
+        """Create or reopen the generation ring + header (see class doc).
+        Lane ``i`` lives on the same home socket in every generation set,
+        so placement survives rolls."""
         pool = self.pool
         name = self.name
         cl = pool.geometry.cache_line
@@ -244,9 +328,11 @@ class MultiLog:
             # entry commit is the atomic creation point, and re-running
             # this path after a crash mid-creation reopens/creates the
             # lane regions idempotently.
+            homes = self._home_sockets(lane_sockets)
             self._sets = [
                 [pool.log(f"{name}.g{j}.lane{i}", capacity=per_lane,
-                          technique=technique or "zero", cfg=cfg)
+                          technique=technique or "zero", cfg=cfg,
+                          socket=homes[i])
                  for i in range(self.lanes)]
                 for j in range(self.gen_sets)
             ]
@@ -259,6 +345,7 @@ class MultiLog:
         self._active = (self.current_gen - 1) % self.gen_sets
         self.handles = self._sets[self._active]
         self.technique = self.handles[0].technique
+        self._setup_placement(lane_sockets)
         self._pending = [[] for _ in range(self.lanes)]
         self._pending_bytes = [0] * self.lanes
         self._rr = 0
@@ -521,7 +608,7 @@ class MultiLog:
         w = self.handles[lane]._writer
         framed = w.stride(_GLSN.size + len(payload))
         if self._pending_bytes[lane] + framed > w.capacity - w.tail:
-            self._commit_lane(lane)
+            self._commit_lane(lane, "capacity")
             if framed > w.capacity - w.tail:
                 raise RuntimeError("log full")
         glsn = self._next_glsn
@@ -533,24 +620,34 @@ class MultiLog:
             self._live.append((glsn, bytes(payload)))
         if sync:
             self.commit()
-        elif len(self._pending[lane]) >= self.group_commit:
-            self._commit_lane(lane)
+        elif len(self._pending[lane]) >= self._lane_k[lane]:
+            self._commit_lane(lane, "auto")
         return glsn
 
-    def _commit_lane(self, lane: int) -> None:
+    def _commit_lane(self, lane: int, cause: str = "explicit") -> None:
         batch = self._pending[lane]
         if not batch:
             return
-        with self.pool.pmem.lane(self.lane_id_base + lane):
+        with self.pool.pmem.lane(self.lane_id_base + lane,
+                                 socket=self.lane_cpu[lane]):
             self.handles[lane].append_batch(batch)
         self._pending[lane] = []
         self._pending_bytes[lane] = 0
+        if self._placer is not None:
+            # dynamic group-commit sizing: a lane whose batches keep
+            # filling grows its k (throughput-bound); one the caller
+            # keeps fencing early shrinks it; remote lanes keep a higher
+            # floor to amortize their costlier barriers
+            self._lane_k[lane] = self._placer.adapt_k(
+                self._lane_k[lane], len(batch), cause,
+                remote=self.lane_cpu[lane] != self.lane_sockets[lane],
+                base=self.group_commit)
 
     def commit(self) -> None:
         """Group-commit every buffered entry on every lane. After this
         returns, all previously appended entries are durable."""
         for lane in range(self.lanes):
-            self._commit_lane(lane)
+            self._commit_lane(lane, "explicit")
 
     def reset(self) -> None:
         """Truncate in place: durably re-zero every (active-set) lane and

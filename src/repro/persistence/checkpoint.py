@@ -79,6 +79,13 @@ class CheckpointConfig:
     #: SSD device size auto-created per shard when a budget is set and no
     #: device is passed to the manager
     ssd_bytes: int = 1 << 28
+    #: NUMA sockets of the host this shard's pool models (recorded in the
+    #: pool superblock; the flush epoch's lanes then run near the shard's
+    #: home socket via the pool's LanePlacer)
+    sockets: int = 1
+    #: home socket of this shard's regions. None = ``shard_id % sockets``
+    #: (AsyncFlusher interleaves its shards across the sockets)
+    socket: Optional[int] = None
 
     @property
     def geometry(self) -> BlockGeometry:
@@ -128,6 +135,10 @@ class CheckpointManager:
         self.cfg = cfg
         self.path = path
         self.shard_id = shard_id
+        #: NUMA home socket of this shard's regions (settable until the
+        #: first save builds the pool — AsyncFlusher interleaves shards)
+        self.home_socket = (cfg.socket if cfg.socket is not None
+                            else shard_id % max(1, cfg.sockets))
         self._ssd = ssd
         self._spill = None
         self._spilled_pvn: Dict[int, int] = {}   # evicted pid -> pvn on SSD
@@ -188,14 +199,16 @@ class CheckpointManager:
                  + align_up(cfg.manifest_capacity, g.block)
                  + PageStore.region_bytes(sizing, n_mulogs=cfg.threads)
                  + spill_bytes + 2 * g.block)
-        self.pool = Pool.create(self.path, total, geometry=g, max_regions=16)
+        self.pool = Pool.create(self.path, total, geometry=g, max_regions=16,
+                                sockets=cfg.sockets)
         self.pmem = self.pool.pmem
+        home = min(self.home_socket, max(1, cfg.sockets) - 1)
         self.manifest = self.pool.log(
             "manifest", capacity=cfg.manifest_capacity, technique="zero",
-            cfg=LogConfig(geometry=g, pad_to_line=True))
+            cfg=LogConfig(geometry=g, pad_to_line=True), socket=home)
         self._pages = self.pool.pages(
             "pages", npages=npages, page_size=cfg.page_size, nslots=nslots,
-            n_mulogs=cfg.threads, threads=cfg.threads)
+            n_mulogs=cfg.threads, threads=cfg.threads, socket=home)
         self.store = self._pages.store
         self._layout = self._pages.layout
         if tiered:

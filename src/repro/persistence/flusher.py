@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Dict, List, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -44,12 +44,31 @@ class AsyncFlusher:
 
     def __init__(self,
                  managers: Union[CheckpointManager, Sequence[CheckpointManager]],
-                 *, max_pending: int = 2) -> None:
+                 *, max_pending: int = 2,
+                 sockets: Optional[int] = None) -> None:
+        """``sockets`` (when > 1) interleaves the shards' home sockets
+        round-robin across the host's NUMA sockets, so each shard's
+        worker lane flushes near-socket instead of funneling every
+        shard's pages through socket 0. Only shards that have not yet
+        built their pool (first save pending) and did not pin a socket
+        themselves (``CheckpointConfig.socket``) are moved; a shard
+        config still at the single-socket default also has the topology
+        propagated into it (its pool is created ``sockets``-wide —
+        without that the home assignment would clamp back to 0)."""
         if isinstance(managers, CheckpointManager):
             managers = [managers]
         self.managers: List[CheckpointManager] = list(managers)
         if not self.managers:
             raise ValueError("AsyncFlusher needs at least one manager")
+        if sockets is not None and sockets > 1:
+            import dataclasses
+            for i, mgr in enumerate(self.managers):
+                if mgr.pool is not None or mgr.cfg.socket is not None:
+                    continue
+                if mgr.cfg.sockets == 1:
+                    mgr.cfg = dataclasses.replace(mgr.cfg,
+                                                  sockets=int(sockets))
+                mgr.home_socket = i % mgr.cfg.sockets
         #: first shard's manager — kept for the single-shard call sites
         self.manager = self.managers[0]
         self._queues: List["queue.Queue"] = [

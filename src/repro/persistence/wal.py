@@ -128,7 +128,8 @@ class TrainWAL:
     def on_pool(cls, pool, name: str = "train_wal", *,
                 capacity_steps: Optional[int] = None,
                 technique: Optional[str] = None,
-                lanes: int = 1, group_commit: int = 1) -> "TrainWAL":
+                lanes: int = 1, group_commit: int = 1,
+                gen_sets: int = 1) -> "TrainWAL":
         """Open-or-create a named WAL region on ``pool``.
 
         ``capacity_steps`` is required when creating; on open it is
@@ -141,19 +142,36 @@ class TrainWAL:
         :class:`~repro.io.MultiLog` (regions ``<name>.lane<i>``): commits
         batch ``group_commit`` steps per barrier, and ``commit_step``
         grows a ``sync=`` knob. A WAL created multi-lane is reopened
-        multi-lane automatically (the lane regions are discovered)."""
+        multi-lane automatically (the lane regions are discovered). On a
+        multi-socket pool the lane regions are spread over the sockets
+        and each lane runs near its region (the pool's
+        :class:`~repro.io.placer.LanePlacer`).
+
+        ``gen_sets >= 2`` (multi-lane only) puts the WAL on a generation
+        ring: ``capacity_steps`` is then *per generation*, and
+        :meth:`roll` seals the live generation at a checkpoint so the
+        step log stops growing without bound (sealed generations stay
+        recoverable until a spill scheduler retires them to SSD). A
+        generational WAL is reopened generational automatically."""
         from repro.io.multilog import MultiLog
-        multi_exists = pool.directory.lookup(f"{name}.lane0") is not None
+        multi_exists = (pool.directory.lookup(f"{name}.lane0") is not None
+                        or pool.directory.lookup(f"{name}.gen") is not None)
         single_exists = pool.directory.lookup(name) is not None
         if single_exists and lanes > 1:
             raise ValueError(
                 f"WAL {name!r} exists as a single-lane region; it cannot "
                 f"be reopened with lanes={lanes} (recreate it, or open "
                 f"with lanes=1)")
-        if multi_exists or (lanes > 1 and not single_exists):
+        if gen_sets > 1 and single_exists:
+            raise ValueError(
+                f"WAL {name!r} exists as a single-lane region; it cannot "
+                f"be reopened with gen_sets={gen_sets} (recreate it)")
+        # the generation ring runs on the MultiLog even at lanes=1
+        if multi_exists or ((lanes > 1 or gen_sets > 1) and not single_exists):
             if multi_exists:
                 handle = MultiLog(pool, name, technique=technique,
-                                  group_commit=group_commit)
+                                  group_commit=group_commit,
+                                  gen_sets=gen_sets)
                 if capacity_steps is not None:
                     held = sum(h.record.length for h in handle.handles)
                     if held < capacity_steps * _BYTES_PER_STEP:
@@ -171,7 +189,8 @@ class TrainWAL:
                             + 4096 * max(1, lanes))
                 handle = MultiLog(pool, name, lanes=lanes, capacity=capacity,
                                   technique=technique or "zero",
-                                  group_commit=group_commit)
+                                  group_commit=group_commit,
+                                  gen_sets=gen_sets)
             return cls(_handle=handle)
         if single_exists:
             capacity = (capacity_steps * _BYTES_PER_STEP
@@ -205,6 +224,22 @@ class TrainWAL:
             self.log.commit()
 
     @property
+    def generational(self) -> bool:
+        """Whether this WAL runs on a generation ring (``gen_sets >= 2``)."""
+        return bool(getattr(self.log, "generational", False))
+
+    def roll(self) -> int:
+        """Seal the live WAL generation and start the next one (checkpoint
+        truncation for a generational WAL — the in-memory ``records``
+        history is kept; the sealed generation stays recoverable until a
+        spill scheduler retires it). Returns the sealed generation."""
+        if not self.generational:
+            raise RuntimeError(
+                "TrainWAL.roll needs a generational WAL — create it with "
+                "pool.wal(lanes=N, gen_sets>=2)")
+        return self.log.roll()
+
+    @property
     def last(self) -> Optional[StepRecord]:
         return self.records[-1] if self.records else None
 
@@ -217,10 +252,14 @@ class TrainWAL:
         return self.log.barriers_per_append
 
     @classmethod
-    def capacity_for(cls, steps: int, *, lanes: int = 1) -> int:
+    def capacity_for(cls, steps: int, *, lanes: int = 1,
+                     gen_sets: int = 1) -> int:
         """Bytes for a pool region holding a `steps`-step WAL (directory
         overhead included; a multi-lane WAL adds per-lane slack and
-        block-padding on top of the striped capacity)."""
+        block-padding on top of the striped capacity; a generational WAL
+        holds ``gen_sets`` lane sets of ``steps`` each plus the ring
+        header)."""
         from repro.pool import Pool
-        return (steps * _BYTES_PER_STEP + 8192 + 8192 * max(1, lanes)
+        per_set = steps * _BYTES_PER_STEP + 8192 + 8192 * max(1, lanes)
+        return (max(1, gen_sets) * per_set + 8192
                 + Pool.overhead_bytes())

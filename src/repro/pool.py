@@ -261,15 +261,19 @@ class PagesHandle(Handle):
                                 threads=threads)
 
     def flush_queue(self, *, lanes: int = 4, lane_id_base: int = 0,
-                    flush_fn=None, spill=None):
+                    flush_fn=None, spill=None, placer=None):
         """A :class:`repro.io.FlushQueue` over this region: enqueue dirty
         pages, drain once per epoch with lane-partitioned, batched flushing
         (the Hybrid crossover then follows the actual active-lane count).
         ``spill`` attaches a :class:`repro.tier.SpillScheduler` so epochs
-        that outgrow the slot budget evict to SSD instead of raising."""
+        that outgrow the slot budget evict to SSD instead of raising;
+        ``placer`` defaults to the pool's lane placer on a multi-socket
+        pool (flush lanes then run near this region's home socket)."""
         from repro.io.flushq import FlushQueue
+        if placer is None and self.pool.sockets > 1:
+            placer = self.pool.placer()
         return FlushQueue(self, lanes=lanes, lane_id_base=lane_id_base,
-                          flush_fn=flush_fn, spill=spill)
+                          flush_fn=flush_fn, spill=spill, placer=placer)
 
     def flush_cow(self, pid: int, page: np.ndarray, **kw) -> None:
         """Force a CoW(+pvn) flush. See :meth:`PageStore.flush_cow`."""
@@ -387,6 +391,7 @@ class Pool:
         self.directory = directory
         #: SSD device backing ``KIND_SSD`` regions (see :meth:`attach_ssd`)
         self.ssd_dev: Optional[SSD] = None
+        self._placer = None
 
     # ------------------------------------------------------------ basics
 
@@ -409,6 +414,22 @@ class Pool:
     def free_bytes(self) -> int:
         """PMem bytes not yet claimed by any directory region."""
         return self.directory.free_bytes
+
+    @property
+    def sockets(self) -> int:
+        """NUMA socket count the pool was formatted for (superblock)."""
+        return self.pmem.sockets
+
+    def placer(self):
+        """The pool's default :class:`~repro.io.placer.LanePlacer` (cached):
+        assigns lane CPU sockets near the lanes' home-socket regions,
+        falling back to remote sockets only when near capacity is
+        exhausted, and adapts per-lane group-commit sizes. MultiLog /
+        FlushQueue consult it automatically on a multi-socket pool."""
+        if self._placer is None:
+            from repro.io.placer import LanePlacer
+            self._placer = LanePlacer(self.pmem)
+        return self._placer
 
     def regions(self) -> Dict[str, RegionRecord]:
         """Snapshot of every committed directory record, by name."""
@@ -435,10 +456,14 @@ class Pool:
     @classmethod
     def create(cls, path: Optional[str], size: int, *,
                geometry: BlockGeometry = PAPER_GEOMETRY,
-               max_regions: int = DEFAULT_MAX_REGIONS) -> "Pool":
+               max_regions: int = DEFAULT_MAX_REGIONS,
+               sockets: int = 1) -> "Pool":
         """Format a fresh pool (``path=None`` → volatile in-memory region,
-        used by simulations and benchmarks)."""
-        pmem = PMem(size, path=path, geometry=geometry)
+        used by simulations and benchmarks). ``sockets`` records the NUMA
+        topology in the superblock; region creation then accepts
+        ``socket=`` home tags and the lane placer prefers near-socket
+        lanes (see ``docs/architecture.md``)."""
+        pmem = PMem(size, path=path, geometry=geometry, sockets=sockets)
         pmem.memset_zero()
         directory = RegionDirectory.format(pmem, max_regions=max_regions)
         return cls(pmem, directory)
@@ -460,7 +485,7 @@ class Pool:
                 # never format over a damaged pool
                 raise ValueError(f"{path} exists but is not a formatted "
                                  f"pool (bad or torn superblock)")
-            cache_line, block, _max_regions, size = sb
+            cache_line, block, _max_regions, size, sockets = sb
             actual = os.path.getsize(path)
             if actual != size:
                 # never let PMem's size-mismatch branch recreate (truncate)
@@ -470,15 +495,18 @@ class Pool:
                     f"{actual} B — refusing to open a truncated/grown pool")
             pmem = PMem(size, path=path,
                         geometry=BlockGeometry(cache_line=cache_line,
-                                               block=block))
+                                               block=block),
+                        sockets=sockets)
         return cls(pmem, RegionDirectory.load(pmem))
 
     @classmethod
     def open_or_create(cls, path: str, size: int, *,
                        geometry: BlockGeometry = PAPER_GEOMETRY,
-                       max_regions: int = DEFAULT_MAX_REGIONS) -> "Pool":
+                       max_regions: int = DEFAULT_MAX_REGIONS,
+                       sockets: int = 1) -> "Pool":
         """Open ``path`` if it is a formatted pool, else create one there
-        (refusing to overwrite a non-pool file)."""
+        (refusing to overwrite a non-pool file). On open, the superblock's
+        recorded socket topology wins over ``sockets``."""
         if probe_file(path) is not None:
             return cls.open(path)
         if os.path.exists(path) and os.path.getsize(path) > 0:
@@ -487,7 +515,7 @@ class Pool:
                 f"{path} exists but is not a formatted pool; refusing to "
                 f"overwrite it (delete it or pick another path)")
         return cls.create(path, size, geometry=geometry,
-                          max_regions=max_regions)
+                          max_regions=max_regions, sockets=sockets)
 
     @classmethod
     def attach(cls, pmem: PMem,
@@ -512,14 +540,16 @@ class Pool:
 
     def log(self, name: str, capacity: Optional[int] = None,
             technique: Optional[str] = None,
-            cfg: Optional[LogConfig] = None) -> LogHandle:
+            cfg: Optional[LogConfig] = None, *,
+            socket: Optional[int] = None) -> LogHandle:
         """Open-or-create a named log region.
 
         Create path (region absent): ``capacity`` is required; ``technique``
-        defaults to ``"zero"``. Open path: layout-relevant parameters come
+        defaults to ``"zero"``; ``socket`` tags the region's NUMA home
+        socket (default 0). Open path: layout-relevant parameters come
         from the durable directory record; passing a conflicting
-        ``technique``/``cfg`` raises. ``cfg.flush_kind`` is volatile and
-        honored either way."""
+        ``technique``/``cfg``/``socket`` raises. ``cfg.flush_kind`` is
+        volatile and honored either way."""
         rec = self.directory.lookup(name)
         flush_kind = cfg.flush_kind if cfg is not None else FlushKind.NT
         if rec is None:
@@ -531,7 +561,8 @@ class Pool:
             cfg = dataclasses.replace(cfg or LogConfig(),
                                       geometry=self.geometry)
             rec = self.directory.allocate(name, KIND_LOG, int(capacity),
-                                          _log_meta(technique, cfg))
+                                          _log_meta(technique, cfg),
+                                          socket=socket or 0)
             cls = LOG_TECHNIQUES[technique]
             writer = cls(self.pmem, rec.base, rec.length, cfg)
             recovered = RecoveredLog([], [], writer.tail, 1)
@@ -542,6 +573,10 @@ class Pool:
             raise ValueError(
                 f"log {name!r} holds {rec.length} B, caller asked for "
                 f"{capacity} B — the durable region cannot grow")
+        if socket is not None and socket != rec.socket:
+            raise ValueError(f"log {name!r} lives on socket {rec.socket}, "
+                             f"caller asked for {socket} — home sockets "
+                             f"are fixed at creation")
         stored_tech, stored_cfg = _log_cfg_from_meta(rec.meta, self.geometry,
                                                      flush_kind)
         if technique is not None and technique != stored_tech:
@@ -563,7 +598,7 @@ class Pool:
     def pages(self, name: str, npages: Optional[int] = None,
               page_size: Optional[int] = None, *,
               nslots: Optional[int] = None, n_mulogs: int = 1,
-              threads: int = 1) -> PagesHandle:
+              threads: int = 1, socket: Optional[int] = None) -> PagesHandle:
         """Open-or-create a named failure-atomic page region (slot array +
         µlogs). Geometry-tagged via the pool; on open, the slot table is
         rebuilt from slot headers and valid µlogs are replayed.
@@ -586,7 +621,8 @@ class Pool:
             length = PageStore.region_bytes(layout, n_mulogs=n_mulogs)
             rec = self.directory.allocate(
                 name, KIND_PAGES, length,
-                (page_size, npages, nslots, n_mulogs))
+                (page_size, npages, nslots, n_mulogs),
+                socket=socket or 0)
             layout = dataclasses.replace(layout, base=rec.base)
             store = PageStore(self.pmem, layout, n_mulogs=n_mulogs,
                               threads=threads)
@@ -594,9 +630,11 @@ class Pool:
 
         rec = self.directory.require(name, KIND_PAGES)
         m_page, m_npages, m_nslots, m_mulogs = rec.meta
+        m_mulogs &= 0xFFFF            # high bits carry the socket tag
         for arg, stored, what in ((npages, m_npages, "npages"),
                                   (page_size, m_page, "page_size"),
-                                  (nslots, m_nslots, "nslots")):
+                                  (nslots, m_nslots, "nslots"),
+                                  (socket, rec.socket, "socket")):
             if arg is not None and arg != stored:
                 raise ValueError(f"pages {name!r}: {what}={arg} conflicts "
                                  f"with durable record ({stored})")
@@ -619,19 +657,29 @@ class Pool:
                                geometry=self.geometry,
                                overcommit=m_nslots <= m_npages)
 
-    def raw(self, name: str, nbytes: Optional[int] = None) -> RawHandle:
-        """Open-or-create a named untyped region."""
+    def raw(self, name: str, nbytes: Optional[int] = None, *,
+            socket: Optional[int] = None) -> RawHandle:
+        """Open-or-create a named untyped region (``socket`` tags its NUMA
+        home when creating; on open, a conflicting value raises — like
+        :meth:`log` and :meth:`pages`, home sockets are fixed at
+        creation)."""
         rec = self.directory.lookup(name)
         if rec is None:
             if nbytes is None:
                 raise ValueError(f"creating raw {name!r} requires nbytes=")
             rec = self.directory.allocate(
-                name, KIND_RAW, align_up(nbytes, self.geometry.block))
+                name, KIND_RAW, align_up(nbytes, self.geometry.block),
+                socket=socket or 0)
         else:
             rec = self.directory.require(name, KIND_RAW)
             if nbytes is not None and nbytes > rec.length:
                 raise ValueError(f"raw {name!r} holds {rec.length} B, "
                                  f"wanted {nbytes}")
+            if socket is not None and socket != rec.socket:
+                raise ValueError(
+                    f"raw {name!r} lives on socket {rec.socket}, caller "
+                    f"asked for {socket} — home sockets are fixed at "
+                    f"creation")
         return RawHandle(self, rec)
 
     # ------------------------------------------------------- SSD tier
@@ -690,28 +738,40 @@ class Pool:
     def wal(self, name: str = "train_wal", *,
             capacity_steps: Optional[int] = None,
             technique: Optional[str] = None,
-            lanes: int = 1, group_commit: int = 1):
+            lanes: int = 1, group_commit: int = 1,
+            gen_sets: int = 1):
         """Open-or-create a training step WAL
         (:class:`~repro.persistence.wal.TrainWAL`) on this pool.
         ``technique`` defaults to "zero" when creating; on open the durable
         record decides (passing one verifies it). ``lanes > 1`` runs the
-        WAL on a lane-striped group-commit :class:`~repro.io.MultiLog`."""
+        WAL on a lane-striped group-commit :class:`~repro.io.MultiLog`;
+        ``gen_sets >= 2`` additionally makes that MultiLog generational
+        (a ring of lane sets that :meth:`TrainWAL.roll` seals, so the
+        step WAL can be truncated at checkpoints instead of only at
+        restart)."""
         from repro.persistence.wal import TrainWAL
         return TrainWAL.on_pool(self, name, capacity_steps=capacity_steps,
                                 technique=technique, lanes=lanes,
-                                group_commit=group_commit)
+                                group_commit=group_commit,
+                                gen_sets=gen_sets)
 
     def multilog(self, name: str, capacity: Optional[int] = None, *,
                  lanes: Optional[int] = None,
                  technique: Optional[str] = None,
                  group_commit: int = 8,
-                 cfg: Optional[LogConfig] = None):
+                 cfg: Optional[LogConfig] = None,
+                 gen_sets: int = 1,
+                 lane_sockets: Optional[Sequence[int]] = None,
+                 placer=None):
         """Open-or-create a lane-striped group-commit log
         (:class:`~repro.io.MultiLog`) over regions ``<name>.lane<i>``.
         Creating requires ``capacity`` (total, split over ``lanes``);
         opening discovers the lanes from the directory and runs merged
-        recovery automatically."""
+        recovery automatically. ``lane_sockets`` pins each lane region's
+        NUMA home socket at creation (default: the placer spreads them);
+        ``placer`` overrides the pool's default lane placer."""
         from repro.io.multilog import MultiLog
         return MultiLog(self, name, lanes=lanes, capacity=capacity,
                         technique=technique, group_commit=group_commit,
-                        cfg=cfg)
+                        cfg=cfg, gen_sets=gen_sets,
+                        lane_sockets=lane_sockets, placer=placer)

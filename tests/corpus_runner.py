@@ -1,0 +1,308 @@
+"""Shared crash-scenario runners — one body per crash property.
+
+Each function here is the full body of one hypothesis crash property,
+parameterized by the generated values: the ``tests/*_props.py`` suites
+wrap them in ``@given`` (randomized search, needs the ``test`` extra),
+and ``tests/test_crash_corpus.py`` replays a checked-in seed corpus
+through the *same* bodies deterministically — so the crash properties
+run (not skip) in tier-1 even where hypothesis is not installed.
+
+Keeping a single body per property means a seed that once found a bug
+stays a regression test forever, and the two suites can never assert
+different things.
+"""
+
+import numpy as np
+
+from repro.core import KVConfig, PMem, PersistentKV
+from repro.core.ssd import SSD
+from repro.io.flushq import FlushQueue
+from repro.io.multilog import MultiLog
+from repro.pool import Pool
+from repro.tier import SpillScheduler
+
+__all__ = [
+    "SimCrash",
+    "CrashAt",
+    "run_kv_crash",
+    "run_multilog_crash",
+    "run_pool_alloc_crash",
+    "run_generation_spill_crash",
+    "run_page_spill_crash",
+]
+
+
+class SimCrash(BaseException):
+    """Raised by the failpoint to cut a spill protocol mid-flight.
+    Derived from BaseException so no protocol-level handler can eat it."""
+
+
+class CrashAt:
+    """Failpoint callable: crash at the Nth protocol point reached."""
+
+    def __init__(self, n: int) -> None:
+        self.n = n
+        self.seen = 0
+
+    def __call__(self, point: str) -> None:
+        self.seen += 1
+        if self.seen == self.n:
+            raise SimCrash(point)
+
+
+# ========================================================== KV crash (core)
+
+def make_kv(technique="zero", **kw):
+    kw.setdefault("log_capacity", 1 << 15)
+    cfg = KVConfig(npages=4, page_size=1024, value_size=64,
+                   technique=technique, **kw)
+    pm = PMem(PersistentKV.region_bytes(cfg))
+    pm.memset_zero()
+    return pm, PersistentKV(pm, cfg), cfg
+
+
+def run_kv_crash(technique, ops, ckpt_every, seed, prob):
+    """Every committed put survives an arbitrary crash; recovered values
+    are exactly the last committed value per key."""
+    pm, kv, cfg = make_kv(technique)
+    expected = {}
+    for i, (k, v) in enumerate(ops):
+        value = bytes([(v + j) % 256 for j in range(64)])
+        kv.put(k, value)
+        expected[k] = value
+        if ckpt_every and (i + 1) % ckpt_every == 0:
+            kv.checkpoint()
+    pm.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+    kv2 = PersistentKV.open(pm, cfg)
+    for k, value in expected.items():
+        assert kv2.get(k) == value
+
+
+# ================================================= cross-lane log recovery
+
+def run_multilog_crash(technique, lanes, group_commit, n_entries,
+                       commit_after, seed, prob, lane_sockets=None,
+                       lane_cpu_sockets=None, sockets=1):
+    """Cross-lane crash property: whatever durable-line subset a crash
+    leaves behind, a MultiLog recovers entries forming EXACTLY the global
+    LSNs 1..m, with correct payloads, covering at least every entry
+    appended before the last full commit(); and the repaired log accepts
+    new appends that extend the prefix with no duplicate LSNs.
+
+    ``lane_sockets``/``lane_cpu_sockets``/``sockets`` exercise the same
+    property under NUMA placements — placement is a performance hint and
+    must never change what recovers.
+    """
+    pool = Pool.create(None, 1 << 21, sockets=sockets)
+    ml = MultiLog(pool, "ml", lanes=lanes, capacity=1 << 19,
+                  technique=technique, group_commit=group_commit,
+                  lane_sockets=lane_sockets,
+                  lane_cpu_sockets=lane_cpu_sockets)
+    payloads = {}
+    committed_through = 0
+    for i in range(n_entries):
+        glsn = ml.append(b"payload-%04d-%d" % (i, seed % 97))
+        payloads[glsn] = b"payload-%04d-%d" % (i, seed % 97)
+        if i in commit_after:
+            ml.commit()
+            committed_through = glsn
+    pool.pmem.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+
+    pool2 = Pool.open(pmem=pool.pmem)
+    ml2 = MultiLog(pool2, "ml")
+    rec = ml2.recovered
+    m = len(rec.glsns)
+    assert rec.glsns == list(range(1, m + 1))          # contiguous prefix
+    assert m >= committed_through                       # commits survive
+    for glsn, payload in zip(rec.glsns, rec.entries):
+        assert payload == payloads[glsn]
+    # appending continues cleanly after the truncation repair
+    new_glsn = ml2.append(b"post-crash", sync=True)
+    assert new_glsn == m + 1
+    rec2 = ml2.recover()
+    assert rec2.glsns == list(range(1, m + 2))
+    assert rec2.entries[-1] == b"post-crash"
+    return rec
+
+
+# ======================================================== pool allocation
+
+def run_pool_alloc_crash(n_entries, payload, crash_stage, seed, prob):
+    """A crash at ANY point of a region allocation, with ANY eviction
+    subset, never corrupts previously committed regions — the directory
+    recovers every committed record and its contents bit-exact."""
+    import repro.core.directory as directory_mod
+    from repro.core.directory import KIND_LOG
+
+    pool = Pool.create(None, 1 << 19)
+    log = pool.log("committed", capacity=1 << 14, technique="zero")
+    appended = []
+    for i in range(n_entries):
+        log.append(payload + bytes([i]))
+        appended.append(payload + bytes([i]))
+    rec_a = pool.regions()["committed"]
+    img_a = pool.pmem.durable_view()[rec_a.base : rec_a.base + rec_a.length].copy()
+
+    # drive the allocation protocol up to the chosen crash point
+    d = pool.directory
+    rec, slot = d._place("newborn", KIND_LOG, 1 << 14, (2, 1, 1, 0))
+    if crash_stage in ("initialized", "entry_stored"):
+        d._initialize(rec)
+    if crash_stage == "entry_stored":
+        entry = directory_mod._ENTRY.pack(
+            b"newborn", rec.kind, rec.generation, rec.base, rec.length,
+            *rec.meta)
+        pool.pmem.store(d._entry_off(slot), entry, streaming=True)
+        # no fence: durability of the entry is up to spontaneous eviction
+    pool.pmem.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+
+    pool2 = Pool.open(pmem=pool.pmem)
+    got_a = pool2.regions()["committed"]
+    assert (got_a.base, got_a.length, got_a.meta) == \
+        (rec_a.base, rec_a.length, rec_a.meta)
+    img2 = pool.pmem.durable_view()[rec_a.base : rec_a.base + rec_a.length]
+    assert np.array_equal(img2, img_a), "committed region not bit-exact"
+    assert pool2.log("committed").recovered.entries == appended
+
+    if "newborn" in pool2.regions():
+        # only possible in the entry_stored stage, and only as a valid
+        # empty region over durably zeroed space
+        assert crash_stage == "entry_stored"
+        assert pool2.log("newborn").recovered.entries == []
+
+
+# ================================================== crash-during-spill
+
+def run_generation_spill_crash(lanes, gen_sets, group_commit, per_gen,
+                               crash_step, seed, pmem_prob, ssd_keep):
+    """Roll several WAL generations, crash at an arbitrary point inside
+    the spill drain (plus arbitrary device-level durability subsets), and
+    assert every generation recovers complete from exactly the tier the
+    durable watermark names."""
+    pool = Pool.create(None, 1 << 21)
+    ssd = SSD(1 << 22)
+    pool.attach_ssd(ssd)
+    sp = SpillScheduler(pool, name="sp", map_capacity=1 << 13)
+    ml = MultiLog(pool, "wal", lanes=lanes, capacity=1 << 13,
+                  gen_sets=gen_sets, group_commit=group_commit)
+    ml.attach_spill(sp)
+
+    contents = {}          # gen -> full payload list
+    gen = 1
+    committed_live = 0
+    crashed = False
+    sp.failpoints = CrashAt(crash_step)
+    try:
+        for count in per_gen:
+            contents[gen] = [b"g%d-e%d" % (gen, i) for i in range(count)]
+            for p in contents[gen]:
+                ml.append(p)
+            ml.roll()           # seals gen; may force a drain (failpoints!)
+            gen += 1
+        contents[gen] = [b"g%d-live" % gen]
+        ml.append(contents[gen][0])
+        ml.commit()
+        committed_live = 1
+        sp.drain()              # retire whatever is still queued
+    except SimCrash:
+        crashed = True
+
+    # power failure: arbitrary surviving subsets on both devices
+    rng = np.random.default_rng(seed)
+    pool.pmem.crash(rng=rng, evict_prob=pmem_prob)
+    ssd.crash(rng=rng, keep_prob=ssd_keep)
+
+    pool2 = Pool.open(pmem=pool.pmem)
+    pool2.attach_ssd(ssd)
+    sp2 = SpillScheduler(pool2, name="sp")
+    ml2 = MultiLog(pool2, "wal")
+    ml2.attach_spill(sp2)
+
+    assert ml2.retired_upto < ml2.current_gen
+    resident_window = range(ml2.retired_upto + 1, ml2.current_gen + 1)
+    for g in range(1, ml2.current_gen + 1):
+        if g <= ml2.retired_upto:
+            # the watermark says SSD: the copy there must be COMPLETE —
+            # the watermark only advances after the device flush and the
+            # checksummed map record
+            src, entries = ml2.read_generation(g)
+            assert src == "ssd"
+            assert [bytes(e) for e in entries] == contents[g], g
+        elif g < ml2.current_gen:
+            # sealed but unretired: wholly from PMem, bit-exact (the SSD
+            # may hold a torn partial copy — it must never be consulted)
+            assert g in resident_window
+            src, entries = ml2.read_generation(g)
+            assert src == "pmem"
+            assert [bytes(e) for e in entries] == contents[g], g
+        else:
+            # the live generation: a durable prefix covering every commit
+            src, entries = ml2.read_generation(g)
+            assert src == "pmem"
+            got = [bytes(e) for e in entries]
+            assert got == contents.get(g, [])[: len(got)]
+            if not crashed:
+                assert len(got) >= committed_live
+
+    # …and CONTINUE: roll through the whole ring after recovery. No
+    # generation sealed before the crash may be lost to ring reuse (the
+    # orphaned-generation regression: sealed-but-unretired generations
+    # must be re-enqueued on attach_spill, not silently discarded).
+    resume = ml2.current_gen
+    for _ in range(ml2.gen_sets):
+        ml2.append(b"post")
+        ml2.roll()
+    sp2.drain()
+    for g in range(1, resume):
+        src, entries = ml2.read_generation(g)
+        assert [bytes(e) for e in entries] == contents[g], (g, src)
+
+
+def run_page_spill_crash(nslots, writes, crash_step, seed, pmem_prob,
+                         ssd_keep):
+    """Flush epochs over an overcommitted store with a crash at an
+    arbitrary point inside the eviction protocol: every flushed page
+    recovers, from exactly one tier, either its last completed epoch's
+    image or the in-flight epoch's (a page flush is failure-atomic) —
+    never a torn mix, never anything older."""
+    pool = Pool.create(None, 1 << 21)
+    ssd = SSD(1 << 22)
+    pool.attach_ssd(ssd)
+    sp = SpillScheduler(pool, name="sp", map_capacity=1 << 13)
+    pages = pool.pages("heap", npages=16, page_size=512, nslots=nslots)
+    sp.attach_pages(pages)
+    fq = FlushQueue(pages, lanes=2, spill=sp)
+
+    flushed = {}        # pid -> content of the last DRAINED epoch
+    pending = {}        # pid -> content enqueued for the in-flight epoch
+    sp.failpoints = CrashAt(crash_step)
+    try:
+        for i, (pid, fill) in enumerate(writes):
+            img = np.full(512, fill, dtype=np.uint8)
+            fq.enqueue(pid, img)
+            pending[pid] = img
+            if (i + 1) % 8 == 0:
+                fq.flush_epoch()
+                flushed.update(pending)
+                pending.clear()
+        fq.flush_epoch()
+        flushed.update(pending)
+        pending.clear()
+    except SimCrash:
+        pass
+
+    rng = np.random.default_rng(seed)
+    pool.pmem.crash(rng=rng, evict_prob=pmem_prob)
+    ssd.crash(rng=rng, keep_prob=ssd_keep)
+
+    pool2 = Pool.open(pmem=pool.pmem)
+    pool2.attach_ssd(ssd)
+    sp2 = SpillScheduler(pool2, name="sp")
+    pages2 = pool2.pages("heap")
+    sp2.attach_pages(pages2)
+    for pid, img in flushed.items():
+        got = bytes(sp2.read_page(pages2.store, pid, promote=False))
+        acceptable = {bytes(img)}
+        if pid in pending:   # the crashed epoch may have flushed it already
+            acceptable.add(bytes(pending[pid]))
+        assert got in acceptable, pid

@@ -3,11 +3,14 @@ arbitrary crash point and eviction subset, for every logging technique;
 and a lane-partitioned MultiLog recovers a consistent global-LSN prefix
 from ANY durable-line subset (cross-lane recovery, repro.io engine).
 
-Requires the ``test`` extra; deterministic engine tests live in
-``test_core_recovery.py`` and ``test_io_engine.py``.
+The property *bodies* live in ``tests/corpus_runner.py`` and are shared
+with the deterministic regression corpus (``test_crash_corpus.py``),
+which replays checked-in seeds through them without hypothesis. This
+file is the randomized search on top (requires the ``test`` extra);
+deterministic engine tests live in ``test_core_recovery.py`` and
+``test_io_engine.py``.
 """
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
@@ -15,18 +18,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core import KVConfig, PMem, PersistentKV
-from repro.io import MultiLog
-from repro.pool import Pool
-
-
-def make_kv(technique="zero", **kw):
-    kw.setdefault("log_capacity", 1 << 15)
-    cfg = KVConfig(npages=4, page_size=1024, value_size=64,
-                   technique=technique, **kw)
-    pm = PMem(PersistentKV.region_bytes(cfg))
-    pm.memset_zero()
-    return pm, PersistentKV(pm, cfg), cfg
+from corpus_runner import run_kv_crash, run_multilog_crash
 
 
 @settings(max_examples=60, deadline=None,
@@ -42,18 +34,7 @@ def make_kv(technique="zero", **kw):
 def test_kv_crash_property(technique, ops, ckpt_every, seed, prob):
     """Every committed put survives an arbitrary crash; recovered values are
     exactly the last committed value per key."""
-    pm, kv, cfg = make_kv(technique)
-    expected = {}
-    for i, (k, v) in enumerate(ops):
-        value = bytes([(v + j) % 256 for j in range(64)])
-        kv.put(k, value)
-        expected[k] = value
-        if ckpt_every and (i + 1) % ckpt_every == 0:
-            kv.checkpoint()
-    pm.crash(rng=np.random.default_rng(seed), evict_prob=prob)
-    kv2 = PersistentKV.open(pm, cfg)
-    for k, value in expected.items():
-        assert kv2.get(k) == value
+    run_kv_crash(technique, ops, ckpt_every, seed, prob)
 
 
 # ===================================================== cross-lane recovery
@@ -76,30 +57,5 @@ def test_multilog_crash_recovers_global_lsn_prefix(
     LSNs 1..m, with correct payloads, covering at least every entry
     appended before the last full commit(); and the repaired log accepts
     new appends that extend the prefix with no duplicate LSNs."""
-    pool = Pool.create(None, 1 << 21)
-    ml = MultiLog(pool, "ml", lanes=lanes, capacity=1 << 19,
-                  technique=technique, group_commit=group_commit)
-    payloads = {}
-    committed_through = 0
-    for i in range(n_entries):
-        glsn = ml.append(b"payload-%04d-%d" % (i, seed % 97))
-        payloads[glsn] = b"payload-%04d-%d" % (i, seed % 97)
-        if i in commit_after:
-            ml.commit()
-            committed_through = glsn
-    pool.pmem.crash(rng=np.random.default_rng(seed), evict_prob=prob)
-
-    pool2 = Pool.open(pmem=pool.pmem)
-    ml2 = MultiLog(pool2, "ml")
-    rec = ml2.recovered
-    m = len(rec.glsns)
-    assert rec.glsns == list(range(1, m + 1))          # contiguous prefix
-    assert m >= committed_through                       # commits survive
-    for glsn, payload in zip(rec.glsns, rec.entries):
-        assert payload == payloads[glsn]
-    # appending continues cleanly after the truncation repair
-    new_glsn = ml2.append(b"post-crash", sync=True)
-    assert new_glsn == m + 1
-    rec2 = ml2.recover()
-    assert rec2.glsns == list(range(1, m + 2))
-    assert rec2.entries[-1] == b"post-crash"
+    run_multilog_crash(technique, lanes, group_commit, n_entries,
+                       commit_after, seed, prob)

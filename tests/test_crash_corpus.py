@@ -1,0 +1,148 @@
+"""Deterministic crash-fuzz regression corpus — tier-1, no hypothesis.
+
+PR 2 and PR 3 shipped their strongest correctness evidence as hypothesis
+crash properties, which skip wherever the ``test`` extra is not
+installed (this container included) — so the crash arguments were only
+ever exercised locally. This corpus fixes that: a checked-in seed list,
+distilled once from the hypothesis suites' strategy spaces (every
+technique, lane count x group commit, crash stage, failpoint protocol
+point, and eviction/keep probability including the 0.0/1.0 extremes),
+replayed through the *same* property bodies (``tests/corpus_runner.py``)
+that ``@given`` randomizes. No imports beyond numpy/pytest — these run
+(not skip) in a bare environment, and a seed that ever finds a bug
+should be appended here as a permanent regression.
+"""
+
+import pytest
+
+from corpus_runner import (
+    run_generation_spill_crash,
+    run_kv_crash,
+    run_multilog_crash,
+    run_page_spill_crash,
+    run_pool_alloc_crash,
+)
+
+
+def _ops(seed: int, n: int, nkeys: int = 64):
+    """Deterministic (key, value-seed) op list: a tiny LCG expansion of
+    one corpus seed (no RNG imports, bit-exact everywhere)."""
+    x, out = seed & 0x7FFFFFFF, []
+    for _ in range(n):
+        x = (1103515245 * x + 12345) & 0x7FFFFFFF
+        out.append((x % nkeys, (x >> 7) % (10 ** 6)))
+    return out
+
+
+# ============================================================== KV engine
+# (technique, ops-seed, n_ops, ckpt_every, crash-seed, evict_prob)
+
+KV_CORPUS = [
+    ("classic", 1, 24, 0, 101, 0.0),
+    ("classic", 2, 40, 7, 202, 0.4),
+    ("classic", 3, 17, 13, 303, 1.0),
+    ("header", 4, 24, 0, 404, 1.0),
+    ("header", 5, 40, 7, 505, 0.0),
+    ("header", 6, 33, 13, 606, 0.4),
+    ("zero", 7, 24, 0, 707, 0.4),
+    ("zero", 8, 40, 13, 808, 1.0),
+    ("zero", 9, 1, 0, 909, 0.0),          # single put, nothing durable yet
+    ("zero", 10, 39, 7, 1010, 0.4),       # crash right before a checkpoint
+]
+
+
+@pytest.mark.parametrize("technique,ops_seed,n,ckpt,seed,prob", KV_CORPUS)
+def test_kv_crash_corpus(technique, ops_seed, n, ckpt, seed, prob):
+    run_kv_crash(technique, _ops(ops_seed, n), ckpt, seed, prob)
+
+
+# ============================================================== MultiLog
+# (technique, lanes, group_commit, n_entries, commit_after, seed, prob)
+
+MULTILOG_CORPUS = [
+    ("zero", 1, 1, 12, {3, 7}, 11, 0.3),
+    ("zero", 2, 8, 40, {19}, 22, 0.7),
+    ("zero", 3, 4, 25, set(), 33, 0.5),
+    ("zero", 5, 9, 40, {0, 39}, 44, 1.0),
+    ("zero", 4, 2, 31, {5, 17, 29}, 55, 0.0),
+    ("classic", 2, 3, 20, {9}, 66, 0.7),
+    ("classic", 4, 8, 40, set(), 77, 0.3),
+    ("classic", 3, 1, 7, {2}, 88, 1.0),
+    ("header", 2, 5, 26, {13}, 99, 0.3),
+    ("header", 5, 7, 40, {11, 31}, 111, 0.5),
+    ("header", 4, 4, 0, set(), 122, 0.7),   # empty log recovers empty
+]
+
+
+@pytest.mark.parametrize(
+    "technique,lanes,gc,n,commits,seed,prob", MULTILOG_CORPUS)
+def test_multilog_crash_corpus(technique, lanes, gc, n, commits, seed, prob):
+    run_multilog_crash(technique, lanes, gc, n, commits, seed, prob)
+
+
+# ====================================================== pool allocation
+# (n_entries, payload, crash_stage, seed, prob)
+
+POOL_CORPUS = [
+    (0, b"a", "placed", 7, 0.5),
+    (3, b"pool-payload", "placed", 14, 1.0),
+    (6, b"x" * 120, "initialized", 21, 0.0),
+    (2, b"\x00\xff" * 30, "initialized", 28, 0.75),
+    (4, b"entry", "entry_stored", 35, 0.0),     # entry line dropped
+    (4, b"entry", "entry_stored", 42, 1.0),     # entry line survives
+    (1, b"q" * 64, "entry_stored", 49, 0.5),
+    (5, b"\xaa" * 33, "entry_stored", 56, 0.25),
+]
+
+
+@pytest.mark.parametrize("n,payload,stage,seed,prob", POOL_CORPUS)
+def test_pool_alloc_crash_corpus(n, payload, stage, seed, prob):
+    run_pool_alloc_crash(n, payload, stage, seed, prob)
+
+
+# ============================================== crash-during-spill (WAL)
+# (lanes, gen_sets, group_commit, per_gen, crash_step, seed,
+#  pmem_prob, ssd_keep) — crash steps 1..4 land on each failpoint of the
+# first generation drain (ssd_written / ssd_flushed / mapped / retired);
+# larger steps land in later drains or never fire.
+
+GEN_SPILL_CORPUS = [
+    (1, 2, 1, [3], 1, 1001, 0.5, 0.5),
+    (2, 2, 2, [4, 6], 2, 1002, 1.0, 0.0),
+    (3, 3, 1, [2, 5, 9], 3, 1003, 0.0, 1.0),
+    (4, 2, 5, [12, 1], 4, 1004, 0.5, 1.0),
+    (2, 3, 3, [7, 7, 7], 6, 1005, 1.0, 0.5),
+    (1, 3, 1, [1, 1, 1, 1, 1], 9, 1006, 0.5, 0.0),
+    (3, 2, 4, [10, 3, 8], 11, 1007, 0.0, 0.0),
+    (2, 2, 1, [5], 40, 1008, 1.0, 1.0),     # no crash: full drain path
+]
+
+
+@pytest.mark.parametrize(
+    "lanes,gen_sets,gc,per_gen,step,seed,pprob,skeep", GEN_SPILL_CORPUS)
+def test_generation_spill_crash_corpus(lanes, gen_sets, gc, per_gen, step,
+                                       seed, pprob, skeep):
+    run_generation_spill_crash(lanes, gen_sets, gc, per_gen, step, seed,
+                               pprob, skeep)
+
+
+# ============================================= crash-during-spill (pages)
+# (nslots, writes-seed, n_writes, crash_step, seed, pmem_prob, ssd_keep)
+
+PAGE_SPILL_CORPUS = [
+    (3, 11, 40, 1, 2001, 0.5, 0.5),
+    (3, 12, 24, 2, 2002, 1.0, 0.0),
+    (4, 13, 40, 3, 2003, 0.0, 1.0),
+    (4, 14, 33, 5, 2004, 0.5, 1.0),
+    (5, 15, 40, 8, 2005, 1.0, 0.5),
+    (6, 16, 16, 13, 2006, 0.0, 0.0),
+    (3, 17, 40, 21, 2007, 0.5, 0.0),
+    (5, 18, 9, 60, 2008, 1.0, 1.0),         # no crash: clean epochs
+]
+
+
+@pytest.mark.parametrize(
+    "nslots,wseed,n,step,seed,pprob,skeep", PAGE_SPILL_CORPUS)
+def test_page_spill_crash_corpus(nslots, wseed, n, step, seed, pprob, skeep):
+    writes = [(k % 16, v % 256) for k, v in _ops(wseed, n, nkeys=16)]
+    run_page_spill_crash(nslots, writes, step, seed, pprob, skeep)

@@ -1,0 +1,418 @@
+"""NUMA lane placement: remote accounting, cost-model golden values,
+placer policy, dynamic group commit — and the load-bearing invariant
+that placement is a performance hint, never a durability input
+(cross-socket recovery parity).
+"""
+
+import numpy as np
+import pytest
+
+from corpus_runner import run_multilog_crash
+from repro.core import COST_MODEL, FlushKind, PMem
+from repro.core.pmem import PMemStats
+from repro.core.ssd import SSD
+from repro.io import LanePlacer, MultiLog
+from repro.pool import Pool
+from repro.tier import SpillScheduler
+
+
+# ===================================================== remote accounting
+
+def test_remote_accounting_basic():
+    """Work done under a lane whose CPU socket differs from the touched
+    bytes' home socket is counted remote; near work is not."""
+    pm = PMem(1 << 16, sockets=2)
+    pm.memset_zero()
+    pm.set_home(0, 1 << 12, 0)
+    pm.set_home(1 << 12, 1 << 12, 1)
+    with pm.lane(0, socket=0):
+        pm.store(0, b"x" * 256, streaming=True)        # near
+        pm.sfence()
+        pm.store(1 << 12, b"y" * 256, streaming=True)  # remote
+        pm.sfence()
+    s = pm.stats
+    assert s.barriers == 2 and s.remote_barriers == 1
+    assert s.blocks_written == 2 and s.remote_blocks_written == 1
+    assert s.lane_remote_barriers == {0: 1}
+    assert s.lane_remote_blocks_written == {0: 1}
+
+
+def test_unsocketed_lane_never_remote():
+    """A lane with no CPU socket (the pre-NUMA call signature) counts
+    nothing remote, whatever the homes say."""
+    pm = PMem(1 << 16, sockets=2)
+    pm.memset_zero()
+    pm.set_home(0, 1 << 16, 1)
+    with pm.lane(3):
+        pm.store(0, b"x" * 256, streaming=True)
+        pm.sfence()
+    assert pm.stats.barriers == 1
+    assert pm.stats.remote_barriers == 0
+    assert pm.stats.remote_blocks_written == 0
+
+
+def test_home_socket_map():
+    pm = PMem(1 << 16, sockets=4)
+    pm.set_home(4096, 4096, 2)
+    pm.set_home(8192, 4096, 3)
+    assert pm.home_socket(0) == 0          # unregistered defaults to 0
+    assert pm.home_socket(4096) == 2
+    assert pm.home_socket(8191) == 2
+    assert pm.home_socket(8192) == 3
+    assert pm.home_socket(12288) == 0
+    pm.set_home(4096, 4096, 1)             # re-registration replaces
+    assert pm.home_socket(4200) == 1
+    pm.set_home(0, 64, 99)                 # clamps to the topology
+    assert pm.home_socket(0) == 3
+
+
+# ============================================= engine_time_ns golden values
+
+def _lane_stats(lanes, barriers, blocks, partial, remote=False):
+    s = PMemStats()
+    for li in range(lanes):
+        s.lane_barriers[li] = barriers
+        s.lane_blocks_written[li] = blocks
+        s.lane_partial_blocks[li] = partial
+        s.barriers += barriers
+        s.blocks_written += blocks
+        if remote:
+            s.lane_remote_barriers[li] = barriers
+            s.lane_remote_blocks_written[li] = blocks
+            s.lane_remote_partial_blocks[li] = partial
+    return s
+
+
+#: pinned (local_ns, remote_ns) for 16 barriers + 32 blocks (4 partial)
+#: per lane — regenerate only for a deliberate cost-model change, and
+#: update docs/costmodel.md provenance alongside
+GOLDEN = {
+    (1, FlushKind.NT): (7184.0, 15539.199999999999),
+    (1, FlushKind.CLWB): (7584.0, 16339.199999999999),
+    (2, FlushKind.NT): (7346.666666666667, 15913.333333333334),
+    (2, FlushKind.CLWB): (7746.666666666667, 16713.333333333336),
+    (4, FlushKind.NT): (9024.133009637313, 19771.505922165816),
+    (4, FlushKind.CLWB): (8116.363636363636, 17563.63636363636),
+    (8, FlushKind.NT): (16793.450842146493, 37640.93693693693),
+    (8, FlushKind.CLWB): (10382.222222222223, 22775.11111111111),
+}
+
+
+@pytest.mark.parametrize("lanes,kind", sorted(GOLDEN, key=str))
+def test_engine_time_golden(lanes, kind):
+    """Golden values pin the Fig. 2 curve (local column) and the NUMA
+    terms (remote column) so neither can silently regress."""
+    local, remote = GOLDEN[(lanes, kind)]
+    got_local = COST_MODEL.engine_time_ns(
+        _lane_stats(lanes, 16, 32, 4), active_lanes=lanes, kind=kind)
+    got_remote = COST_MODEL.engine_time_ns(
+        _lane_stats(lanes, 16, 32, 4, remote=True), active_lanes=lanes,
+        kind=kind)
+    assert got_local == pytest.approx(local, rel=1e-12)
+    assert got_remote == pytest.approx(remote, rel=1e-12)
+
+
+@pytest.mark.parametrize("kind", [FlushKind.NT, FlushKind.CLWB,
+                                  FlushKind.FLUSHOPT])
+@pytest.mark.parametrize("lanes", [1, 2, 3, 4, 5, 6, 8, 12, 16])
+def test_engine_time_remote_monotone(lanes, kind):
+    """Remote >= local for every technique and lane count, and a partial
+    remote mix sits strictly between the all-local and all-remote ends."""
+    local = COST_MODEL.engine_time_ns(
+        _lane_stats(lanes, 16, 32, 4), active_lanes=lanes, kind=kind)
+    remote = COST_MODEL.engine_time_ns(
+        _lane_stats(lanes, 16, 32, 4, remote=True), active_lanes=lanes,
+        kind=kind)
+    assert remote > local
+    mixed = _lane_stats(lanes, 16, 32, 4)
+    mixed.lane_remote_barriers[0] = 8
+    mixed.lane_remote_blocks_written[0] = 16
+    mixed.lane_remote_partial_blocks[0] = 2
+    got = COST_MODEL.engine_time_ns(mixed, active_lanes=lanes, kind=kind)
+    assert local < got < remote
+
+
+def test_engine_time_near_socket_unchanged():
+    """With zero remote counts the NUMA terms vanish: max-over-lanes must
+    equal the hand-computed pre-NUMA formula exactly."""
+    lanes, barriers, blocks = 4, 16, 32
+    stats = _lane_stats(lanes, barriers, blocks, 0)
+    got = COST_MODEL.engine_time_ns(stats, active_lanes=lanes,
+                                    kind=FlushKind.NT)
+    cm = COST_MODEL
+    per_block = cm.block_write_ns_single / (
+        cm.thread_scale(lanes, FlushKind.NT) / lanes)
+    from repro.core.persist import AccessPattern
+    expected = barriers * (cm.persist_latency_ns(
+        FlushKind.NT, AccessPattern.SEQUENTIAL) + cm.barrier_ns) \
+        + blocks * per_block
+    assert got == pytest.approx(expected, rel=1e-12)
+
+
+# ===================================================== placer policy
+
+def test_placer_prefers_near_and_overflows_under_load():
+    pm = PMem(1 << 12, sockets=2)
+    placer = LanePlacer(pm, cpu_lanes_per_socket=2)
+    assert placer.spread(4) == [0, 1, 0, 1]
+    # balanced homes within capacity: everything near
+    assert placer.place([0, 1, 0, 1]) == [0, 1, 0, 1]
+    # skewed homes: near up to capacity, then remote to the idle socket
+    assert placer.place([0, 0, 0, 0]) == [0, 0, 1, 1]
+    # total saturation (each socket filled by its own near lanes):
+    # oversubscribe near rather than go remote — the interconnect adds
+    # cost without adding CPU capacity
+    assert placer.place([0, 0, 0, 0, 0, 1, 1, 1, 1, 1]) == \
+        [0, 0, 0, 0, 0, 1, 1, 1, 1, 1]
+
+
+def test_placer_single_socket_is_noop():
+    pm = PMem(1 << 12, sockets=1)
+    placer = LanePlacer(pm)
+    assert placer.spread(3) == [0, 0, 0]
+    assert placer.place([0, 0, 0]) == [0, 0, 0]
+
+
+def test_multilog_spreads_and_places_near():
+    pool = Pool.create(None, 1 << 21, sockets=2)
+    ml = MultiLog(pool, "ml", lanes=4, capacity=1 << 19)
+    assert ml.lane_sockets == [0, 1, 0, 1]
+    assert ml.lane_cpu == ml.lane_sockets
+    # the durable tags round-trip through reopen
+    ml.append(b"x", sync=True)
+    pool2 = Pool.open(pmem=pool.pmem)
+    ml2 = MultiLog(pool2, "ml")
+    assert ml2.lane_sockets == [0, 1, 0, 1]
+    assert pool2.pmem.home_socket(ml2.handles[1].base) == 1
+
+
+def test_socket_tags_survive_file_reopen(tmp_path):
+    path = str(tmp_path / "numa.pmem")
+    pool = Pool.create(path, 1 << 20, sockets=2)
+    pool.log("l1", capacity=1 << 12, socket=1)
+    pool.fsync()
+    pool2 = Pool.open(path)
+    assert pool2.sockets == 2
+    assert pool2.regions()["l1"].socket == 1
+    assert pool2.pmem.home_socket(pool2.regions()["l1"].base) == 1
+
+
+def test_allocate_rejects_out_of_topology_socket():
+    pool = Pool.create(None, 1 << 20, sockets=2)
+    with pytest.raises(ValueError, match="socket"):
+        pool.log("bad", capacity=1 << 12, socket=2)
+
+
+# ================================================= dynamic group commit
+
+def test_dynamic_group_commit_adapts_to_submit_rate():
+    """Sustained full batches (throughput-bound) grow a lane's k;
+    explicit half-empty commits (latency-bound) shrink it back."""
+    pool = Pool.create(None, 1 << 21, sockets=2)
+    ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 19, group_commit=2)
+    assert ml.lane_group_commit == [2, 2]
+    for _ in range(64):                      # back-to-back: batches fill
+        ml.append(b"x" * 32)
+    assert all(k > 2 for k in ml.lane_group_commit)
+    grown = ml.lane_group_commit
+    for _ in range(16):                      # caller fences tiny batches
+        ml.append(b"x" * 32)
+        ml.commit()
+    assert all(k < g for k, g in zip(ml.lane_group_commit, grown))
+
+
+def test_dynamic_group_commit_remote_floor():
+    """A remote lane's k never drops below the remote floor — its
+    barriers cost ~2x, so at least twice the appends share each one."""
+    pool = Pool.create(None, 1 << 21, sockets=2)
+    ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 19, group_commit=2,
+                  lane_sockets=[0, 0], lane_cpu_sockets=[0, 1])
+    for _ in range(32):                      # lane 1 is remote
+        ml.append(b"x" * 32)
+        ml.commit()
+    remote_floor = LanePlacer(pool.pmem).adapt_k(1, 1, "explicit",
+                                                 remote=True, base=2)
+    # the near lane tracks the latency-bound workload down to ~base;
+    # the remote lane holds its floor above it
+    assert ml.lane_group_commit[1] == remote_floor
+    assert ml.lane_group_commit[0] <= 2 < remote_floor
+
+
+def test_group_commit_one_is_a_durability_contract():
+    """base=1 means every append durable at return (the KV default);
+    the placer must never batch beyond it, remote or not."""
+    pool = Pool.create(None, 1 << 21, sockets=2)
+    ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 19, group_commit=1,
+                  lane_sockets=[0, 0], lane_cpu_sockets=[0, 1])
+    for _ in range(64):
+        ml.append(b"x" * 32)
+        assert ml.pending == 0          # durable at return, every time
+    assert ml.lane_group_commit == [1, 1]
+
+
+def test_static_without_placer():
+    """No placer (single-socket pool, placer=False): k stays put."""
+    pool = Pool.create(None, 1 << 21)
+    ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 19, group_commit=4)
+    for _ in range(64):
+        ml.append(b"x" * 32)
+    assert ml.lane_group_commit == [4, 4]
+
+
+# ========================================= cross-socket recovery parity
+
+def _placements():
+    near = ([0, 1, 0], [0, 1, 0])
+    far = ([0, 1, 0], [1, 0, 1])
+    skew = ([1, 1, 1], [0, 0, 1])
+    return [near, far, skew]
+
+
+def test_multilog_recovery_parity_across_placements():
+    """Merge-on-recovery returns byte-identical state whatever socket
+    each lane/CPU was placed on — placement is a performance hint, never
+    a durability input. Same workload, same crash seed, three
+    placements: identical recovered prefixes AND identical durable lane
+    bytes."""
+    results = []
+    for lane_sockets, lane_cpu in _placements():
+        rec = run_multilog_crash(
+            "zero", 3, 4, 31, {7, 20}, 12345, 0.5,
+            lane_sockets=lane_sockets, lane_cpu_sockets=lane_cpu,
+            sockets=2)
+        results.append((rec.glsns, rec.entries, rec.per_lane))
+    assert results[0] == results[1] == results[2]
+
+
+def test_multilog_durable_lane_bytes_parity():
+    """The durable image of every lane region is bit-exact across
+    placements (the stronger form of parity: not just what recovery
+    returns, but what it reads)."""
+    images = []
+    for lane_sockets, lane_cpu in _placements():
+        pool = Pool.create(None, 1 << 21, sockets=2)
+        ml = MultiLog(pool, "ml", lanes=3, capacity=1 << 19,
+                      technique="zero", group_commit=4,
+                      lane_sockets=lane_sockets,
+                      lane_cpu_sockets=lane_cpu, placer=False)
+        for i in range(50):
+            ml.append(b"entry-%03d" % i)
+        ml.commit()
+        pool.pmem.crash(rng=np.random.default_rng(777), evict_prob=0.5)
+        images.append([bytes(pool.pmem.durable_slice(h.base, h.length))
+                       for h in ml.handles])
+    assert images[0] == images[1] == images[2]
+
+
+def test_spill_recovery_parity_across_placements():
+    """SpillScheduler.attach_spill + generation retirement produce
+    identical recovered generations regardless of lane placement."""
+    outcomes = []
+    for lane_sockets, lane_cpu in _placements():
+        pool = Pool.create(None, 1 << 21, sockets=2)
+        ssd = SSD(1 << 22)
+        pool.attach_ssd(ssd)
+        sp = SpillScheduler(pool, name="sp", map_capacity=1 << 13)
+        ml = MultiLog(pool, "wal", lanes=3, capacity=1 << 13, gen_sets=2,
+                      group_commit=2, lane_sockets=lane_sockets,
+                      lane_cpu_sockets=lane_cpu, placer=False)
+        ml.attach_spill(sp)
+        for g in range(3):
+            for i in range(5):
+                ml.append(b"g%d-e%d" % (g, i))
+            ml.roll()
+        sp.drain()
+        pool.pmem.crash(rng=np.random.default_rng(4242), evict_prob=0.5)
+        ssd.crash(rng=np.random.default_rng(4242), keep_prob=0.5)
+
+        pool2 = Pool.open(pmem=pool.pmem)
+        pool2.attach_ssd(ssd)
+        sp2 = SpillScheduler(pool2, name="sp")
+        ml2 = MultiLog(pool2, "wal")
+        ml2.attach_spill(sp2)
+        recovered = {}
+        for g in range(1, ml2.current_gen + 1):
+            src, entries = ml2.read_generation(g)
+            recovered[g] = (src, [bytes(e) for e in entries])
+        outcomes.append((ml2.current_gen, ml2.retired_upto, recovered))
+    assert outcomes[0] == outcomes[1] == outcomes[2]
+
+
+# ================================================== pool.wal(gen_sets=)
+
+def test_pool_wal_gen_sets_passthrough():
+    """The satellite fix: ``pool.wal(lanes=N, gen_sets=M)`` constructs a
+    *generational* MultiLog (it used to silently drop gen_sets), roll()
+    works, and reopen comes back generational."""
+    from repro.persistence.wal import StepRecord, TrainWAL
+
+    pool = Pool.create(None, TrainWAL.capacity_for(64, lanes=2, gen_sets=2))
+    wal = pool.wal("steps", capacity_steps=16, lanes=2, group_commit=2,
+                   gen_sets=2)
+    assert wal.generational
+    assert wal.log.gen_sets == 2
+    for s in range(6):
+        wal.commit_step(StepRecord(s, s * 10, (1, 2), 0.5, 1.0, 1.0))
+    wal.flush()
+    sealed = wal.roll()
+    assert sealed == 1 and wal.log.current_gen == 2
+    wal.commit_step(StepRecord(6, 60, (1, 2), 0.4, 1.0, 1.0))
+    wal.flush()
+
+    pool2 = Pool.open(pmem=pool.pmem)
+    wal2 = pool2.wal("steps")
+    assert wal2.generational
+    # live generation holds only the post-roll step
+    assert [r.step for r in wal2.records] == [6]
+    # the sealed generation is still recoverable from its ring slot
+    src, entries = wal2.log.read_generation(1)
+    assert src == "pmem"
+    assert [StepRecord.unpack(e).step for e in entries] == list(range(6))
+
+
+def test_pool_wal_single_lane_rejects_gen_sets():
+    pool = Pool.create(None, 1 << 21)
+    pool.wal("w", capacity_steps=8)
+    with pytest.raises(ValueError, match="single-lane"):
+        pool.wal("w", gen_sets=2)
+
+
+def test_multilog_rejects_generational_upgrade_in_place():
+    """Opening an existing non-generational MultiLog with gen_sets >= 2
+    must raise, not silently create an empty ring that orphans the
+    committed entries in the old lane regions."""
+    pool = Pool.create(None, 1 << 21)
+    ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 18)
+    for i in range(5):
+        ml.append(b"keep-%d" % i, sync=True)
+    with pytest.raises(ValueError, match="non-generational"):
+        MultiLog(pool, "ml", capacity=1 << 18, gen_sets=2)
+    # the original log is untouched and still opens
+    ml2 = MultiLog(pool, "ml")
+    assert len(ml2.recovered.entries) == 5
+
+
+def test_raw_rejects_conflicting_socket_on_reopen():
+    pool = Pool.create(None, 1 << 20, sockets=2)
+    pool.raw("r", nbytes=128, socket=1)
+    assert pool.raw("r", socket=1).record.socket == 1   # matching is fine
+    with pytest.raises(ValueError, match="fixed at creation"):
+        pool.raw("r", socket=0)
+
+
+def test_async_flusher_interleaves_shard_sockets():
+    """AsyncFlusher(sockets=2) must actually land shard 1's regions on
+    socket 1 — propagating the topology into a default (single-socket)
+    shard config, not just setting a home that then clamps to 0."""
+    from repro.persistence.checkpoint import CheckpointConfig, CheckpointManager
+    from repro.persistence.flusher import AsyncFlusher
+
+    cfg = CheckpointConfig(page_size=4096 * 4, manifest_capacity=1 << 17)
+    mgrs = [CheckpointManager(None, cfg, shard_id=i) for i in range(2)]
+    fl = AsyncFlusher(mgrs, sockets=2)
+    state = {"w": np.arange(4096, dtype=np.float32)}
+    fl.submit_all(1, [state, state])
+    fl.close()
+    assert mgrs[0].pool.sockets == 2 and mgrs[1].pool.sockets == 2
+    assert mgrs[0].pool.regions()["pages"].socket == 0
+    assert mgrs[1].pool.regions()["pages"].socket == 1

@@ -2,11 +2,11 @@
 ANY eviction subset, never corrupts previously committed regions — the
 directory recovers every committed record and its contents bit-exact.
 
-Requires the ``test`` extra; deterministic pool tests live in
-``test_pool.py``.
+The property body lives in ``tests/corpus_runner.py`` (shared with the
+deterministic regression corpus in ``test_crash_corpus.py``). Requires
+the ``test`` extra; deterministic pool tests live in ``test_pool.py``.
 """
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
@@ -14,11 +14,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-import repro.core.directory as directory_mod
-from repro.core.directory import KIND_LOG
-from repro.pool import Pool
-
-SIZE = 1 << 19
+from corpus_runner import run_pool_alloc_crash
 
 
 @settings(max_examples=80, deadline=None,
@@ -32,38 +28,4 @@ SIZE = 1 << 19
 )
 def test_crash_mid_allocation_never_corrupts_committed(
         n_entries, payload, crash_stage, seed, prob):
-    pool = Pool.create(None, SIZE)
-    log = pool.log("committed", capacity=1 << 14, technique="zero")
-    appended = []
-    for i in range(n_entries):
-        log.append(payload + bytes([i]))
-        appended.append(payload + bytes([i]))
-    rec_a = pool.regions()["committed"]
-    img_a = pool.pmem.durable_view()[rec_a.base : rec_a.base + rec_a.length].copy()
-
-    # drive the allocation protocol up to the chosen crash point
-    d = pool.directory
-    rec, slot = d._place("newborn", KIND_LOG, 1 << 14, (2, 1, 1, 0))
-    if crash_stage in ("initialized", "entry_stored"):
-        d._initialize(rec)
-    if crash_stage == "entry_stored":
-        entry = directory_mod._ENTRY.pack(
-            b"newborn", rec.kind, rec.generation, rec.base, rec.length,
-            *rec.meta)
-        pool.pmem.store(d._entry_off(slot), entry, streaming=True)
-        # no fence: durability of the entry is up to spontaneous eviction
-    pool.pmem.crash(rng=np.random.default_rng(seed), evict_prob=prob)
-
-    pool2 = Pool.open(pmem=pool.pmem)
-    got_a = pool2.regions()["committed"]
-    assert (got_a.base, got_a.length, got_a.meta) == \
-        (rec_a.base, rec_a.length, rec_a.meta)
-    img2 = pool.pmem.durable_view()[rec_a.base : rec_a.base + rec_a.length]
-    assert np.array_equal(img2, img_a), "committed region not bit-exact"
-    assert pool2.log("committed").recovered.entries == appended
-
-    if "newborn" in pool2.regions():
-        # only possible in the entry_stored stage, and only as a valid
-        # empty region over durably zeroed space
-        assert crash_stage == "entry_stored"
-        assert pool2.log("newborn").recovered.entries == []
+    run_pool_alloc_crash(n_entries, payload, crash_stage, seed, prob)

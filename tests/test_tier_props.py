@@ -10,11 +10,12 @@ whatever instant a crash lands on:
 * every page recovers its newest flushed content from exactly one tier
   (cross-tier max-pvn rule).
 
-Requires the ``test`` extra; deterministic tier tests live in
-``test_tier.py``.
+The property bodies (and the ``SimCrash``/``CrashAt`` failpoint
+helpers) live in ``tests/corpus_runner.py``, shared with the
+deterministic regression corpus in ``test_crash_corpus.py``. Requires
+the ``test`` extra; deterministic tier tests live in ``test_tier.py``.
 """
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
@@ -22,29 +23,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core.ssd import SSD
-from repro.io.flushq import FlushQueue
-from repro.io.multilog import MultiLog
-from repro.pool import Pool
-from repro.tier import SpillScheduler
-
-
-class SimCrash(BaseException):
-    """Raised by the failpoint to cut the spill protocol mid-flight.
-    Derived from BaseException so no protocol-level handler can eat it."""
-
-
-class CrashAt:
-    """Failpoint callable: crash at the Nth protocol point reached."""
-
-    def __init__(self, n: int) -> None:
-        self.n = n
-        self.seen = 0
-
-    def __call__(self, point: str) -> None:
-        self.seen += 1
-        if self.seen == self.n:
-            raise SimCrash(point)
+from corpus_runner import run_generation_spill_crash, run_page_spill_crash
 
 
 @settings(max_examples=50, deadline=None,
@@ -66,83 +45,8 @@ def test_generation_never_read_partially_spilled(
     the spill drain (plus arbitrary device-level durability subsets), and
     assert every generation recovers complete from exactly the tier the
     durable watermark names."""
-    pool = Pool.create(None, 1 << 21)
-    ssd = SSD(1 << 22)
-    pool.attach_ssd(ssd)
-    sp = SpillScheduler(pool, name="sp", map_capacity=1 << 13)
-    ml = MultiLog(pool, "wal", lanes=lanes, capacity=1 << 13,
-                  gen_sets=gen_sets, group_commit=group_commit)
-    ml.attach_spill(sp)
-
-    contents = {}          # gen -> full payload list
-    gen = 1
-    committed_live = 0
-    crashed = False
-    sp.failpoints = CrashAt(crash_step)
-    try:
-        for count in per_gen:
-            contents[gen] = [b"g%d-e%d" % (gen, i) for i in range(count)]
-            for p in contents[gen]:
-                ml.append(p)
-            ml.roll()           # seals gen; may force a drain (failpoints!)
-            gen += 1
-        contents[gen] = [b"g%d-live" % gen]
-        ml.append(contents[gen][0])
-        ml.commit()
-        committed_live = 1
-        sp.drain()              # retire whatever is still queued
-    except SimCrash:
-        crashed = True
-
-    # power failure: arbitrary surviving subsets on both devices
-    rng = np.random.default_rng(seed)
-    pool.pmem.crash(rng=rng, evict_prob=pmem_prob)
-    ssd.crash(rng=rng, keep_prob=ssd_keep)
-
-    pool2 = Pool.open(pmem=pool.pmem)
-    pool2.attach_ssd(ssd)
-    sp2 = SpillScheduler(pool2, name="sp")
-    ml2 = MultiLog(pool2, "wal")
-    ml2.attach_spill(sp2)
-
-    assert ml2.retired_upto < ml2.current_gen
-    resident_window = range(ml2.retired_upto + 1, ml2.current_gen + 1)
-    for g in range(1, ml2.current_gen + 1):
-        if g <= ml2.retired_upto:
-            # the watermark says SSD: the copy there must be COMPLETE —
-            # the watermark only advances after the device flush and the
-            # checksummed map record
-            src, entries = ml2.read_generation(g)
-            assert src == "ssd"
-            assert [bytes(e) for e in entries] == contents[g], g
-        elif g < ml2.current_gen:
-            # sealed but unretired: wholly from PMem, bit-exact (the SSD
-            # may hold a torn partial copy — it must never be consulted)
-            assert g in resident_window
-            src, entries = ml2.read_generation(g)
-            assert src == "pmem"
-            assert [bytes(e) for e in entries] == contents[g], g
-        else:
-            # the live generation: a durable prefix covering every commit
-            src, entries = ml2.read_generation(g)
-            assert src == "pmem"
-            got = [bytes(e) for e in entries]
-            assert got == contents.get(g, [])[: len(got)]
-            if not crashed:
-                assert len(got) >= committed_live
-
-    # …and CONTINUE: roll through the whole ring after recovery. No
-    # generation sealed before the crash may be lost to ring reuse (the
-    # orphaned-generation regression: sealed-but-unretired generations
-    # must be re-enqueued on attach_spill, not silently discarded).
-    resume = ml2.current_gen
-    for _ in range(ml2.gen_sets):
-        ml2.append(b"post")
-        ml2.roll()
-    sp2.drain()
-    for g in range(1, resume):
-        src, entries = ml2.read_generation(g)
-        assert [bytes(e) for e in entries] == contents[g], (g, src)
+    run_generation_spill_crash(lanes, gen_sets, group_commit, per_gen,
+                               crash_step, seed, pmem_prob, ssd_keep)
 
 
 @settings(max_examples=40, deadline=None,
@@ -163,44 +67,5 @@ def test_page_spill_crash_never_loses_flushed_content(
     recovers, from exactly one tier, either its last completed epoch's
     image or the in-flight epoch's (a page flush is failure-atomic) —
     never a torn mix, never anything older."""
-    pool = Pool.create(None, 1 << 21)
-    ssd = SSD(1 << 22)
-    pool.attach_ssd(ssd)
-    sp = SpillScheduler(pool, name="sp", map_capacity=1 << 13)
-    pages = pool.pages("heap", npages=16, page_size=512, nslots=nslots)
-    sp.attach_pages(pages)
-    fq = FlushQueue(pages, lanes=2, spill=sp)
-
-    flushed = {}        # pid -> content of the last DRAINED epoch
-    pending = {}        # pid -> content enqueued for the in-flight epoch
-    sp.failpoints = CrashAt(crash_step)
-    try:
-        for i, (pid, fill) in enumerate(writes):
-            img = np.full(512, fill, dtype=np.uint8)
-            fq.enqueue(pid, img)
-            pending[pid] = img
-            if (i + 1) % 8 == 0:
-                fq.flush_epoch()
-                flushed.update(pending)
-                pending.clear()
-        fq.flush_epoch()
-        flushed.update(pending)
-        pending.clear()
-    except SimCrash:
-        pass
-
-    rng = np.random.default_rng(seed)
-    pool.pmem.crash(rng=rng, evict_prob=pmem_prob)
-    ssd.crash(rng=rng, keep_prob=ssd_keep)
-
-    pool2 = Pool.open(pmem=pool.pmem)
-    pool2.attach_ssd(ssd)
-    sp2 = SpillScheduler(pool2, name="sp")
-    pages2 = pool2.pages("heap")
-    sp2.attach_pages(pages2)
-    for pid, img in flushed.items():
-        got = bytes(sp2.read_page(pages2.store, pid, promote=False))
-        acceptable = {bytes(img)}
-        if pid in pending:   # the crashed epoch may have flushed it already
-            acceptable.add(bytes(pending[pid]))
-        assert got in acceptable, pid
+    run_page_spill_crash(nslots, writes, crash_step, seed, pmem_prob,
+                         ssd_keep)
