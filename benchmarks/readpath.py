@@ -1,0 +1,158 @@
+"""Read path: DRAM cache hit ratio × admission-k, on the Fig. 3 ladder.
+
+The buffer manager (``repro.cache``) claims two things worth numbers:
+
+1. **The ladder is real end-to-end.** A read served from a DRAM frame
+   costs orders of magnitude less modeled time than re-promoting the
+   page from the SSD spill tier (Fig. 3: DRAM ≪ PMem ≪ flash — the
+   promotion additionally pays PMem CoW write traffic).
+2. **k-touch admission dominates promote-on-first-access.** On a
+   scan-dominated workload (every page touched once per pass, working
+   set ≫ PMem slot budget), promote-always turns every read into an
+   SSD read + PMem CoW + eviction write-back of whatever it displaced;
+   ``admit_k > 1`` serves the scan out of SSD reads alone. On a skewed
+   (Zipf) workload the hot set earns promotion after k touches and the
+   two policies converge — k-touch must stay within 10 % of
+   promote-always there (the deferred touches are a bounded one-time
+   cost).
+
+All numbers are modeled: exact op counts (PMem lanes, SSD commands,
+per-tier cache hits) × the calibrated constants. Total read-path time =
+``engine_time_ns`` (PMem, with DRAM hits folded in via ``cache=``) +
+``SSDCostModel.time_ns`` (flash commands).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cache import BufferManager
+from repro.core import COST_MODEL
+from repro.core.costmodel import SSD_COST_MODEL
+from repro.core.ssd import SSD
+from repro.io.flushq import FlushQueue
+from repro.pool import Pool
+from repro.tier import SpillScheduler
+
+from benchmarks.common import check, emit
+
+PAGE = 4096
+NPAGES = 64
+NSLOTS = 8
+FRAMES = 16
+
+
+def build(admit_k: int):
+    """A tiered page region with a bounded cache, pre-populated so most
+    pages are SSD-resident (working set ≫ slot budget)."""
+    pool = Pool.create(None, 1 << 24)
+    ssd = SSD(1 << 24)
+    pool.attach_ssd(ssd)
+    sp = SpillScheduler(pool, name="sp", map_capacity=1 << 16)
+    pages = pool.pages("heap", npages=NPAGES, page_size=PAGE, nslots=NSLOTS)
+    sp.attach_pages(pages)
+    fq = FlushQueue(pages, lanes=4, spill=sp)
+    cache = pool.cache(frames=FRAMES, admit_k=admit_k)
+    cache.attach_pages(pages, flushq=fq, spill=sp)
+    rng = np.random.default_rng(0)
+    for pid in range(NPAGES):
+        cache.put(pid, rng.integers(0, 256, PAGE, dtype=np.uint8))
+        if pid % NSLOTS == NSLOTS - 1:
+            cache.writeback()
+    cache.writeback()
+    sp.ensure_slots(pages.store, need=NSLOTS)   # cold-start: all on SSD
+    cache.invalidate()
+    return pool, ssd, sp, pages, cache
+
+
+def run_workload(accesses, admit_k: int):
+    """Replay a pid access stream through the cache; returns the modeled
+    total ns (PMem engine + SSD device + DRAM hits) and the stat deltas."""
+    pool, ssd, sp, pages, cache = build(admit_k)
+    pm0 = pool.stats.snapshot()
+    ssd0 = ssd.stats.snapshot()
+    c0 = cache.stats.snapshot()
+    for pid in accesses:
+        cache.get(int(pid))
+    pm = pool.stats.delta(pm0)
+    ssd_d = ssd.stats.delta(ssd0)
+    c = cache.stats.delta(c0)
+    total = (COST_MODEL.engine_time_ns(pm, active_lanes=1, cache=c)
+             + SSD_COST_MODEL.time_ns(ssd_d))
+    return total, c, sp
+
+
+def scan_stream(passes: int):
+    """Sequential passes over the whole page set (touch count per page =
+    number of passes)."""
+    return np.tile(np.arange(NPAGES), passes)
+
+
+def zipf_stream(n: int):
+    """Zipf(1.4)-ranked accesses: a hot head touched constantly, a cold
+    tail touched rarely."""
+    rng = np.random.default_rng(7)
+    ranks = np.minimum(rng.zipf(1.4, n) - 1, NPAGES - 1)
+    perm = rng.permutation(NPAGES)
+    return perm[ranks]
+
+
+def run() -> bool:
+    ok = True
+
+    # -------- rung costs: one DRAM hit vs one SSD promotion ------------
+    dram_hit_ns = COST_MODEL.dram.read_ns(PAGE)
+    # measure a real promotion: single hot page, admit on first touch
+    pool, ssd, sp, pages, cache = build(admit_k=1)
+    pm0, ssd0 = pool.stats.snapshot(), ssd.stats.snapshot()
+    cache.get(0)                                   # SSD read + CoW promote
+    promo_ns = (COST_MODEL.engine_time_ns(pool.stats.delta(pm0),
+                                          active_lanes=1)
+                + SSD_COST_MODEL.time_ns(ssd.stats.delta(ssd0)))
+    emit("readpath.dram_hit", dram_hit_ns / 1000, f"{dram_hit_ns:.0f}ns")
+    emit("readpath.ssd_promotion", promo_ns / 1000, f"{promo_ns:.0f}ns")
+    ok &= check("readpath: DRAM hit >= 10x cheaper than SSD promotion",
+                promo_ns > 10 * dram_hit_ns,
+                f"{promo_ns / dram_hit_ns:.0f}x")
+
+    # -------- scan-dominated: admission should refuse the churn --------
+    scan = scan_stream(passes=2)
+    t_always, c_always, _ = run_workload(scan, admit_k=1)
+    t_ktouch, c_ktouch, _ = run_workload(scan, admit_k=3)
+    emit("readpath.scan.promote_always", t_always / 1000,
+         f"promos={c_always.promotions}")
+    emit("readpath.scan.ktouch_k3", t_ktouch / 1000,
+         f"promos={c_ktouch.promotions} hit={c_ktouch.hit_ratio:.2f}")
+    ok &= check("readpath: k-touch beats promote-always on a scan",
+                t_ktouch < t_always,
+                f"{t_always / t_ktouch:.2f}x faster")
+    ok &= check("readpath: scan under k-touch promotes ~nothing",
+                c_ktouch.promotions <= NPAGES // 8,
+                f"{c_ktouch.promotions} promotions")
+
+    # -------- skewed (Zipf): the policies must converge ----------------
+    zipf = zipf_stream(1500)
+    z_always, cz_always, _ = run_workload(zipf, admit_k=1)
+    z_ktouch, cz_ktouch, _ = run_workload(zipf, admit_k=3)
+    emit("readpath.zipf.promote_always", z_always / 1000,
+         f"promos={cz_always.promotions} hit={cz_always.hit_ratio:.2f}")
+    emit("readpath.zipf.ktouch_k3", z_ktouch / 1000,
+         f"promos={cz_ktouch.promotions} hit={cz_ktouch.hit_ratio:.2f}")
+    ok &= check("readpath: k-touch within 10% of promote-always on Zipf",
+                z_ktouch <= 1.10 * z_always,
+                f"{z_ktouch / z_always:.3f}x")
+    ok &= check("readpath: Zipf hot set served from DRAM",
+                cz_ktouch.hit_ratio > 0.5,
+                f"hit ratio {cz_ktouch.hit_ratio:.2f}")
+
+    # -------- hit-ratio × admission-k sweep ----------------------------
+    for k in (1, 2, 4):
+        t, c, _ = run_workload(zipf, admit_k=k)
+        emit(f"readpath.sweep.zipf_k{k}", t / 1000,
+             f"hit={c.hit_ratio:.2f} promos={c.promotions} "
+             f"deferred={c.admissions_deferred}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

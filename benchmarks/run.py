@@ -37,6 +37,7 @@ def main() -> None:
         fig5_pageflush,
         fig6_logging,
         numa_placement,
+        readpath,
         tab_ycsb,
         tier_capacity,
     )
@@ -51,6 +52,7 @@ def main() -> None:
         (tab_ycsb, "§3.3.2 YCSB validation", True),
         (tier_capacity, "Tiered storage: capacity-pressure sweep", True),
         (numa_placement, "NUMA lane placement: near vs far socket", True),
+        (readpath, "Read path: DRAM cache hit-ratio x admission-k", True),
     ]
     from benchmarks import common
 

@@ -70,9 +70,15 @@ class SSDCostModel:
     rmw_read_ns: float = 85_000.0
     block: int = 4096
 
+    def read_time_ns(self, reads: int, nbytes: int) -> float:
+        """Aggregate read cost: ``reads`` command latencies plus
+        ``nbytes`` of transfer at read bandwidth."""
+        return (reads * self.read_latency_ns
+                + nbytes / (self.read_bw_gbps * GiB) * 1e9)
+
     def read_ns(self, nbytes: int) -> float:
         """One read command of ``nbytes``: latency + transfer."""
-        return self.read_latency_ns + nbytes / (self.read_bw_gbps * GiB) * 1e9
+        return self.read_time_ns(1, nbytes)
 
     def write_ns(self, nbytes: int) -> float:
         """One write command of ``nbytes``: latency + sustained program."""
@@ -104,6 +110,21 @@ class DRAMCostModel:
     load_bw_gbps: float = 68.3          # random 64 B-granular loads, 24 thr
     store_bw_nt_gbps: float = 52.0      # streaming stores
     store_bw_regular_gbps: float = 38.0  # regular stores (RFO traffic)
+
+    def read_time_ns(self, reads: int, nbytes: int) -> float:
+        """Aggregate DRAM read cost: ``reads`` random-read latencies plus
+        ``nbytes`` of transfer at DRAM load bandwidth — the single
+        source of the DRAM-hit formula (``readpath_time_ns`` and
+        ``engine_time_ns(cache=…)`` both charge through here)."""
+        return (reads * self.load_latency_ns
+                + nbytes / (self.load_bw_gbps * GiB) * 1e9)
+
+    def read_ns(self, nbytes: int) -> float:
+        """One DRAM buffer-cache hit of ``nbytes``: the Fig. 3 DRAM
+        random-read latency plus transfer at DRAM load bandwidth — the
+        top rung of the ladder the ``repro.cache`` buffer manager
+        serves from."""
+        return self.read_time_ns(1, nbytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -301,6 +322,37 @@ class PMemCostModel:
             return float("inf")
         return n_ops / (total_ns * 1e-9)
 
+    # -------------------------------------------------- read-path (Fig. 3)
+
+    def pmem_read_time_ns(self, reads: int, nbytes: int) -> float:
+        """Aggregate PMem frame-fill cost: ``reads`` random-read
+        latencies (the Fig. 3 3.2× rung) plus ``nbytes`` at PMem load
+        bandwidth."""
+        return (reads * self.load_latency_ns
+                + nbytes / (self.load_bw_gbps * GiB) * 1e9)
+
+    def pmem_read_ns(self, nbytes: int) -> float:
+        """One PMem frame fill of ``nbytes``: the Fig. 3 PMem random-read
+        latency (3.2× DRAM) plus transfer at PMem load bandwidth."""
+        return self.pmem_read_time_ns(1, nbytes)
+
+    def readpath_time_ns(self, cache, *, ssd: Optional["SSDCostModel"] = None
+                         ) -> float:
+        """Modeled read-path time of a ``repro.cache.CacheStats`` delta
+        against the Fig. 3 latency ladder: DRAM hits at DRAM
+        latency/bandwidth, PMem frame fills at the 3.2× rung, SSD fills
+        per the flash model (``ssd`` defaults to ``SSD_COST_MODEL``).
+        Only *read* traffic is charged here — promotion/eviction writes
+        are already counted where they execute (``PMemStats`` lane
+        work, ``SSDStats`` programs) and costed by :meth:`engine_time_ns`
+        / :meth:`SSDCostModel.time_ns`."""
+        ssd = ssd if ssd is not None else SSD_COST_MODEL
+        return (self.dram.read_time_ns(cache.dram_hits,
+                                       cache.dram_hit_bytes)
+                + self.pmem_read_time_ns(cache.pmem_fills,
+                                         cache.pmem_fill_bytes)
+                + ssd.read_time_ns(cache.ssd_fills, cache.ssd_fill_bytes))
+
     # ------------------------------------------------- lane-partitioned time
 
     def engine_time_ns(
@@ -311,6 +363,7 @@ class PMemCostModel:
         kind: FlushKind = FlushKind.NT,
         pattern: AccessPattern = AccessPattern.SEQUENTIAL,
         burst: bool = False,
+        cache=None,
     ) -> float:
         """Wall-clock of a lane-partitioned engine (repro.io).
 
@@ -333,14 +386,26 @@ class PMemCostModel:
         stall, which is a device-side RMW) x ``numa_remote_block_mult``.
         With every lane near its memory the remote counts are zero and
         the result is identical to the pre-NUMA model.
+
+        ``cache`` (a ``repro.cache.CacheStats`` delta) folds the DRAM
+        buffer manager's hit traffic into the same clock: hits are
+        served at the Fig. 3 DRAM rung and added to the serialized
+        remainder (tier *fills* are not added here — they already appear
+        in the PMem/SSD op counts this method and
+        :meth:`SSDCostModel.time_ns` charge).
         """
+        dram_ns = 0.0
+        if cache is not None:
+            dram_ns = self.dram.read_time_ns(cache.dram_hits,
+                                             cache.dram_hit_bytes)
         lanes = set()
         for field in (stats.lane_barriers, stats.lane_lines,
                       stats.lane_blocks_written, stats.lane_partial_blocks):
             lanes.update(k for k, v in field.items() if v)
         n = int(active_lanes) if active_lanes is not None else max(1, len(lanes))
         if not lanes:
-            return self.time_ns(stats, kind=kind, pattern=pattern, threads=n)
+            return dram_ns + self.time_ns(stats, kind=kind, pattern=pattern,
+                                          threads=n)
         scale = self.thread_scale_burst(n) if burst else self.thread_scale(n, kind)
         per_block = self.block_write_ns_single / (scale / n)
         barrier_ns = self.persist_latency_ns(kind, pattern) + self.barrier_ns
@@ -373,7 +438,7 @@ class PMemCostModel:
         if stats.device_read_bytes:
             bw = self.load_bandwidth_gbps(4, n) * GiB
             shared += stats.device_read_bytes / bw * 1e9
-        return critical + shared
+        return critical + shared + dram_ns
 
 
 COST_MODEL = PMemCostModel()

@@ -429,6 +429,18 @@ class PageStore:
         slot, _ = self.table[pid]
         return self.pmem.load(self.layout.slot_data_off(slot), self.layout.page_size)
 
+    def fill_page(self, pid: int) -> Tuple[np.ndarray, int]:
+        """Frame fill for the DRAM buffer manager (``repro.cache``): an
+        *uncached* device read of the page's current slot — the whole
+        page crosses the memory bus into a DRAM frame, so the full size
+        is charged as ``device_read_bytes`` (the Fig. 3 PMem rung),
+        unlike :meth:`read_page`'s CPU-cache-modeled load. Returns
+        ``(data, pvn)``."""
+        slot, pvn = self.table[pid]
+        data = self.pmem.load(self.layout.slot_data_off(slot),
+                              self.layout.page_size, uncached=True)
+        return data, pvn
+
     def durable_page(self, pid: int) -> Optional[np.ndarray]:
         table = recover_page_table(self.pmem, self.layout)
         if pid not in table:

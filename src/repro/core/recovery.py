@@ -1,8 +1,15 @@
 """A minimal buffer-managed storage engine tying the primitives together.
 
 This is the validation vehicle of paper §3.3.2 (HyMem + YCSB): a DRAM
-"buffer pool" of fixed-size pages over a PMem page region, with a
-write-ahead log using any of the three logging techniques. It exists to
+buffer pool of fixed-size pages over a PMem page region, with a
+write-ahead log using any of the three logging techniques. The buffer
+pool is a real one since PR 5: a bounded
+:class:`~repro.cache.BufferManager` (``pool.cache``) rather than a
+resident array — reads fault frames in from whichever tier holds the
+page (DRAM frame → PMem slot → SSD spill extent), writes dirty frames
+that the checkpoint epoch writes back, and ``KVConfig(cache_frames=…)``
+bounds the DRAM footprint independently of the PMem slot budget. It
+exists to
 
   * demonstrate the I/O primitives composing into a correct engine,
   * run the YCSB-style 100 %-write validation (``benchmarks/tab_ycsb.py``),
@@ -44,9 +51,7 @@ from __future__ import annotations
 import dataclasses
 import struct
 import warnings
-from typing import Dict, Optional, Set, Tuple, Union
-
-import numpy as np
+from typing import Optional, Tuple
 
 from repro.core.blocks import BlockGeometry, PAPER_GEOMETRY, align_up
 from repro.core.log import LogConfig
@@ -108,6 +113,15 @@ class KVConfig:
     #: regions on a multi-socket pool; multi-lane WAL regions are spread
     #: over the sockets by the pool's LanePlacer regardless
     socket: int = 0
+    #: DRAM buffer-pool frames. None = every page fits (``npages`` frames
+    #: — the classic resident buffer pool). A smaller value bounds the
+    #: engine's DRAM footprint: cold frames are clock-evicted (dirty ones
+    #: park in the flush queue until the next checkpoint epoch) and reads
+    #: fault back in from the page's resident tier. 0 disables caching.
+    cache_frames: Optional[int] = None
+    #: touches before an SSD-resident page is promoted back into a PMem
+    #: slot on read (k-touch admission; 1 = promote on first access)
+    cache_admit_k: int = 2
 
     @property
     def recs_per_page(self) -> int:
@@ -192,9 +206,23 @@ class PersistentKV:
                                   socket=cfg.socket)
         self.checkpoint_lsn = 0
         self._root_gen = 0
-        # --- volatile state ------------------------------------------------
-        self.pool = np.zeros((cfg.npages, cfg.page_size), dtype=np.uint8)
-        self.dirty: Dict[int, Set[int]] = {}
+        # --- volatile state: the DRAM buffer pool is the pool's shared
+        # BufferManager; the engine's dirty tracking, snapshot reads and
+        # tier faulting all live behind cache.get/write/writeback --------
+        from repro.io.flushq import FlushQueue
+        self._fq = FlushQueue(self.store, lanes=cfg.flush_lanes,
+                              spill=self._spill, placer=self._placer)
+        # Explicit cache config is verified against a pre-existing pool
+        # cache (conflict raises); values still at the KVConfig defaults
+        # reuse it quietly. A cache-less pool defaults to the classic
+        # resident buffer pool: one frame per page.
+        from repro.cache import BufferManager
+        self.cache = BufferManager.for_pool(
+            pmpool, frames=cfg.cache_frames,
+            admit_k=None if cfg.cache_admit_k == KVConfig.cache_admit_k
+            else cfg.cache_admit_k,
+            default_frames=cfg.npages, default_admit_k=cfg.cache_admit_k)
+        self.cache.attach_pages(pages, flushq=self._fq, spill=self._spill)
         if recover:
             self._recover_state()
 
@@ -246,10 +274,10 @@ class PersistentKV:
         if len(value) != self.cfg.value_size:
             raise ValueError("fixed-size values only")
         pid, off = self._locate(key)
-        self.pool[pid, off : off + len(value)] = np.frombuffer(value, dtype=np.uint8)
-        cl = self.cfg.geometry.cache_line
-        lines = self.dirty.setdefault(pid, set())
-        lines.update(range(off // cl, (off + len(value) - 1) // cl + 1))
+        # buffer-pool write: dirties the page's DRAM frame (faulting the
+        # rest of the page in from its resident tier if needed — write
+        # faults never promote); nothing touches PMem until a checkpoint
+        self.cache.write(pid, off, value, store=self.store)
         try:
             lsn = self.wal.append(_REC.pack(key, len(value)) + value)
         except RuntimeError:
@@ -261,7 +289,8 @@ class PersistentKV:
 
     def get(self, key: int) -> bytes:
         pid, off = self._locate(key)
-        return self.pool[pid, off : off + self.cfg.value_size].tobytes()
+        page = self.cache.get(pid, store=self.store)
+        return page[off : off + self.cfg.value_size].tobytes()
 
     # -------------------------------------------------------- checkpoint
 
@@ -271,10 +300,11 @@ class PersistentKV:
 
         Page flushes precede the root update; a crash in between merely
         replays redo records onto already-flushed pages (idempotent puts).
-        With ``cfg.flush_lanes > 1`` the flushes run through a lane-
-        partitioned engine epoch (batched, actual-lane-count Hybrid); a
-        tiered engine additionally spills cold slots to SSD during that
-        epoch instead of failing allocation.
+        The dirty frames drain through the buffer manager's write-back
+        epoch (one lane-partitioned ``FlushQueue`` drain at
+        ``cfg.flush_lanes``, frames pinned for the duration); a tiered
+        engine additionally spills cold slots to SSD during that epoch
+        instead of failing allocation.
 
         WAL truncation depends on the log: a single-lane WAL starts a new
         generation in place (``reset`` re-zeroes the region); a multi-lane
@@ -282,17 +312,7 @@ class PersistentKV:
         stays recoverable, and the spill scheduler retires it to SSD in
         the same checkpoint epoch.
         """
-        if self.cfg.flush_lanes > 1 or self._spill is not None:
-            from repro.io.flushq import FlushQueue
-            fq = FlushQueue(self.store, lanes=self.cfg.flush_lanes,
-                            spill=self._spill, placer=self._placer)
-            for pid, lines in sorted(self.dirty.items()):
-                fq.enqueue(pid, self.pool[pid], sorted(lines))
-            fq.flush_epoch()
-        else:
-            for pid, lines in sorted(self.dirty.items()):
-                self.store.flush(pid, self.pool[pid], dirty_lines=sorted(lines))
-        self.dirty.clear()
+        self.cache.writeback(self.store)
         ckpt_lsn = self.checkpoint_lsn + (self.wal.next_lsn - 1)
         self._root_gen += 1
         slot = self._root_gen % 2
@@ -326,31 +346,20 @@ class PersistentKV:
 
     def _recover_state(self) -> None:
         self._root_gen, self.checkpoint_lsn = self._read_root()
-        # load persistent pages into the buffer pool. With a spill tier
-        # the scheduler resolves which tier holds each page's newest
-        # version (cross-tier max-pvn rule); no promotion — recovery
-        # should not churn the slot budget before the workload tells us
-        # which pages are actually hot.
-        if self._spill is not None:
-            spilled = self._spill.spilled_pages(self.store)
-            for pid in range(self.cfg.npages):
-                if pid in self.store.table or pid in spilled:
-                    self.pool[pid] = self._spill.read_page(
-                        self.store, pid, promote=False)
-        else:
-            for pid in range(self.cfg.npages):
-                if pid in self.store.table:
-                    self.pool[pid] = self.store.read_page(pid)
-        # redo WAL entries past the checkpoint (the handle recovered them
-        # when it was opened, and is already positioned at the tail)
-        cl = self.cfg.geometry.cache_line
+        # No eager page loads: the buffer manager faults each page in
+        # from whichever tier holds its newest version (cross-tier
+        # max-pvn rule) on first access, and write faults never promote
+        # — recovery does not churn the slot budget before the workload
+        # tells us which pages are actually hot.
+        # Redo WAL entries past the checkpoint (the handle recovered them
+        # when it was opened, and is already positioned at the tail):
+        # each write dirties the page's frame, re-flushed at the next
+        # checkpoint exactly like a fresh put.
         for entry in self.wal.recovered.entries:
             key, vlen = _REC.unpack_from(entry, 0)
             value = entry[_REC.size : _REC.size + vlen]
             pid, off = self._locate(key)
-            self.pool[pid, off : off + vlen] = np.frombuffer(value, dtype=np.uint8)
-            lines = self.dirty.setdefault(pid, set())
-            lines.update(range(off // cl, (off + vlen - 1) // cl + 1))
+            self.cache.write(pid, off, bytes(value), store=self.store)
 
     @classmethod
     def open(cls, pool_or_pmem, cfg: KVConfig, *, name: str = "kv") -> "PersistentKV":

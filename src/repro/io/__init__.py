@@ -16,7 +16,10 @@ batches and barriers":
   in front of a :class:`~repro.core.pageflush.PageStore`; each epoch is
   lane-partitioned and the Hybrid crossover uses the *actual* number of
   active lanes; with ``spill=`` attached, epochs that outgrow the PMem
-  slot budget evict cold slots to the SSD tier instead of raising.
+  slot budget evict cold slots to the SSD tier instead of raising. It
+  is also the sole write-back path of the DRAM buffer manager
+  (:class:`~repro.cache.BufferManager`): dirty frames drain as one
+  epoch, clock-evicted dirty frames park in the pending set.
 - :mod:`repro.io.engine`   — :class:`IOEngine`: facade allocating
   non-overlapping lane ids and converting per-lane op counts to modeled
   wall-clock (``costmodel.engine_time_ns``: max over lanes, Fig. 2

@@ -107,14 +107,25 @@ class IOEngine:
         from repro.tier import SpillScheduler
         return SpillScheduler(self.pool, ssd, name=name, **kw)
 
+    def cache(self, frames: Optional[int] = None,
+              admit_k: Optional[int] = None):
+        """The pool's DRAM :class:`~repro.cache.BufferManager`
+        (``pool.cache``) — the engine's top rung: page reads served from
+        bounded DRAM frames, dirty frames written back through this
+        engine's flush-queue epochs, SSD→PMem promotion gated by
+        k-touch admission."""
+        return self.pool.cache(frames=frames, admit_k=admit_k)
+
     # ---------------------------------------------------------- accounting
 
     def modeled_ns(self, delta: PMemStats, *,
                    active_lanes: Optional[int] = None,
                    kind: FlushKind = FlushKind.NT,
                    pattern: AccessPattern = AccessPattern.SEQUENTIAL,
-                   burst: bool = False) -> float:
-        """Lane-aware modeled wall-clock for an op-count delta."""
+                   burst: bool = False, cache=None) -> float:
+        """Lane-aware modeled wall-clock for an op-count delta; ``cache``
+        (a :class:`~repro.cache.CacheStats` delta) folds DRAM buffer
+        hits into the same clock."""
         return self.cost_model.engine_time_ns(
             delta, active_lanes=active_lanes, kind=kind, pattern=pattern,
-            burst=burst)
+            burst=burst, cache=cache)

@@ -27,6 +27,14 @@ keeps slack beyond the bare minimum), and a mid-batch ``no free slots``
 condition evicts and retries instead of failing the epoch — an epoch
 that misses the PMem capacity budget overflows asynchronously (off the
 caller's critical path) instead of raising.
+
+The queue is also the write-back path of the DRAM buffer manager
+(:class:`repro.cache.BufferManager`): dirty frames are enqueued here —
+:meth:`BufferManager.writeback <repro.cache.BufferManager.writeback>`
+drains them as one epoch, and a clock-evicted dirty frame *parks* its
+image in the pending set until that drain. The pending set is DRAM, so
+reads may be served from it (:meth:`pending_image`) without adding a
+durability point.
 """
 
 from __future__ import annotations
@@ -99,16 +107,20 @@ class FlushQueue:
 
     def enqueue(self, pid: int, page: np.ndarray,
                 dirty_lines: Optional[Sequence[int]] = None, *,
-                copy: bool = True) -> None:
+                copy: bool = True, touch: bool = True) -> None:
         """Queue a page for the next epoch; re-enqueueing merges (latest
         image wins, dirty sets union). The image is copied by default so
         the caller may keep mutating its buffer; ``copy=False`` hands
         ownership of ``page`` to the queue (the checkpoint path builds a
         throwaway array per page — the whole epoch's page set is held
-        until the drain, so avoiding the extra copy halves that spike)."""
+        until the drain, so avoiding the extra copy halves that spike).
+        ``touch=False`` suppresses the spill-LRU touch — the buffer
+        manager counts each logical access exactly once itself, and its
+        write-back enqueues must not disturb the recency order (a
+        frameless run would not see them)."""
         page = (np.array(page, dtype=np.uint8, copy=True) if copy
                 else np.asarray(page, dtype=np.uint8)).ravel()
-        if self.spill is not None:
+        if self.spill is not None and touch:
             # enqueue = recent use (LRU signal, attributed to OUR store)
             self.spill.touch(int(pid), self.store)
         prev = self._pending.get(int(pid))
@@ -119,6 +131,25 @@ class FlushQueue:
         else:
             dirty = set(int(i) for i in dirty_lines) if dirty_lines is not None else None
         self._pending[int(pid)] = (page, dirty)
+
+    # ------------------------------------------------- buffer-manager hooks
+
+    def pending_image(self, pid: int
+                      ) -> Optional[Tuple[np.ndarray, Optional[Set[int]]]]:
+        """The coalesced ``(page, dirty)`` queued for ``pid``, or ``None``.
+        The pending set is DRAM, so the buffer manager serves reads from
+        it (a parked dirty eviction is still the page's newest image)."""
+        return self._pending.get(int(pid))
+
+    def pop_pending(self, pid: int
+                    ) -> Optional[Tuple[np.ndarray, Optional[Set[int]]]]:
+        """Remove and return ``pid``'s queued entry — the buffer manager
+        re-adopts a parked image into a frame before writing to it."""
+        return self._pending.pop(int(pid), None)
+
+    def pending_pids(self) -> List[int]:
+        """Queued pids in first-enqueued (drain) order."""
+        return list(self._pending)
 
     def flush_epoch(self) -> EpochReport:
         """Drain the queue: flush every pending page, lane-partitioned.

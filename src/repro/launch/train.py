@@ -78,6 +78,13 @@ class TrainerConfig:
     # and amortizes `wal_group_commit` steps per persistency barrier
     wal_lanes: int = 1
     wal_group_commit: int = 1
+    # >= 2 runs the step WAL on a generation ring: every checkpoint rolls
+    # (seals) the live generation and the spill tier retires it to SSD in
+    # the same cadence, so the WAL's PMem footprint stays at
+    # gen_sets x capacity_steps instead of growing for the whole run
+    # (capacity_steps is then per generation — size it to the checkpoint
+    # cadence, not the run length)
+    wal_gen_sets: int = 1
 
 
 class Trainer:
@@ -91,13 +98,29 @@ class Trainer:
             total_steps=max(tc.steps, 100)))
         # --- persistence ------------------------------------------------
         wal_path = os.path.join(tc.out, "wal.pmem")
-        self.wal_pool = Pool.open_or_create(
-            wal_path, TrainWAL.capacity_for(tc.wal_capacity_steps,
-                                            lanes=tc.wal_lanes))
+        wal_bytes = TrainWAL.capacity_for(tc.wal_capacity_steps,
+                                          lanes=tc.wal_lanes,
+                                          gen_sets=tc.wal_gen_sets)
+        if tc.wal_gen_sets > 1:
+            wal_bytes += 1 << 16   # spill-map double buffer + head regions
+        self.wal_pool = Pool.open_or_create(wal_path, wal_bytes)
         self.wal_pmem = self.wal_pool.pmem
         self.wal = self.wal_pool.wal(
             "train_wal", capacity_steps=tc.wal_capacity_steps,
-            lanes=tc.wal_lanes, group_commit=tc.wal_group_commit)
+            lanes=tc.wal_lanes, group_commit=tc.wal_group_commit,
+            gen_sets=tc.wal_gen_sets)
+        self.wal_spill = None
+        if self.wal.generational:
+            # the ring needs a retirement path: sealed step generations
+            # move to SSD at the checkpoint cadence (the durable retired
+            # watermark keeps every generation recoverable from exactly
+            # one tier), bounding the WAL's PMem footprint for good
+            from repro.core.ssd import SSD
+            from repro.tier import SpillScheduler
+            self.wal_pool.attach_ssd(SSD(1 << 26))
+            self.wal_spill = SpillScheduler(self.wal_pool, name="twsp",
+                                            map_capacity=1 << 14)
+            self.wal.log.attach_spill(self.wal_spill)
         self.manager = CheckpointManager(
             os.path.join(tc.out, "ckpt.pmem"),
             CheckpointConfig(page_size=128 * 1024))
@@ -161,6 +184,15 @@ class Trainer:
                     self.flusher.submit(step + 1, state)
                 else:
                     self.manager.save(step + 1, state)
+                if self.wal.generational:
+                    # checkpoint-cadence truncation: seal the live step
+                    # generation and retire it through the spill tier —
+                    # it stays recoverable (PMem until the drain's map
+                    # record + watermark commit, SSD after), but its
+                    # ring slot frees for reuse instead of the step WAL
+                    # only ever truncating at restart
+                    self.wal.roll()
+                    self.wal_spill.drain()
         self.wal.flush()   # drain any group-commit-buffered steps
         if self.flusher is not None:
             reports = self.flusher.wait()

@@ -28,6 +28,13 @@ Consistency story (the non-trivial part):
   picks CoW vs µLog per page. A delta onto the shadow slot must cover the
   change since v-1, so the dirty set is the union of the last two saves'
   dirty blocks.
+* The last-flushed snapshot lives in the pool's DRAM buffer manager
+  (``pool.cache``), one clean frame per page, written through
+  :meth:`~repro.cache.BufferManager.writeback` — the save epoch leaves
+  each frame holding exactly the bytes it flushed. Bounding the frame
+  pool (``CheckpointConfig.cache_frames``) bounds the manager's DRAM
+  footprint: a leaf whose snapshot frames were evicted degrades to a
+  full-page rewrite on its next save (correct, merely conservative).
 """
 
 from __future__ import annotations
@@ -86,6 +93,14 @@ class CheckpointConfig:
     #: home socket of this shard's regions. None = ``shard_id % sockets``
     #: (AsyncFlusher interleaves its shards across the sockets)
     socket: Optional[int] = None
+    #: DRAM buffer-manager frames holding the last-flushed snapshots.
+    #: None = one frame per page (full snapshot set — every delta save
+    #: diffs against DRAM, the classic behavior). A smaller value bounds
+    #: the shard's DRAM footprint; evicted snapshots degrade that leaf's
+    #: next save to a full rewrite.
+    cache_frames: Optional[int] = None
+    #: k-touch SSD→PMem promotion threshold for the shard's pages
+    cache_admit_k: int = 2
 
     @property
     def geometry(self) -> BlockGeometry:
@@ -151,9 +166,9 @@ class CheckpointManager:
         self._epoch_report: Optional[SaveReport] = None
         self._epoch_prev_dirty: Dict[int, set] = {}
         self._layout: Optional[PageStoreLayout] = None
+        self._cache = None                            # pool's BufferManager
         self._leaf_pages: Dict[str, List[int]] = {}
         self._leaf_meta: Dict[str, Dict[str, Any]] = {}
-        self._snapshots: Dict[str, np.ndarray] = {}   # last flushed bytes
         self._prev_dirty: Dict[int, set] = {}         # page -> dirty lines of last save
         self._shadow: Dict[int, int] = {}             # page -> shadow slot
         self._manifest_base = 0
@@ -216,6 +231,23 @@ class CheckpointManager:
         self._flushq = self._pages.flush_queue(
             lanes=cfg.threads, flush_fn=self._engine_flush_page)
         self._flushq.spill = self._spill
+        self._cache = self._pool_cache(npages)
+        self._cache.attach_pages(self._pages, flushq=self._flushq,
+                                 spill=self._spill)
+
+    def _pool_cache(self, npages: int):
+        """The shard pool's buffer manager: explicit ``cache_frames`` /
+        ``cache_admit_k`` are verified against any pre-existing pool
+        cache (conflict raises); default-configured shards reuse one
+        quietly, or create the full snapshot set (a frame per page)."""
+        from repro.cache import BufferManager
+        cfg = self.cfg
+        return BufferManager.for_pool(
+            self.pool, frames=cfg.cache_frames,
+            admit_k=None
+            if cfg.cache_admit_k == CheckpointConfig.cache_admit_k
+            else cfg.cache_admit_k,
+            default_frames=npages, default_admit_k=cfg.cache_admit_k)
 
     def _make_spill(self):
         """The shard's spill scheduler (creates the SSD device if none
@@ -250,7 +282,7 @@ class CheckpointManager:
         set) vs the snapshot (None = everything dirty) AND per-block
         popcounts for the page checksums."""
         buf = self._leaf_bytes(cur)
-        snap = self._snapshots.get(name)
+        snap = self._leaf_snapshot(name)
         cl = self.cfg.geometry.cache_line
         if snap is None or not self.cfg.delta:
             counts = np.asarray(popcount_blocks(
@@ -267,6 +299,23 @@ class CheckpointManager:
         for b in dirty_idx.tolist():
             per_page.setdefault(b // lpp, set()).add(b % lpp)
         return per_page, buf, counts
+
+    def _leaf_snapshot(self, name: str) -> Optional[np.ndarray]:
+        """Last-flushed bytes of a leaf, reassembled from the buffer
+        manager's frames (one clean frame per page after each save's
+        write-back). ``None`` — the full-rewrite path — when any page's
+        snapshot frame was evicted, or before the leaf's first save."""
+        if self._cache is None:
+            return None
+        cfg = self.cfg
+        pids = self._leaf_pages[name]
+        out = np.empty(len(pids) * cfg.page_size, dtype=np.uint8)
+        for i, pid in enumerate(pids):
+            frame = self._cache.peek(pid, self.store)
+            if frame is None:
+                return None
+            out[i * cfg.page_size : (i + 1) * cfg.page_size] = frame
+        return out[: self._leaf_meta[name]["nbytes"]]
 
     def save(self, step: int, state: Dict[str, Any]) -> SaveReport:
         if self.pmem is None:
@@ -302,20 +351,22 @@ class CheckpointManager:
                 checks.append(int((int(blk.sum(dtype=np.uint64)) + 1) & 0xFFFFFFFF))
                 if per_page is None:
                     # first save / no delta: full rewrite, forced CoW
-                    self._flushq.enqueue(pid, page, None, copy=False)
+                    self._cache.put(pid, page, None, store=self.store)
                     continue
                 dirty = per_page.get(i, set())
                 if not dirty:
                     report.pages_clean += 1   # previous version still valid
                     continue
-                self._flushq.enqueue(pid, page, sorted(dirty), copy=False)
+                self._cache.put(pid, page, sorted(dirty), store=self.store)
             leaf_checks[name] = checks
-            self._snapshots[name] = buf.copy()
 
-        # Pass 2 — one lane-partitioned epoch drains every dirty page; the
+        # Pass 2 — the buffer manager's write-back: one lane-partitioned
+        # epoch drains every dirty frame (pinned for the duration); the
         # Hybrid µLog-vs-CoW decision sees the epoch's ACTUAL active-lane
-        # count, not the constructor's thread constant.
-        epoch = self._flushq.flush_epoch()
+        # count, not the constructor's thread constant. The frames stay
+        # resident holding exactly the flushed bytes — the next save's
+        # dirty-diff snapshots.
+        epoch = self._cache.writeback(self.store)
         report.active_lanes = max(1, epoch.active_lanes)
         report.pages_spilled = epoch.pages_spilled
         report.spill_ns = epoch.spill_ns
@@ -494,6 +545,10 @@ class CheckpointManager:
         self._flushq = self._pages.flush_queue(
             lanes=cfg.threads, flush_fn=self._engine_flush_page,
             spill=self._spill)
+        self._cache = self._pool_cache(self._layout.npages)
+        self._cache.attach_pages(self._pages, flushq=self._flushq,
+                                 spill=self._spill)
+        self._cache.invalidate(self.store)
         referenced = set()
         self._spilled_pvn = {}
         for name, meta in entry["leaves"].items():
@@ -510,7 +565,14 @@ class CheckpointManager:
                 referenced.add(slot)
                 # trust the committed manifest over µlog-advanced versions
                 self.store.table[pid] = (slot, pvn)
-            self._snapshots[name] = self._leaf_bytes(state[name]).copy()
+            # seed the snapshot frames from the restored bytes, so the
+            # next save delta-diffs instead of rewriting every page
+            buf = self._leaf_bytes(state[name])
+            for i, pid in enumerate(self._leaf_pages[name]):
+                page = np.zeros(cfg.page_size, dtype=np.uint8)
+                chunk = buf[i * cfg.page_size : (i + 1) * cfg.page_size]
+                page[: chunk.size] = chunk
+                self._cache.install(pid, page, store=self.store)
         self.store.free = [s for s in range(self._layout.nslots)
                            if s not in referenced]
         self._shadow = {}

@@ -45,7 +45,9 @@ class AsyncFlusher:
     def __init__(self,
                  managers: Union[CheckpointManager, Sequence[CheckpointManager]],
                  *, max_pending: int = 2,
-                 sockets: Optional[int] = None) -> None:
+                 sockets: Optional[int] = None,
+                 cache_frames: Optional[int] = None,
+                 cache_admit_k: Optional[int] = None) -> None:
         """``sockets`` (when > 1) interleaves the shards' home sockets
         round-robin across the host's NUMA sockets, so each shard's
         worker lane flushes near-socket instead of funneling every
@@ -54,14 +56,23 @@ class AsyncFlusher:
         themselves (``CheckpointConfig.socket``) are moved; a shard
         config still at the single-socket default also has the topology
         propagated into it (its pool is created ``sockets``-wide —
-        without that the home assignment would clamp back to 0)."""
+        without that the home assignment would clamp back to 0).
+
+        ``cache_frames`` / ``cache_admit_k`` likewise propagate a
+        host-level DRAM budget into every shard config still at its
+        default: the flusher's aggregate staging DRAM is
+        ``lanes × cache_frames × page_size``, bounded regardless of the
+        state size — per-shard snapshot frames are the shard pool's
+        :class:`~repro.cache.BufferManager` (``pool.cache``), not an
+        unbounded host-RAM mirror. Shards whose pools are already built
+        or whose configs pin their own values keep them."""
         if isinstance(managers, CheckpointManager):
             managers = [managers]
         self.managers: List[CheckpointManager] = list(managers)
         if not self.managers:
             raise ValueError("AsyncFlusher needs at least one manager")
+        import dataclasses
         if sockets is not None and sockets > 1:
-            import dataclasses
             for i, mgr in enumerate(self.managers):
                 if mgr.pool is not None or mgr.cfg.socket is not None:
                     continue
@@ -69,6 +80,18 @@ class AsyncFlusher:
                     mgr.cfg = dataclasses.replace(mgr.cfg,
                                                   sockets=int(sockets))
                 mgr.home_socket = i % mgr.cfg.sockets
+        if cache_frames is not None or cache_admit_k is not None:
+            for mgr in self.managers:
+                if mgr.pool is not None:
+                    continue
+                kw = {}
+                if cache_frames is not None and mgr.cfg.cache_frames is None:
+                    kw["cache_frames"] = int(cache_frames)
+                if cache_admit_k is not None \
+                        and mgr.cfg.cache_admit_k == CheckpointConfig.cache_admit_k:
+                    kw["cache_admit_k"] = int(cache_admit_k)
+                if kw:
+                    mgr.cfg = dataclasses.replace(mgr.cfg, **kw)
         #: first shard's manager — kept for the single-shard call sites
         self.manager = self.managers[0]
         self._queues: List["queue.Queue"] = [

@@ -20,6 +20,7 @@ one pool see each other's traffic):
 
     kv = pool.kv("store", KVConfig())           # buffer pool + WAL + root
     train_wal = pool.wal("steps", capacity_steps=10_000)
+    cache = pool.cache(frames=64, admit_k=2)    # DRAM rung (repro.cache)
 
     pool2 = Pool.open("/dev/shm/app.pmem")      # after crash: same names,
     wal2  = pool2.log("wal")                    # recovered to the tail
@@ -392,6 +393,7 @@ class Pool:
         #: SSD device backing ``KIND_SSD`` regions (see :meth:`attach_ssd`)
         self.ssd_dev: Optional[SSD] = None
         self._placer = None
+        self._cache = None
 
     # ------------------------------------------------------------ basics
 
@@ -430,6 +432,38 @@ class Pool:
             from repro.io.placer import LanePlacer
             self._placer = LanePlacer(self.pmem)
         return self._placer
+
+    def cache(self, frames: Optional[int] = None,
+              admit_k: Optional[int] = None):
+        """The pool's DRAM :class:`~repro.cache.BufferManager` (cached,
+        like :meth:`placer`): one bounded frame pool fronting every page
+        region that registers with it
+        (:meth:`~repro.cache.BufferManager.attach_pages`) — the single
+        read/write path across DRAM frames, PMem slots and the SSD
+        spill tier. ``frames`` bounds the pool (0 disables caching;
+        reads/writes pass straight through to the tiers); ``admit_k``
+        is the k-touch SSD→PMem promotion threshold. Defaults on first
+        construction: 64 frames, ``admit_k=2``. The first call fixes
+        the configuration; a later call with a *different* explicit
+        value raises (consumers sharing the pool share the cache)."""
+        if self._cache is None:
+            from repro.cache import BufferManager
+            self._cache = BufferManager(
+                self,
+                frames=64 if frames is None else int(frames),
+                admit_k=2 if admit_k is None else int(admit_k))
+            return self._cache
+        if frames is not None and int(frames) != self._cache.capacity:
+            raise ValueError(
+                f"pool cache holds {self._cache.capacity} frames, caller "
+                f"asked for {frames} — the frame pool is fixed at first "
+                f"construction")
+        if admit_k is not None and int(admit_k) != self._cache.admit_k:
+            raise ValueError(
+                f"pool cache admits at k={self._cache.admit_k}, caller "
+                f"asked for {admit_k} — the admission policy is fixed at "
+                f"first construction")
+        return self._cache
 
     def regions(self) -> Dict[str, RegionRecord]:
         """Snapshot of every committed directory record, by name."""

@@ -23,6 +23,15 @@ budget evicts cold pages instead of failing allocation); a generational
 :class:`~repro.core.recovery.PersistentKV` drives both from its
 checkpoint path (``KVConfig(slot_budget=…, wal_lanes=…)``), which is
 what lets it run a lane-striped redo log indefinitely in bounded PMem.
+
+Above the scheduler sits the DRAM rung
+(:class:`~repro.cache.BufferManager`): it registers its k-touch counter
+as the scheduler's ``admission`` policy (on-access promotion then fires
+on the k-th touch, not the first), its pinned frames as the
+``pin_guard`` honored by :meth:`SpillScheduler.ensure_slots`, and is
+told about every slot eviction via ``on_page_evict``. On reopen the
+scheduler rebuilds its SSD extent free-list from the durable spill map,
+so holes a previous run tombstoned are reusable instead of leaked.
 """
 
 from repro.core.ssd import SSD, SSDStats  # noqa: F401

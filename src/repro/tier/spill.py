@@ -148,6 +148,23 @@ class SpillScheduler:
         #: test-only failpoint hook: called with a protocol point name;
         #: raising aborts mid-protocol exactly like a crash would
         self.failpoints = None
+        #: promotion admission policy: ``(owner, pid) -> bool`` consulted
+        #: before any on-access promotion. ``None`` = promote on first
+        #: access (the legacy behavior). A ``repro.cache.BufferManager``
+        #: registers its k-touch counter here, so every consumer —
+        #: including direct ``read_page(promote=True)`` callers —
+        #: inherits the same policy.
+        self.admission = None
+        #: mid-flush guard: ``(owner, pid) -> bool``; pages reported
+        #: pinned are not eviction victims in :meth:`ensure_slots`'s
+        #: normal pass (the buffer manager pins a frame for the duration
+        #: of its write-back epoch). The ``allow_protected`` retry may
+        #: still take them — same rule as the epoch's own batch.
+        self.pin_guard = None
+        #: post-eviction hook ``(owner, pid)`` called after *every* page
+        #: eviction, in addition to the per-owner ``on_evict`` callbacks
+        #: (the buffer manager resets its admission count there)
+        self.on_page_evict = None
 
         cl = pool.geometry.cache_line
         self._mhd = pool.raw(f"{name}.mhd", nbytes=2 * cl)
@@ -182,10 +199,17 @@ class SpillScheduler:
         # Extents whose page was promoted (tombstoned) or re-spilled are
         # reusable: no live map record references them, and the record
         # that superseded them was durably committed BEFORE they were
-        # freed, so reuse is crash-safe. Volatile (rebuilt-by-use); holes
-        # from a previous process run stay leaked until durable
-        # compaction exists (see ROADMAP).
+        # freed, so reuse is crash-safe. The list is volatile but
+        # RECONSTRUCTIBLE: the replayed map is the complete live set, so
+        # on (re)open every arena byte below the bump pointer that no
+        # live record covers is a hole a previous run leaked — free it.
+        # (Records pruned from the archive tail are only reclaimed this
+        # way once a compaction durably drops them from the map; until
+        # then the stale replayed record keeps the extent conservatively
+        # live. Durable *compaction* of the arenas themselves remains
+        # open — see ROADMAP.)
         self._free_extents: List[Tuple[int, int]] = []
+        self._rebuild_free_extents()
 
         # volatile: registered stores, LRU clock, queued generation spills
         self._stores: Dict[int, Tuple[str, object]] = {}
@@ -324,6 +348,35 @@ class SpillScheduler:
 
     # --------------------------------------------------------- SSD extents
 
+    def _rebuild_free_extents(self) -> None:
+        """Rebuild the extent free-list from the durable spill map: every
+        arena byte below the bump pointer not covered by a live map
+        record is reusable. Run at (re)open, this reclaims the holes a
+        previous process run tombstoned or superseded but could only
+        leak (the free list used to be rebuilt-by-use only) — a
+        long-lived tiered engine's SSD footprint now survives reopen
+        proportional to its live set plus the archive tail."""
+        live = sorted(
+            (off, length)
+            for off, length, *_ in list(self._page_map.values())
+            + list(self._gen_map.values()))
+        self._free_extents = []
+        li = 0
+        for a in sorted(self._arenas, key=lambda a: a.base):
+            end = min(a.base + a.length, self._bump)
+            pos = a.base
+            while li < len(live) and live[li][0] < end:
+                off, length = live[li]
+                if off + length <= pos:
+                    li += 1
+                    continue
+                if off > pos:
+                    self._free_extents.append((pos, off - pos))
+                pos = max(pos, off + length)
+                li += 1
+            if pos < end:
+                self._free_extents.append((pos, end - pos))
+
     def _alloc(self, nbytes: int) -> int:
         """Allocate an SSD extent: reuse a freed one when it fits, else
         bump-allocate, growing the arena set (a new ``KIND_SSD``
@@ -363,6 +416,12 @@ class SpillScheduler:
         override) or the store is empty."""
         owner = self._owner_of(store)
         protected: Set[int] = {int(p) for p in protect}
+        if self.pin_guard is not None:
+            # the buffer manager's mid-flush guard: a page whose DRAM
+            # frame is pinned (its image is inside a write-back epoch) is
+            # not a victim — same standing as the epoch's own batch
+            protected |= {pid for pid in store.table
+                          if self.pin_guard(owner, pid)}
         slack = int(self.low_watermark * store.layout.nslots)
         target = min(int(need) + slack, store.layout.nslots)
         evicted = 0
@@ -411,6 +470,21 @@ class SpillScheduler:
         cb = self._on_evict.get(owner)
         if cb is not None:
             cb(pid)
+        if self.on_page_evict is not None:
+            self.on_page_evict(owner, pid)
+
+    def residency(self, store, pid: int) -> Optional[str]:
+        """Which tier holds the page's current version under the
+        cross-tier max-pvn rule: ``"pmem"``, ``"ssd"``, or ``None`` when
+        the page has never been flushed. The buffer manager's fill path
+        routes on this."""
+        owner = self._owner_of(store)
+        pid = int(pid)
+        rec = self._page_map.get((owner, pid))
+        if pid in store.table and (rec is None
+                                   or store.table[pid][1] >= rec[2]):
+            return "pmem"
+        return "ssd" if rec is not None else None
 
     def read_page(self, store, pid: int, *, promote: bool = True
                   ) -> np.ndarray:
@@ -418,21 +492,27 @@ class SpillScheduler:
         their slot; spilled ones read from SSD (checksum-verified) and,
         with ``promote=True``, are re-installed in a PMem slot (evicting
         something colder if the store is full) with a version number
-        strictly above their SSD history, then tombstoned off the map."""
+        strictly above their SSD history, then tombstoned off the map.
+
+        When an :attr:`admission` policy is registered (the buffer
+        manager's k-touch counter), ``promote=True`` is a *request*: the
+        policy decides whether this access actually promotes — replacing
+        the legacy promote-on-first-access."""
         owner = self._owner_of(store)
         pid = int(pid)
         self.touch(pid, store)
-        rec = self._page_map.get((owner, pid))
-        if pid in store.table and (rec is None
-                                   or store.table[pid][1] >= rec[2]):
-            # cross-tier max-pvn rule: the PMem slot wins at equal pvn
-            # (the copies are identical then — the crash landed between
-            # the map record and the slot release); a *lower* PMem pvn is
-            # a stale durable header the SSD history superseded
+        if promote and self.admission is not None:
+            promote = bool(self.admission(owner, pid))
+        # cross-tier max-pvn rule (residency): the PMem slot wins at
+        # equal pvn (the copies are identical then — the crash landed
+        # between the map record and the slot release); a *lower* PMem
+        # pvn is a stale durable header the SSD history superseded
+        tier = self.residency(store, pid)
+        if tier == "pmem":
             return store.read_page(pid)
-        if rec is None:
+        if tier is None:
             raise KeyError(f"page {pid} of {owner!r} is in neither tier")
-        off, length, pvn, crc = rec
+        off, length, pvn, crc = self._page_map[(owner, pid)]
         data = self.ssd.pread(off, length)
         if (zlib.crc32(data.tobytes()) & 0xFFFFFFFF) != crc:
             raise RuntimeError(

@@ -1,0 +1,56 @@
+"""Buffer-manager crash property (hypothesis): DRAM caching is invisible
+to recovery.
+
+The cache's whole crash argument is that it adds no durability points:
+dirty frames reach PMem only through the flush queue's epoch drains and
+promotions fire on the k-th touch of the access stream regardless of
+frame residency — so the SAME op stream run with a warm cache and with
+``frames=0`` performs the SAME durable-op sequence, and a crash at the
+SAME protocol point with the SAME device rngs recovers IDENTICAL state.
+
+The property body lives in ``tests/corpus_runner.py``
+(``run_cache_crash``), shared with the deterministic regression corpus
+in ``test_crash_corpus.py``. Requires the ``test`` extra; deterministic
+cache tests live in ``test_cache.py``.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from corpus_runner import run_cache_crash
+
+# writes confined to pids 0-7 (an epoch's dirty set must fit the frame
+# budget — a clock-evicted dirty frame parks in the queue and shifts the
+# drain order a frameless run never sees); reads range over all 16 pids
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("w"), st.integers(0, 7), st.integers(0, 255)),
+        st.tuples(st.just("r"), st.integers(0, 15), st.just(0)),
+    ),
+    min_size=4, max_size=60,
+)
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    frames=st.integers(8, 16),
+    admit_k=st.integers(1, 4),
+    ops=_OPS,
+    epoch_every=st.integers(4, 8),
+    crash_step=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+    pmem_prob=st.sampled_from([0.0, 0.5, 1.0]),
+    ssd_keep=st.sampled_from([0.0, 0.5, 1.0]),
+)
+def test_cache_recovery_identical_to_frameless(
+        frames, admit_k, ops, epoch_every, crash_step, seed, pmem_prob,
+        ssd_keep):
+    """Warm cache vs frames=0: identical recovered state under an
+    arbitrary crash point, and each run individually correct."""
+    run_cache_crash(frames, admit_k, ops, epoch_every, crash_step, seed,
+                    pmem_prob, ssd_keep)

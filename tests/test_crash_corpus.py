@@ -16,6 +16,7 @@ should be appended here as a permanent regression.
 import pytest
 
 from corpus_runner import (
+    run_cache_crash,
     run_generation_spill_crash,
     run_kv_crash,
     run_multilog_crash,
@@ -146,3 +147,47 @@ PAGE_SPILL_CORPUS = [
 def test_page_spill_crash_corpus(nslots, wseed, n, step, seed, pprob, skeep):
     writes = [(k % 16, v % 256) for k, v in _ops(wseed, n, nkeys=16)]
     run_page_spill_crash(nslots, writes, step, seed, pprob, skeep)
+
+
+# ============================================ DRAM cache (buffer manager)
+# (frames, admit_k, ops-seed, n_ops, epoch_every, crash_step, seed,
+#  pmem_prob, ssd_keep) — the op stream mixes ~1/3 writes over pids 0-7
+# with reads over pids 0-15 (see _cache_ops), so dirty frames sit pending
+# write-back and k-touch promotions are in flight when the failpoint
+# fires; crash steps land on eviction points (ssd_written / ssd_flushed /
+# mapped) and on mid-promotion (promoted), plus no-crash full runs. Each
+# case runs TWICE — warm cache and frames=0 — and asserts identical
+# recovered state (see corpus_runner.run_cache_crash).
+
+def _cache_ops(seed: int, n: int):
+    """Deterministic read/write stream (same LCG discipline as _ops):
+    writes confined to 8 pids so an epoch's dirty set stays within the
+    frame budget; reads range over all 16 pids."""
+    x, out = seed & 0x7FFFFFFF, []
+    for _ in range(n):
+        x = (1103515245 * x + 12345) & 0x7FFFFFFF
+        if (x >> 3) % 3 == 0:
+            out.append(("w", (x >> 5) % 8, x % 256))
+        else:
+            out.append(("r", (x >> 5) % 16, 0))
+    return out
+
+
+CACHE_CORPUS = [
+    (8, 2, 21, 48, 6, 1, 3001, 0.5, 0.5),
+    (8, 2, 22, 48, 6, 2, 3002, 1.0, 0.0),
+    (6, 1, 23, 40, 5, 3, 3003, 0.0, 1.0),     # promote-on-first-access
+    (8, 3, 24, 60, 6, 4, 3004, 0.5, 1.0),     # crash lands mid-promotion
+    (6, 2, 25, 48, 8, 7, 3005, 1.0, 0.5),
+    (8, 4, 26, 64, 6, 11, 3006, 0.0, 0.0),    # high admission threshold
+    (8, 2, 27, 36, 6, 60, 3007, 0.5, 0.5),    # no crash: full clean run
+    (16, 1, 28, 48, 4, 5, 3008, 1.0, 1.0),    # every page fits a frame
+]
+
+
+@pytest.mark.parametrize(
+    "frames,admit_k,oseed,n,epoch,step,seed,pprob,skeep", CACHE_CORPUS)
+def test_cache_crash_corpus(frames, admit_k, oseed, n, epoch, step, seed,
+                            pprob, skeep):
+    run_cache_crash(frames, admit_k, _cache_ops(oseed, n), epoch, step,
+                    seed, pprob, skeep)

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs gate for CI: fail on (a) public symbols in ``repro.pool``,
-``repro.io`` and ``repro.tier`` missing docstrings, and (b) broken
-intra-repo links in README.md and docs/.
+``repro.io``, ``repro.tier`` and ``repro.cache`` missing docstrings,
+and (b) broken intra-repo links in README.md and docs/.
 
 Pure stdlib (ast + re): runs before any dependency is installed.
 
@@ -23,7 +23,8 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 
 #: modules whose public API must be fully docstringed
-DOC_SCOPES = ["src/repro/pool.py", "src/repro/io", "src/repro/tier"]
+DOC_SCOPES = ["src/repro/pool.py", "src/repro/io", "src/repro/tier",
+              "src/repro/cache"]
 
 #: markdown files whose intra-repo links must resolve
 LINK_ROOTS = ["README.md", "docs"]
