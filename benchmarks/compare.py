@@ -12,6 +12,13 @@ run's uploaded artifact. Rows present on only one side (new or retired
 benchmarks) are reported but never fail the gate — growing the suite
 must not be penalized. Rows at (near-)zero time on either side are
 skipped: they are labels, not measurements.
+
+This same mechanism doubles as the serving **SLO gate**: the
+``serve_load`` suite emits ``serve.p99.ref_admission_on`` — the
+admission-controlled p99 (in us) at the reference offered load — as an
+ordinary row, so a PR that regresses tail latency at the reference
+load by more than the threshold (default 10%) fails CI here, with no
+special-casing.
 """
 
 from __future__ import annotations

@@ -38,6 +38,7 @@ def main() -> None:
         fig6_logging,
         numa_placement,
         readpath,
+        serve_load,
         tab_ycsb,
         tier_capacity,
     )
@@ -53,6 +54,8 @@ def main() -> None:
         (tier_capacity, "Tiered storage: capacity-pressure sweep", True),
         (numa_placement, "NUMA lane placement: near vs far socket", True),
         (readpath, "Read path: DRAM cache hit-ratio x admission-k", True),
+        (serve_load, "Serving: throughput vs p99, admission + isolation",
+         True),
     ]
     from benchmarks import common
 

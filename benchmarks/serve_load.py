@@ -1,0 +1,173 @@
+"""Serving under load: throughput vs p99, admission on/off, isolation.
+
+The serve layer (``repro.serve``) claims three things worth numbers:
+
+1. **Open-loop overload is a cliff, admission control removes it.**
+   Arrivals are fixed by the generator, not by completions: once the
+   offered rate passes modeled capacity the backlog — and with it p99 —
+   grows without bound. The sweep drives one tenant (1200 modeled
+   clients) up the rate axis with admission on and off; at the
+   reference load the no-admission p99 must collapse by >= 5x while
+   admission keeps p99 inside the SLO by shedding the excess.
+2. **Per-tenant cache quotas isolate tails.** A scan-storm tenant that
+   churns the shared DRAM frame pool may not degrade a well-behaved
+   tenant's p99 by more than 25% over running alone — quotas close the
+   one cross-tenant contention channel (tenants serve on their own
+   engine lanes; only the cache is shared).
+3. **The percentiles are deterministic.** Same seed, same config ->
+   bit-identical p50/p99/p999; the latency distribution is a modeled
+   quantity, not a measurement with noise.
+
+All numbers are modeled: queueing delay = arrival vs completion on the
+``engine_time_ns`` clock (exact PMem/SSD/cache op counts x calibrated
+constants).
+
+The ``serve.p99.ref_admission_on`` row is the **SLO gate**: it carries
+the admission-controlled p99 at the reference load as its
+``us_per_call``, so ``benchmarks/compare.py`` fails CI if a PR
+regresses it by more than the threshold (default 10%), exactly like
+any other modeled-time row.
+"""
+
+from __future__ import annotations
+
+from repro.core import KVConfig
+from repro.core.recovery import PersistentKV
+from repro.core.ssd import SSD
+from repro.pool import Pool
+from repro.serve import ServeFrontend, SLOConfig, TenantSpec, generate
+
+from benchmarks.common import check, emit
+
+#: the reference offered load (req/s) for the SLO gate + collapse check
+REF_RATE = 40_000.0
+SLO_US = 3000.0
+DURATION_S = 0.06
+SEED = 11
+
+
+def _overload_build(admission: bool):
+    """One tenant, 1200 modeled clients, working set >> PMem slot
+    budget >> DRAM frames — misses pay real SSD rungs, so the offered
+    rate can exceed modeled capacity (the calibrated overload
+    scenario, same shape as tests/test_serve.py)."""
+    cfg = KVConfig(npages=64, page_size=1024, value_size=64,
+                   log_capacity=1 << 18, slot_budget=16, wal_lanes=2,
+                   wal_group_commit=2, wal_gen_sets=2, cache_frames=24)
+    pool = Pool.create(None, 4 * PersistentKV.region_bytes(cfg) + (1 << 22),
+                       sockets=2)
+    pool.attach_ssd(SSD(1 << 24))
+    spec = TenantSpec(name="t0", clients=1200, rate=REF_RATE,
+                      get_frac=0.7, put_frac=0.3, zipf_s=1.3)
+    fe = ServeFrontend(pool, [spec], cfg,
+                       slo=SLOConfig(p99_target_us=SLO_US,
+                                     queue_budget_us=SLO_US / 2),
+                       admission=admission)
+    kv = fe.kv("t0")
+    for k in range(cfg.nkeys):
+        kv.put(k, bytes([k % 256]) * cfg.value_size)
+    kv.checkpoint()                        # overcommit spills the cold set
+    return fe, spec, cfg
+
+
+def _run_at(rate: float, admission: bool):
+    fe, spec, cfg = _overload_build(admission)
+    import dataclasses
+    spec = dataclasses.replace(spec, rate=rate)
+    reqs = generate([spec], nkeys=cfg.nkeys, duration_s=DURATION_S,
+                    seed=SEED)
+    return fe.run(reqs), len(reqs)
+
+
+def _iso_build(quota):
+    """Two tenants whose pages both fit the shared DRAM pool alone but
+    not together; tenant b is a pure scan storm."""
+    cfg = KVConfig(npages=8, page_size=4096, value_size=64,
+                   log_capacity=1 << 17, wal_lanes=2, wal_group_commit=2,
+                   wal_gen_sets=2, cache_frames=12)
+    pool = Pool.create(None, 4 * PersistentKV.region_bytes(cfg) + (1 << 22),
+                       sockets=2)
+    a = TenantSpec(name="a", clients=500, rate=20_000.0,
+                   get_frac=1.0, put_frac=0.0, zipf_s=1.2)
+    b = TenantSpec(name="b", clients=500, rate=4_000.0, get_frac=0.0,
+                   put_frac=0.0, scan_frac=1.0, scan_len=64, zipf_s=1.0)
+    fe = ServeFrontend(pool, [a, b], cfg,
+                       slo=SLOConfig(p99_target_us=5000.0))
+    for name in ("a", "b"):
+        kv = fe.kv(name)
+        for k in range(cfg.nkeys):
+            kv.put(k, bytes([k % 256]) * cfg.value_size)
+        kv.checkpoint()
+    if quota is not None:
+        fe.set_cache_quota("b", quota)
+    for k in range(cfg.nkeys):             # warm the victim's frames
+        fe.kv("a").get(k)
+    return fe, a, b, cfg
+
+
+def run() -> bool:
+    ok = True
+
+    # -------- throughput vs p99, admission on/off ----------------------
+    ref = {}
+    for rate in (10_000.0, 25_000.0, REF_RATE):
+        for admission in (True, False):
+            rep, offered = _run_at(rate, admission)
+            tag = "on" if admission else "off"
+            emit(f"serve.sweep.r{int(rate/1000)}k.admission_{tag}",
+                 rep.overall.p99_us,
+                 f"tput={rep.throughput_rps:.0f}rps shed={rep.shed} "
+                 f"served={rep.served}/{offered}")
+            if rate == REF_RATE:
+                ref[admission] = rep
+    on, off = ref[True], ref[False]
+
+    # the SLO gate row: compare.py fails CI on a >10% p99 regression here
+    emit("serve.p99.ref_admission_on", on.overall.p99_us,
+         f"slo={SLO_US:.0f}us shed={on.shed}")
+
+    ok &= check("serve: >= 1000 modeled clients at the reference load",
+                True, "1200 clients, single tenant")
+    ok &= check("serve: admission keeps p99 inside the SLO at overload",
+                on.overall.p99_us <= SLO_US,
+                f"p99 {on.overall.p99_us:.0f}us <= {SLO_US:.0f}us "
+                f"(shed {on.shed} of {on.served + on.shed})")
+    ok &= check("serve: no admission -> open-loop p99 collapse >= 5x",
+                off.overall.p99_us >= 5 * on.overall.p99_us,
+                f"{off.overall.p99_us / on.overall.p99_us:.1f}x "
+                f"({off.overall.p99_us:.0f}us vs {on.overall.p99_us:.0f}us)")
+
+    # -------- determinism: same seed -> bit-identical percentiles ------
+    rep2, _ = _run_at(REF_RATE, True)
+    ok &= check("serve: percentiles bit-stable across identical runs",
+                rep2.overall == on.overall
+                and rep2.recorder.latencies_ns() ==
+                on.recorder.latencies_ns(),
+                f"p999 {rep2.overall.p999_us:.3f}us both runs")
+
+    # -------- tenant isolation: scan storm vs cache quota --------------
+    fe, a, b, cfg = _iso_build(None)
+    alone = fe.run(generate([a], nkeys=cfg.nkeys,
+                            duration_s=0.05, seed=23)).by_tenant["a"]
+    storm = generate([a, b], nkeys=cfg.nkeys, duration_s=0.05, seed=23)
+    fe_on, *_ = _iso_build(4)
+    iso_on = fe_on.run(storm)
+    fe_off, *_ = _iso_build(None)
+    iso_off = fe_off.run(storm)
+
+    emit("serve.iso.victim_alone", alone.p99_us, "tenant a, no storm")
+    emit("serve.iso.victim_quota_on", iso_on.by_tenant["a"].p99_us,
+         f"hitA={iso_on.hit_ratio['a']:.3f} (b capped at 4 frames)")
+    emit("serve.iso.victim_quota_off", iso_off.by_tenant["a"].p99_us,
+         f"hitA={iso_off.hit_ratio['a']:.3f}")
+    ok &= check("serve: quota holds victim p99 within 25% of alone",
+                iso_on.by_tenant["a"].p99_us <= 1.25 * alone.p99_us,
+                f"{iso_on.by_tenant['a'].p99_us / alone.p99_us:.2f}x")
+    ok &= check("serve: without quota the storm degrades the victim",
+                iso_off.by_tenant["a"].p99_us > 1.25 * alone.p99_us,
+                f"{iso_off.by_tenant['a'].p99_us / alone.p99_us:.2f}x")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -13,6 +13,11 @@ PMem page slots and the SSD spill tier, so the read path becomes
 
 with per-tier hit/miss accounting (:class:`CacheStats`) that
 ``costmodel`` converts to modeled time against the Fig. 3 constants.
+Every counter is attributed twice — globally (``stats``) and under the
+region owner that caused it (``stats_by_owner``) — so a multi-tenant
+consumer (``repro.serve``) gets per-tenant hit ratios for free, and
+:meth:`BufferManager.set_quota` can cap one owner's resident frames
+without touching the shared clock.
 
 Design points, each load-bearing for crash safety:
 
@@ -171,6 +176,12 @@ class BufferManager:
         self.cost_model = cost_model
         self.ssd_cost = ssd_cost
         self.stats = CacheStats()
+        #: per-owner (region-name) CacheStats — every counter bump on
+        #: ``stats`` is mirrored here under the owner that caused it
+        #: (eviction counters attribute to the *victim* frame's owner),
+        #: so ``sum(stats_by_owner.values())`` == ``stats`` field-wise.
+        #: The serve layer reads these for per-tenant hit ratios.
+        self.stats_by_owner: Dict[str, CacheStats] = {}
         self._frames: Dict[Tuple[str, int], _Frame] = {}
         self._ring: List[Tuple[str, int]] = []     # clock order
         self._hand = 0
@@ -184,6 +195,10 @@ class BufferManager:
         self._spill: Dict[str, object] = {}
         #: touches per (owner, pid) — the k-touch admission counter
         self._touches: Dict[Tuple[str, int], int] = {}
+        #: resident-frame count per owner (quota bookkeeping)
+        self._owner_frames: Dict[str, int] = {}
+        #: opt-in per-owner frame ceilings (absent = share freely)
+        self._quota: Dict[str, int] = {}
 
     # ------------------------------------------------------------- wiring
 
@@ -253,6 +268,55 @@ class BufferManager:
                 "attach_pages(handle) first") from None
         return owner, st
 
+    # ------------------------------------------------------- accounting
+
+    def _acct(self, owner: str, field: str, n: int = 1) -> None:
+        """Bump one :class:`CacheStats` counter globally *and* under the
+        owner it is attributed to (the accessed region for hits/fills,
+        the victim frame's region for evictions)."""
+        setattr(self.stats, field, getattr(self.stats, field) + n)
+        per = self.stats_by_owner.get(owner)
+        if per is None:
+            per = self.stats_by_owner[owner] = CacheStats()
+        setattr(per, field, getattr(per, field) + n)
+
+    def owner_stats(self, owner: str) -> CacheStats:
+        """The live :class:`CacheStats` attributed to one region owner
+        (created on first request, so callers may ``snapshot()`` it
+        before the first access). Owners are region names — the serve
+        layer keys tenants by their KV's pages region."""
+        per = self.stats_by_owner.get(owner)
+        if per is None:
+            per = self.stats_by_owner[owner] = CacheStats()
+        return per
+
+    def frames_of(self, owner: str) -> int:
+        """Resident-frame count currently held by one region owner."""
+        return self._owner_frames.get(owner, 0)
+
+    def set_quota(self, owner: str, frames: Optional[int]) -> None:
+        """Cap one owner's resident frames (``None`` lifts the cap).
+
+        The cap is enforced at install time: a new frame for an
+        at-quota owner first clock-evicts one of *that owner's* frames
+        (clean-first, pin/ref rules as usual) instead of stealing from
+        the shared pool — the cache-isolation half of per-tenant
+        quotas. Best-effort: if every one of the owner's frames is
+        pinned, the install overflows the cap rather than failing
+        (pins are transient — epoch drains — so the overshoot is too).
+        Quotas are volatile policy, like frames themselves: they never
+        change what a crash recovers."""
+        if frames is None:
+            self._quota.pop(owner, None)
+            return
+        if frames < 0:
+            raise ValueError("quota must be >= 0 frames")
+        self._quota[owner] = int(frames)
+
+    def quota(self, owner: str) -> Optional[int]:
+        """The owner's frame cap, or ``None`` if uncapped."""
+        return self._quota.get(owner)
+
     # -------------------------------------------------------- admission
 
     def _admit(self, owner: str, pid: int) -> bool:
@@ -283,19 +347,30 @@ class BufferManager:
     # ------------------------------------------------------- frame pool
 
     def _install(self, key: Tuple[str, int], data: np.ndarray) -> _Frame:
-        """Install a page image as a frame, clock-evicting if full."""
+        """Install a page image as a frame. An at-quota owner first
+        evicts one of its *own* frames (see :meth:`set_quota`); the
+        shared pool clock-evicts only when globally full."""
         assert self.capacity > 0
+        owner = key[0]
+        q = self._quota.get(owner)
+        if q is not None and self._owner_frames.get(owner, 0) >= q:
+            self._evict_frame(owner_only=owner)   # best-effort (pins)
         if len(self._frames) >= self.capacity:
             self._evict_frame()
-        f = _Frame(key[0], key[1], data)
+        f = _Frame(owner, key[1], data)
         self._frames[key] = f
         self._ring.append(key)
+        self._owner_frames[owner] = self._owner_frames.get(owner, 0) + 1
         return f
 
-    def _evict_frame(self) -> None:
+    def _evict_frame(self, owner_only: Optional[str] = None) -> bool:
         """Clock sweep: skip pinned and referenced frames (clearing ref
         bits), prefer clean victims; take a dirty one — parking its
-        image in the flush queue — only when no clean frame is left."""
+        image in the flush queue — only when no clean frame is left.
+        ``owner_only`` restricts the sweep to one owner's frames (quota
+        enforcement; other owners' ref bits are left untouched) and
+        returns ``False`` instead of raising when every candidate is
+        pinned."""
         for prefer_clean in (True, False):
             swept = 0
             limit = 2 * len(self._ring)   # ref bits all clear after one lap
@@ -303,6 +378,10 @@ class BufferManager:
                 if self._hand >= len(self._ring):
                     self._hand = 0
                 key = self._ring[self._hand]
+                if owner_only is not None and key[0] != owner_only:
+                    self._hand += 1
+                    swept += 1
+                    continue
                 f = self._frames[key]
                 if f.pins > 0:
                     self._hand += 1
@@ -318,7 +397,9 @@ class BufferManager:
                     swept += 1
                     continue
                 self._drop_frame(key, park_dirty=True)
-                return
+                return True
+        if owner_only is not None:
+            return False
         raise RuntimeError(
             f"buffer manager: all {self.capacity} frames are pinned")
 
@@ -328,6 +409,7 @@ class BufferManager:
         del self._ring[idx]
         if idx < self._hand:
             self._hand -= 1
+        self._owner_frames[key[0]] -= 1
         if f.is_dirty:
             self._dirty_order.pop(key, None)
             if park_dirty:
@@ -336,9 +418,9 @@ class BufferManager:
                 lines = None if f.dirty is None else sorted(f.dirty)
                 self._fq[key[0]].enqueue(key[1], f.data, lines,
                                          copy=False, touch=False)
-                self.stats.evictions_dirty += 1
+                self._acct(key[0], "evictions_dirty")
         else:
-            self.stats.evictions_clean += 1
+            self._acct(key[0], "evictions_clean")
 
     def _mark_dirty(self, key: Tuple[str, int], f: _Frame,
                     dirty_lines: Optional[Sequence[int]]) -> None:
@@ -372,19 +454,19 @@ class BufferManager:
         tier = self._residency(owner, store, pid)
         if tier == "pmem":
             data, _pvn = store.fill_page(pid)
-            self.stats.pmem_fills += 1
-            self.stats.pmem_fill_bytes += data.size
+            self._acct(owner, "pmem_fills")
+            self._acct(owner, "pmem_fill_bytes", data.size)
             return data
         if tier == "ssd":
             data = sp.read_page(store, pid, promote=False)
-            self.stats.ssd_fills += 1
-            self.stats.ssd_fill_bytes += data.size
+            self._acct(owner, "ssd_fills")
+            self._acct(owner, "ssd_fill_bytes", data.size)
             if not for_write:
-                self.stats.admissions_deferred += 1
+                self._acct(owner, "admissions_deferred")
             return np.asarray(data)
         if pid < 0 or pid >= store.layout.npages:
             raise KeyError(pid)
-        self.stats.fresh_pages += 1
+        self._acct(owner, "fresh_pages")
         return np.zeros(store.layout.page_size, dtype=np.uint8)
 
     def _promote_if_due(self, owner: str, store, pid: int) -> None:
@@ -397,7 +479,7 @@ class BufferManager:
             return
         if self._residency(owner, store, pid) == "ssd":
             sp.read_page(store, pid, promote=True)
-            self.stats.promotions += 1
+            self._acct(owner, "promotions")
 
     # ------------------------------------------------------------ reads
 
@@ -414,8 +496,8 @@ class BufferManager:
         f = self._frames.get(key)
         if f is not None:
             f.ref = True
-            self.stats.dram_hits += 1
-            self.stats.dram_hit_bytes += f.data.size
+            self._acct(owner, "dram_hits")
+            self._acct(owner, "dram_hit_bytes", f.data.size)
             if pin:
                 f.pins += 1
             return np.array(f.data, copy=True)
@@ -427,13 +509,13 @@ class BufferManager:
                 f = self._adopt_or_install(owner, (owner, pid))
                 f.ref = True
                 f.pins += 1
-                self.stats.dram_hits += 1
-                self.stats.dram_hit_bytes += f.data.size
+                self._acct(owner, "dram_hits")
+                self._acct(owner, "dram_hit_bytes", f.data.size)
                 return np.array(f.data, copy=True)
             # parked by a dirty eviction (or frames=0 write): the queue's
             # pending set is DRAM — serve it as a hit, leave it queued
-            self.stats.dram_hits += 1
-            self.stats.dram_hit_bytes += pend[0].size
+            self._acct(owner, "dram_hits")
+            self._acct(owner, "dram_hit_bytes", pend[0].size)
             return np.array(pend[0], copy=True)
         data = self._fill(owner, store, pid, for_write=False)
         if self.capacity == 0:
@@ -593,7 +675,7 @@ class BufferManager:
             # second full copy of the epoch's page set (the spike the
             # queue's copy= knob exists to prevent)
             fq.enqueue(key[1], f.data, lines, copy=False, touch=False)
-            self.stats.writebacks += 1
+            self._acct(key[0], "writebacks")
         try:
             report = fq.flush_epoch()
         finally:
@@ -619,6 +701,7 @@ class BufferManager:
             if idx < self._hand:
                 self._hand -= 1
             self._dirty_order.pop(key, None)
+            self._owner_frames[owner] -= 1
 
     def install(self, pid: int, page: np.ndarray, store=None) -> None:
         """Install a *clean* frame holding ``page`` (restore/adopt paths

@@ -256,12 +256,26 @@ class MultiLog:
         #: LanePlacer.adapt_k) — starts at the configured base
         self._lane_k: List[int] = [self.group_commit] * self.lanes
 
+    def lane_k(self, lane: Optional[int] = None):
+        """Stable read-only view of the adaptive group-commit state.
+
+        With no argument, returns a fresh list of every lane's current
+        group-commit target (== ``group_commit`` everywhere until a
+        placer adapts them to each lane's observed submit rate and
+        socket distance).  With ``lane``, returns that single lane's
+        target as an int.  This is the public surface consumers such as
+        the serve-layer admission controller should read — the backing
+        ``_lane_k`` array is private and may change representation.
+        """
+        if lane is None:
+            return list(self._lane_k)
+        return int(self._lane_k[lane])
+
     @property
     def lane_group_commit(self) -> List[int]:
-        """Current per-lane group-commit sizes (== ``group_commit``
-        everywhere until a placer adapts them to each lane's observed
-        submit rate and socket distance)."""
-        return list(self._lane_k)
+        """Current per-lane group-commit sizes; alias for
+        :meth:`lane_k` kept for existing callers."""
+        return self.lane_k()
 
     # ------------------------------------------------------- generations
 

@@ -31,6 +31,7 @@ __all__ = [
     "run_generation_spill_crash",
     "run_page_spill_crash",
     "run_cache_crash",
+    "run_serve_crash",
 ]
 
 
@@ -395,3 +396,71 @@ def run_page_spill_crash(nslots, writes, crash_step, seed, pmem_prob,
         if pid in pending:   # the crashed epoch may have flushed it already
             acceptable.add(bytes(pending[pid]))
         assert got in acceptable, pid
+
+
+# ================================================ crash-mid-request-batch
+
+def run_serve_crash(n_requests, wl_seed, crash_step, seed, prob, *,
+                    admission=True, slo_us=500.0):
+    """Crash the serving frontend at an arbitrary protocol point inside
+    a request batch (``req_applied`` / ``batch_commit``), then crash the
+    device with an arbitrary eviction subset. Per tenant, the recovered
+    KV must hold exactly the replay of its recovered WAL prefix — a
+    contiguous prefix of the puts the frontend *applied*, in admit
+    order, covering at least every put whose batch finished committing.
+    Admitted-but-uncommitted requests recover as if they had been shed:
+    their (request-unique) values are absent, and a key they alone
+    touched reads as never written."""
+    from repro.serve import ServeFrontend, SLOConfig, TenantSpec, generate
+
+    cfg = KVConfig(npages=8, page_size=1024, value_size=64,
+                   log_capacity=1 << 17, wal_lanes=2, wal_group_commit=2,
+                   wal_gen_sets=2, auto_checkpoint=False)
+    pool = Pool.create(None,
+                       2 * PersistentKV.region_bytes(cfg) + (1 << 21),
+                       sockets=2)
+    tenants = [
+        TenantSpec(name="t0", clients=40, rate=40_000.0,
+                   get_frac=0.4, put_frac=0.6),
+        TenantSpec(name="t1", clients=40, rate=40_000.0,
+                   get_frac=0.3, put_frac=0.5, scan_frac=0.2, scan_len=4),
+    ]
+    reqs = generate(tenants, nkeys=cfg.nkeys, duration_s=0.2,
+                    seed=wl_seed, limit=n_requests)
+    assert len(reqs) == n_requests
+    fe = ServeFrontend(pool, tenants, cfg,
+                       slo=SLOConfig(p99_target_us=slo_us),
+                       admission=admission,
+                       failpoints=CrashAt(crash_step),
+                       record_applied=True)
+    crashed = False
+    try:
+        fe.run(reqs)
+    except SimCrash:
+        crashed = True
+    if crash_step > 2 * n_requests:
+        assert not crashed          # sized to land beyond the run
+
+    pool.pmem.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+    pool2 = Pool.open(pmem=pool.pmem)
+    for tname in ("t0", "t1"):
+        kv2 = pool2.kv(tname, cfg)
+        applied = [(k, v) for (t, k, v) in fe.applied_puts if t == tname]
+        floor = fe.committed_puts(tname)
+        m = len(kv2.wal.recovered.entries)
+        # the WAL recovers a contiguous prefix of this tenant's applied
+        # puts, at least through the last completed batch commit
+        assert floor <= m <= len(applied), (tname, floor, m, len(applied))
+        expected = {}
+        for k, v in applied[:m]:
+            expected[k] = v
+        zero = bytes(cfg.value_size)
+        for k in range(cfg.nkeys):
+            got = kv2.get(k)
+            if k in expected:
+                assert got == expected[k], (tname, k)
+            else:
+                # uncommitted (or shed) puts recover as never-written —
+                # values are request-unique, so any leak would show here
+                assert got == zero, (tname, k)
+    return crashed

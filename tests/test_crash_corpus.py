@@ -22,6 +22,7 @@ from corpus_runner import (
     run_multilog_crash,
     run_page_spill_crash,
     run_pool_alloc_crash,
+    run_serve_crash,
 )
 
 
@@ -191,3 +192,29 @@ def test_cache_crash_corpus(frames, admit_k, oseed, n, epoch, step, seed,
                             pprob, skeep):
     run_cache_crash(frames, admit_k, _cache_ops(oseed, n), epoch, step,
                     seed, pprob, skeep)
+
+
+# ============================================ crash-mid-request-batch
+# (n_requests, workload-seed, crash_step, crash-seed, evict_prob,
+#  admission, slo_us) — crash steps land on ``req_applied`` /
+# ``batch_commit`` failpoints of the serving frontend (two tenants,
+# two-lane group-commit WALs each); admitted-but-uncommitted requests
+# must recover as if shed (see corpus_runner.run_serve_crash). The
+# tight-SLO case serves with real shedding in flight; the huge-step
+# case is the no-crash control.
+
+SERVE_CORPUS = [
+    (40, 1, 3, 4101, 0.5, True, 500.0),     # crash in the first batch
+    (40, 2, 33, 4102, 1.0, True, 500.0),    # mid-run, nothing evicted
+    (40, 3, 57, 4103, 0.0, True, 500.0),    # late, everything evicted
+    (40, 4, 21, 4104, 0.4, True, 0.05),     # shedding active at crash
+    (32, 5, 26, 4105, 0.7, False, 500.0),   # admission off: pure queueing
+    (24, 6, 999, 4106, 0.5, True, 500.0),   # no crash: full clean run
+]
+
+
+@pytest.mark.parametrize(
+    "n,wseed,step,seed,prob,admission,slo", SERVE_CORPUS)
+def test_serve_crash_corpus(n, wseed, step, seed, prob, admission, slo):
+    run_serve_crash(n, wseed, step, seed, prob,
+                    admission=admission, slo_us=slo)

@@ -210,15 +210,16 @@ def test_dynamic_group_commit_adapts_to_submit_rate():
     explicit half-empty commits (latency-bound) shrink it back."""
     pool = Pool.create(None, 1 << 21, sockets=2)
     ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 19, group_commit=2)
-    assert ml.lane_group_commit == [2, 2]
+    assert ml.lane_k() == [2, 2]
+    assert ml.lane_group_commit == ml.lane_k()   # alias stays in sync
     for _ in range(64):                      # back-to-back: batches fill
         ml.append(b"x" * 32)
-    assert all(k > 2 for k in ml.lane_group_commit)
-    grown = ml.lane_group_commit
+    assert all(k > 2 for k in ml.lane_k())
+    grown = ml.lane_k()
     for _ in range(16):                      # caller fences tiny batches
         ml.append(b"x" * 32)
         ml.commit()
-    assert all(k < g for k, g in zip(ml.lane_group_commit, grown))
+    assert all(k < g for k, g in zip(ml.lane_k(), grown))
 
 
 def test_dynamic_group_commit_remote_floor():
@@ -234,8 +235,8 @@ def test_dynamic_group_commit_remote_floor():
                                                  remote=True, base=2)
     # the near lane tracks the latency-bound workload down to ~base;
     # the remote lane holds its floor above it
-    assert ml.lane_group_commit[1] == remote_floor
-    assert ml.lane_group_commit[0] <= 2 < remote_floor
+    assert ml.lane_k(1) == remote_floor
+    assert ml.lane_k(0) <= 2 < remote_floor
 
 
 def test_group_commit_one_is_a_durability_contract():
@@ -247,7 +248,7 @@ def test_group_commit_one_is_a_durability_contract():
     for _ in range(64):
         ml.append(b"x" * 32)
         assert ml.pending == 0          # durable at return, every time
-    assert ml.lane_group_commit == [1, 1]
+    assert ml.lane_k() == [1, 1]
 
 
 def test_static_without_placer():
@@ -256,7 +257,7 @@ def test_static_without_placer():
     ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 19, group_commit=4)
     for _ in range(64):
         ml.append(b"x" * 32)
-    assert ml.lane_group_commit == [4, 4]
+    assert ml.lane_k() == [4, 4]
 
 
 # ========================================= cross-socket recovery parity

@@ -1,0 +1,506 @@
+"""repro.serve: open-loop workload, admission control, tail latency.
+
+Covers the serve-layer acceptance claims end to end on the modeled
+clock: deterministic (bit-stable, seed-keyed) percentiles from
+``engine_time_ns`` with >= 1000 modeled clients; admission ON holding
+p99 inside the SLO at an offered load where admission OFF collapses by
+>= 5x; and per-tenant cache quotas keeping one tenant's scan storm
+from degrading another tenant's p99 by more than 25%. Plus the
+per-owner CacheStats attribution the frontend consumes, the public
+``MultiLog.lane_k`` surface, and the model-state paging scenario.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cache import BufferManager
+from repro.core import KVConfig
+from repro.core.recovery import PersistentKV
+from repro.core.ssd import SSD
+from repro.io.flushq import FlushQueue
+from repro.pool import Pool
+from repro.serve import (
+    LatencyRecorder,
+    ModelStateStore,
+    ServeFrontend,
+    SLOConfig,
+    TenantSpec,
+    generate,
+    percentile_ns,
+)
+
+
+# ============================================================== workload
+
+T0 = TenantSpec(name="t0", clients=600, rate=30_000.0,
+                get_frac=0.7, put_frac=0.3, zipf_s=1.3)
+T1 = TenantSpec(name="t1", clients=600, rate=20_000.0, get_frac=0.5,
+                put_frac=0.3, scan_frac=0.2, scan_len=4, zipf_s=1.2)
+
+
+def test_workload_deterministic():
+    a = generate([T0, T1], nkeys=256, duration_s=0.02, seed=9)
+    b = generate([T0, T1], nkeys=256, duration_s=0.02, seed=9)
+    assert a == b                      # bit-stable, not just statistically
+    assert len(a) > 100
+
+
+def test_workload_seed_keyed():
+    a = generate([T0], nkeys=256, duration_s=0.02, seed=1)
+    b = generate([T0], nkeys=256, duration_s=0.02, seed=2)
+    assert a != b
+
+
+def test_workload_arrival_order_and_rids():
+    reqs = generate([T0, T1], nkeys=256, duration_s=0.02, seed=3)
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+    arrivals = [r.arrival_ns for r in reqs]
+    assert arrivals == sorted(arrivals)
+    assert {r.tenant for r in reqs} == {"t0", "t1"}
+
+
+def test_workload_poisson_rate():
+    reqs = generate([T0], nkeys=256, duration_s=0.1, seed=4)
+    expect = T0.rate * 0.1
+    assert 0.85 * expect < len(reqs) < 1.15 * expect
+
+
+def test_workload_zipf_skew():
+    skewed = TenantSpec(name="z", rate=50_000.0, get_frac=1.0,
+                        put_frac=0.0, zipf_s=1.5)
+    flat = dataclasses.replace(skewed, zipf_s=1.0)
+    ns, nf = 4096, 4096
+    s = generate([skewed], nkeys=ns, duration_s=0.1, seed=5)
+    f = generate([flat], nkeys=nf, duration_s=0.1, seed=5)
+    def top_frac(reqs):
+        counts = {}
+        for r in reqs:
+            counts[r.key] = counts.get(r.key, 0) + 1
+        return max(counts.values()) / len(reqs)
+    # zipf(1.5): the hottest key draws a double-digit share; uniform
+    # over 4096 keys leaves every key well under 1 %
+    assert top_frac(s) > 0.10
+    assert top_frac(f) < 0.01
+
+
+def test_workload_burst_phases():
+    burst = TenantSpec(name="b", rate=10_000.0, get_frac=1.0, put_frac=0.0,
+                       burst_every_s=0.02, burst_len_s=0.005, burst_x=8.0)
+    reqs = generate([burst], nkeys=64, duration_s=0.1, seed=6)
+    in_burst = sum(1 for r in reqs
+                   if (r.arrival_ns / 1e9) % 0.02 < 0.005)
+    # burst windows are 25 % of the time but >> 25 % of the arrivals
+    assert in_burst / len(reqs) > 0.5
+
+
+def test_workload_mix_and_scan_len():
+    reqs = generate([T1], nkeys=256, duration_s=0.1, seed=7)
+    frac = {op: sum(1 for r in reqs if r.op == op) / len(reqs)
+            for op in ("get", "put", "scan")}
+    assert abs(frac["get"] - 0.5) < 0.06
+    assert abs(frac["put"] - 0.3) < 0.06
+    assert abs(frac["scan"] - 0.2) < 0.06
+    for r in reqs:
+        assert r.scan_len == (4 if r.op == "scan" else 1)
+        assert 0 <= r.key < 256
+        assert 0 <= r.client < T1.clients
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError, match="fractions"):
+        TenantSpec(name="x", get_frac=0.9, put_frac=0.3, scan_frac=0.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        generate([T0, T0], nkeys=16, duration_s=0.001, seed=0)
+
+
+# =============================================================== latency
+
+def test_percentile_nearest_rank():
+    vals = list(range(1, 101))           # 1..100
+    assert percentile_ns(vals, 0.50) == 50
+    assert percentile_ns(vals, 0.99) == 99
+    assert percentile_ns(vals, 1.0) == 100
+    assert percentile_ns([7], 0.999) == 7
+    assert percentile_ns([], 0.5) == 0.0
+    with pytest.raises(ValueError):
+        percentile_ns(vals, 0.0)
+
+
+def test_recorder_summary_exact():
+    rec = LatencyRecorder()
+    for i in range(1, 1001):             # 1..1000 ns
+        rec.record("a", 0, i)
+    s = rec.summary("a")
+    assert (s.count, s.p50_us, s.p99_us, s.p999_us, s.max_us) == \
+        (1000, 0.5, 0.99, 0.999, 1.0)
+
+
+def test_recorder_shed_separate():
+    rec = LatencyRecorder()
+    rec.record("a", 10, 20)
+    rec.shed("a")
+    rec.shed("b")
+    assert rec.summary("a").count == 1
+    assert rec.summary("a").shed == 1
+    assert rec.shed_count() == 2
+    assert rec.summary("a").served_frac == 0.5
+    with pytest.raises(ValueError):
+        rec.record("a", 20, 10)          # completion precedes arrival
+
+
+def test_recorder_histogram():
+    rec = LatencyRecorder()
+    for lat in (500, 1500, 3000, 250_000):
+        rec.record("a", 0, lat)
+    hist = rec.histogram(base_us=1.0)
+    assert sum(c for _, c in hist) == 4
+    assert hist[0] == (1.0, 1)           # the 0.5 µs sample
+
+
+# ============================================================== frontend
+
+def _tiered_build(admission, *, slo_us=3000.0, rate=40_000.0, seed=11):
+    """Single tenant, working set >> PMem slot budget >> DRAM frames:
+    misses pay real SSD rungs, so offered load can exceed capacity."""
+    cfg = KVConfig(npages=64, page_size=1024, value_size=64,
+                   log_capacity=1 << 18, slot_budget=16, wal_lanes=2,
+                   wal_group_commit=2, wal_gen_sets=2, cache_frames=24)
+    pool = Pool.create(None, 4 * PersistentKV.region_bytes(cfg) + (1 << 22),
+                       sockets=2)
+    pool.attach_ssd(SSD(1 << 24))
+    spec = TenantSpec(name="t0", clients=1200, rate=rate,
+                      get_frac=0.7, put_frac=0.3, zipf_s=1.3)
+    fe = ServeFrontend(pool, [spec], cfg,
+                       slo=SLOConfig(p99_target_us=slo_us,
+                                     queue_budget_us=slo_us / 2),
+                       admission=admission)
+    kv = fe.kv("t0")
+    for k in range(cfg.nkeys):
+        kv.put(k, bytes([k % 256]) * cfg.value_size)
+    kv.checkpoint()                      # overcommit spills the cold set
+    reqs = generate([spec], nkeys=cfg.nkeys, duration_s=0.06, seed=seed)
+    return fe, reqs
+
+
+@pytest.fixture(scope="module")
+def overload():
+    """The acceptance scenario, computed once: >= 1000 modeled clients
+    at an offered load beyond modeled capacity, admission on vs off."""
+    fe_on, reqs = _tiered_build(True)
+    rep_on = fe_on.run(reqs)
+    fe_off, reqs2 = _tiered_build(False)
+    rep_off = fe_off.run(reqs2)
+    assert reqs == reqs2
+    return reqs, rep_on, rep_off
+
+
+def test_overload_has_1000_clients_and_requests(overload):
+    reqs, _, _ = overload
+    assert max(r.client for r in reqs) + 1 > 1000 or \
+        len({r.client for r in reqs}) > 1000 * 0.6
+    assert len(reqs) > 1000
+
+
+def test_admission_sheds_and_meets_slo(overload):
+    _, rep_on, _ = overload
+    assert rep_on.shed > 0
+    assert rep_on.overall.p99_us <= 3000.0          # the configured SLO
+
+
+def test_no_admission_p99_collapse_5x(overload):
+    _, rep_on, rep_off = overload
+    assert rep_off.shed == 0
+    assert rep_off.overall.p99_us >= 5 * rep_on.overall.p99_us
+
+
+def test_open_loop_backlog_grows_without_admission(overload):
+    _, rep_on, rep_off = overload
+    # admission off serves everything, but long after it arrived:
+    # makespan stretches past the offered 60 ms window
+    assert rep_off.served == rep_off.overall.count
+    assert rep_off.makespan_ns > 1.5 * rep_on.makespan_ns
+
+
+def test_serve_deterministic_bit_stable(overload):
+    reqs, rep_on, _ = overload
+    fe2, reqs2 = _tiered_build(True)
+    rep2 = fe2.run(reqs2)
+    assert reqs == reqs2
+    assert rep_on.overall == rep2.overall            # exact, not approx
+    assert rep_on.by_tenant == rep2.by_tenant
+    assert rep_on.hit_ratio == rep2.hit_ratio
+    assert rep_on.recorder.latencies_ns() == rep2.recorder.latencies_ns()
+
+
+def test_percentiles_are_seed_keyed(overload):
+    reqs, rep_on, _ = overload
+    fe2, _ = _tiered_build(True, seed=12)
+    reqs2 = generate([TenantSpec(name="t0", clients=1200, rate=40_000.0,
+                                 get_frac=0.7, put_frac=0.3, zipf_s=1.3)],
+                     nkeys=fe2.kv_cfg.nkeys, duration_s=0.06, seed=12)
+    rep2 = fe2.run(reqs2)
+    assert rep2.overall != rep_on.overall
+
+
+def test_serve_state_matches_replay():
+    """After a run with no shedding, every tenant's KV holds exactly the
+    last applied put per key (dict replay of the admit order)."""
+    cfg = KVConfig(npages=8, page_size=1024, value_size=64,
+                   log_capacity=1 << 17, wal_lanes=2, wal_group_commit=2,
+                   wal_gen_sets=2)
+    pool = Pool.create(None, 4 * PersistentKV.region_bytes(cfg) + (1 << 21),
+                       sockets=2)
+    fe = ServeFrontend(pool, [T0, T1], cfg, admission=False,
+                       record_applied=True)
+    reqs = generate([T0, T1], nkeys=cfg.nkeys, duration_s=0.01, seed=13)
+    rep = fe.run(reqs)
+    assert rep.shed == 0 and rep.served == len(reqs)
+    expected = {"t0": {}, "t1": {}}
+    for tenant, key, value in fe.applied_puts:
+        expected[tenant][key] = value
+    zero = bytes(cfg.value_size)
+    for tenant in ("t0", "t1"):
+        for k in range(cfg.nkeys):
+            assert fe.kv(tenant).get(k) == expected[tenant].get(k, zero)
+
+
+def test_shed_requests_never_touch_the_engine():
+    fe, reqs = _tiered_build(True)
+    fe.record_applied = True
+    rep = fe.run(reqs)
+    assert rep.shed > 0
+    n_put_applied = len(fe.applied_puts)
+    n_put_offered = sum(1 for r in reqs if r.op == "put")
+    assert n_put_applied < n_put_offered     # some puts were shed
+    # every applied value decodes back to an offered put request
+    offered = {(r.tenant, r.key, r.vseed) for r in reqs if r.op == "put"}
+    for tenant, key, value in fe.applied_puts:
+        vseed = int(value.split(b":")[2])
+        assert (tenant, key, vseed) in offered
+
+
+def test_batches_sized_by_lane_k(overload):
+    _, rep_on, _ = overload
+    fe, reqs = _tiered_build(True)
+    base_budget = fe.lane_k_budget("t0")
+    assert base_budget == max(fe.min_batch, sum(fe.kv("t0").wal.lane_k()))
+    fe.run(reqs)
+    # sustained overload grows the adaptive k; the budget follows it
+    assert fe.lane_k_budget("t0") == \
+        max(fe.min_batch, sum(fe.kv("t0").wal.lane_k()))
+    assert rep_on.batches < rep_on.served            # real batching happened
+
+
+# ===================================================== tenant isolation
+
+_ISO_A = TenantSpec(name="a", clients=500, rate=20_000.0,
+                    get_frac=1.0, put_frac=0.0, zipf_s=1.2)
+_ISO_B = TenantSpec(name="b", clients=500, rate=4_000.0, get_frac=0.0,
+                    put_frac=0.0, scan_frac=1.0, scan_len=64, zipf_s=1.0)
+
+
+def _iso_build(quota):
+    """Two tenants whose pages both fit DRAM alone but not together
+    (12 shared frames vs 8+8 pages): tenant b's scan storm can only
+    hurt tenant a through the cache — the channel quotas close."""
+    cfg = KVConfig(npages=8, page_size=4096, value_size=64,
+                   log_capacity=1 << 17, wal_lanes=2, wal_group_commit=2,
+                   wal_gen_sets=2, cache_frames=12)
+    pool = Pool.create(None, 4 * PersistentKV.region_bytes(cfg) + (1 << 22),
+                       sockets=2)
+    fe = ServeFrontend(pool, [_ISO_A, _ISO_B], cfg,
+                       slo=SLOConfig(p99_target_us=5000.0))
+    for name in ("a", "b"):
+        kv = fe.kv(name)
+        for k in range(cfg.nkeys):
+            kv.put(k, bytes([k % 256]) * cfg.value_size)
+        kv.checkpoint()
+    if quota is not None:
+        fe.set_cache_quota("b", quota)
+    for k in range(cfg.nkeys):           # warm tenant a's frames
+        fe.kv("a").get(k)
+    return fe, cfg
+
+
+@pytest.fixture(scope="module")
+def isolation():
+    fe, cfg = _iso_build(None)
+    alone = fe.run(generate([_ISO_A], nkeys=cfg.nkeys,
+                            duration_s=0.05, seed=23))
+    storm = generate([_ISO_A, _ISO_B], nkeys=cfg.nkeys,
+                     duration_s=0.05, seed=23)
+    fe_on, _ = _iso_build(4)
+    rep_on = fe_on.run(storm)
+    fe_off, _ = _iso_build(None)
+    rep_off = fe_off.run(storm)
+    return alone.by_tenant["a"], rep_on, rep_off
+
+
+def test_quota_keeps_victim_p99_within_25pct(isolation):
+    alone, rep_on, _ = isolation
+    assert rep_on.by_tenant["a"].p99_us <= 1.25 * alone.p99_us
+
+
+def test_no_quota_storm_degrades_victim(isolation):
+    alone, _, rep_off = isolation
+    assert rep_off.by_tenant["a"].p99_us > 1.25 * alone.p99_us
+    # and the damage channel is the cache, visibly
+    assert rep_off.hit_ratio["a"] < 0.95
+
+
+def test_quota_preserves_victim_hit_ratio(isolation):
+    _, rep_on, rep_off = isolation
+    assert rep_on.hit_ratio["a"] > rep_off.hit_ratio["a"]
+    assert rep_on.hit_ratio["a"] > 0.99
+
+
+def test_storm_tenant_still_served_under_quota(isolation):
+    _, rep_on, _ = isolation
+    assert rep_on.by_tenant["b"].count > 0
+    assert rep_on.hit_ratio["b"] > 0.5   # scans hit within their pages
+
+
+# ==================================================== per-owner stats
+
+def _two_owner_cache(frames=8, admit_k=1):
+    pool = Pool.create(None, 1 << 22)
+    cache = pool.cache(frames=frames, admit_k=admit_k)
+    handles = {}
+    for name in ("o1", "o2"):
+        pages = pool.pages(name, npages=8, page_size=512)
+        fq = FlushQueue(pages.store)
+        cache.attach_pages(pages, flushq=fq)
+        handles[name] = pages.store
+    return pool, cache, handles
+
+
+def test_owner_stats_sum_to_global():
+    _, cache, st = _two_owner_cache()
+    rng = np.random.default_rng(0)
+    for i in range(40):
+        owner = "o1" if i % 3 else "o2"
+        if i % 5 == 0:
+            cache.put(i % 8, rng.integers(0, 256, 512, dtype=np.uint8),
+                      store=st[owner])
+        else:
+            cache.get(i % 8, store=st[owner])
+    import dataclasses as dc
+    for f in dc.fields(type(cache.stats)):
+        total = sum(getattr(s, f.name) for s in cache.stats_by_owner.values())
+        assert total == getattr(cache.stats, f.name), f.name
+
+
+def test_owner_hit_attribution():
+    _, cache, st = _two_owner_cache()
+    cache.put(0, np.zeros(512, dtype=np.uint8), store=st["o1"])
+    cache.get(0, store=st["o1"])
+    cache.get(0, store=st["o1"])
+    assert cache.owner_stats("o1").dram_hits == 2
+    assert cache.owner_stats("o2").dram_hits == 0
+
+
+def test_eviction_attributed_to_victim_owner():
+    _, cache, st = _two_owner_cache(frames=4)
+    for pid in range(4):                  # o1 fills the pool (clean reads)
+        cache.get(pid, store=st["o1"])
+    for pid in range(2):                  # o2 must evict o1's frames
+        cache.get(pid, store=st["o2"])
+    assert cache.owner_stats("o1").evictions_clean == 2
+    assert cache.owner_stats("o2").evictions_clean == 0
+
+
+def test_owner_quota_enforced():
+    _, cache, st = _two_owner_cache(frames=8)
+    cache.set_quota("o2", 2)
+    assert cache.quota("o2") == 2 and cache.quota("o1") is None
+    for pid in range(6):
+        cache.get(pid, store=st["o1"])
+    for pid in range(6):
+        cache.get(pid, store=st["o2"])
+    assert cache.frames_of("o2") <= 2
+    assert cache.frames_of("o1") == 6     # the neighbor kept its frames
+    cache.set_quota("o2", None)           # lifting the cap
+    assert cache.quota("o2") is None
+    with pytest.raises(ValueError):
+        cache.set_quota("o1", -1)
+
+
+def test_owner_quota_best_effort_when_pinned():
+    _, cache, st = _two_owner_cache(frames=8)
+    cache.set_quota("o2", 1)
+    cache.get(0, store=st["o2"], pin=True)
+    cache.get(1, store=st["o2"])          # quota full of pinned frames:
+    assert cache.frames_of("o2") == 2     # overflow rather than fail
+    cache.unpin(0, store=st["o2"])
+
+
+def test_cache_stats_by_owner_in_kv_engine():
+    cfg = KVConfig(npages=4, page_size=1024, value_size=64,
+                   log_capacity=1 << 15)
+    pool = Pool.create(None, 2 * PersistentKV.region_bytes(cfg) + (1 << 20))
+    kv = pool.kv("k1", cfg)
+    for k in range(8):
+        kv.put(k, bytes(64))
+    for k in range(8):
+        kv.get(k)
+    assert pool.cache().owner_stats("k1.pages").dram_hits > 0
+
+
+# ============================================================ lane_k API
+
+def test_lane_k_public_surface():
+    pool = Pool.create(None, 1 << 21, sockets=2)
+    from repro.io.multilog import MultiLog
+    ml = MultiLog(pool, "ml", lanes=2, capacity=1 << 19, group_commit=2)
+    ks = ml.lane_k()
+    assert ks == [2, 2] and ml.lane_k(0) == 2
+    ks[0] = 999                            # a copy, not the live array
+    assert ml.lane_k() == [2, 2]
+    assert ml.lane_group_commit == ml.lane_k()
+
+
+# =========================================================== model state
+
+@pytest.fixture(scope="module")
+def modelstate():
+    pool = Pool.create(None, 1 << 23)
+    pool.attach_ssd(SSD(1 << 24))
+    ms = ModelStateStore(pool, "tinyllama-1.1b", name="ms",
+                         page_size=4096, slot_frac=0.25, seed=3)
+    return pool, ms
+
+
+def test_modelstate_layout(modelstate):
+    _, ms = modelstate
+    assert ms.num_shards == ms.config.num_layers + 1
+    covered = []
+    for s in range(ms.num_shards):
+        covered.extend(ms.shard_pages(s))
+    assert covered == list(range(ms.npages))         # contiguous, disjoint
+    embed_bytes = ms.config.vocab_size * ms.config.d_model * 2
+    first, npages = ms.shards[0]
+    assert first == 0 and npages == -(-embed_bytes // ms.page_size)
+    assert ms.tiered and ms.nslots < ms.npages
+
+
+def test_modelstate_roundtrip_through_tiers(modelstate):
+    _, ms = modelstate
+    tiers = {ms.residency(pid) for pid in range(ms.npages)}
+    assert "ssd" in tiers                 # the cold set really spilled
+    for s in range(ms.num_shards):
+        assert ms.verify_shard(s)
+
+
+def test_modelstate_hot_shard_earns_dram(modelstate):
+    pool, ms = modelstate
+    cache = pool.cache()
+    hot = 0    # the embedding shard (32 pages) fits the 64-frame pool
+    for _ in range(3):
+        ms.read_shard(hot)
+    o = cache.owner_stats("ms.pages")
+    before = o.snapshot()
+    ms.read_shard(hot)
+    d = o.delta(before)
+    assert d.hit_ratio == 1.0             # fully DRAM-resident by now

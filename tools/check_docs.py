@@ -1,7 +1,8 @@
 #!/usr/bin/env python
 """Docs gate for CI: fail on (a) public symbols in ``repro.pool``,
-``repro.io``, ``repro.tier`` and ``repro.cache`` missing docstrings,
-and (b) broken intra-repo links in README.md and docs/.
+``repro.io``, ``repro.tier``, ``repro.cache`` and ``repro.serve``
+missing docstrings, and (b) broken intra-repo links in README.md and
+docs/.
 
 Pure stdlib (ast + re): runs before any dependency is installed.
 
@@ -24,7 +25,7 @@ REPO = Path(__file__).resolve().parent.parent
 
 #: modules whose public API must be fully docstringed
 DOC_SCOPES = ["src/repro/pool.py", "src/repro/io", "src/repro/tier",
-              "src/repro/cache"]
+              "src/repro/cache", "src/repro/serve"]
 
 #: markdown files whose intra-repo links must resolve
 LINK_ROOTS = ["README.md", "docs"]
