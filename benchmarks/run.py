@@ -36,6 +36,7 @@ def main() -> None:
         fig4_persist_latency,
         fig5_pageflush,
         fig6_logging,
+        kernels_bench,
         numa_placement,
         readpath,
         serve_load,
@@ -56,6 +57,10 @@ def main() -> None:
         (readpath, "Read path: DRAM cache hit-ratio x admission-k", True),
         (serve_load, "Serving: throughput vs p99, admission + isolation",
          True),
+        # in smoke so CI's BENCH_results.json carries the kernels.fused.*
+        # rows for compare.py's cross-PR regression gate
+        (kernels_bench, "Kernels: fused flush pipeline vs staged chain",
+         True),
     ]
     from benchmarks import common
 
@@ -68,17 +73,14 @@ def main() -> None:
         ok &= mod.run()
 
     if not args.smoke:
+        from benchmarks import roofline
+        print("\n### Roofline: fused flush pipeline (modeled HBM traffic)")
+        common.set_suite("roofline")
+        roofline.flush_pipeline()
         art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
         if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):
             print("\n### Roofline (from dry-run artifacts)")
-            common.set_suite("roofline")
-            from benchmarks import roofline
             roofline.run(art)
-
-        print("\n### kernel sanity (interpret mode vs oracle)")
-        common.set_suite("kernels")
-        from benchmarks import kernels_bench
-        ok &= kernels_bench.run()
 
     if args.json:
         common.write_json(args.json)

@@ -204,6 +204,15 @@ class PMemCostModel:
     wc_defeat_lanes: int = 4
     wc_defeat_stall_ns: float = 320.0
 
+    # HBM read bandwidth of the accelerator the save-path scan kernels run
+    # on (TPU v5e HBM ≈819 GB/s — the same constant benchmarks/roofline.py
+    # uses). The fused flush_pack kernel reads each live byte exactly once
+    # per save; the staged dirty_diff → popcnt → delta_pack chain reads
+    # them up to three times (Wu arXiv:2005.07658: redundant flush passes
+    # dominate; Izraelevitz arXiv:1903.05714: read bandwidth is the scarce
+    # axis). ``engine_time_ns(scan_read_bytes=…)`` charges this term.
+    hbm_read_bw_gbps: float = 819.0
+
     # NUMA remote-access multipliers (Izraelevitz et al., "Basic
     # Performance Measurements of the Intel Optane DC Persistent Memory
     # Module", arXiv:1903.05714): far-socket PMem access crosses the UPI
@@ -353,6 +362,14 @@ class PMemCostModel:
                                          cache.pmem_fill_bytes)
                 + ssd.read_time_ns(cache.ssd_fills, cache.ssd_fill_bytes))
 
+    def scan_read_ns(self, nbytes: int) -> float:
+        """Device time of streaming ``nbytes`` from HBM at the
+        accelerator's read bandwidth — the save-path scan term. One fused
+        ``flush_pack`` pass charges each live byte once; the staged chain
+        charges the same bytes per pass, which is how ``engine_time_ns``
+        credits the fused kernel's win."""
+        return nbytes / self.hbm_read_bw_gbps   # B / (GB/s) = ns
+
     # ------------------------------------------------- lane-partitioned time
 
     def engine_time_ns(
@@ -364,6 +381,7 @@ class PMemCostModel:
         pattern: AccessPattern = AccessPattern.SEQUENTIAL,
         burst: bool = False,
         cache=None,
+        scan_read_bytes: int = 0,
     ) -> float:
         """Wall-clock of a lane-partitioned engine (repro.io).
 
@@ -393,11 +411,19 @@ class PMemCostModel:
         remainder (tier *fills* are not added here — they already appear
         in the PMem/SSD op counts this method and
         :meth:`SSDCostModel.time_ns` charge).
+
+        ``scan_read_bytes`` is the save-path scan's HBM traffic (device
+        bytes the flush kernels read to find/pack/checksum dirty blocks),
+        charged at :meth:`scan_read_ns` and added to the serialized
+        remainder — the epoch's lanes cannot start on a page before its
+        scan has classified it.
         """
         dram_ns = 0.0
         if cache is not None:
             dram_ns = self.dram.read_time_ns(cache.dram_hits,
                                              cache.dram_hit_bytes)
+        if scan_read_bytes:
+            dram_ns += self.scan_read_ns(scan_read_bytes)
         lanes = set()
         for field in (stats.lane_barriers, stats.lane_lines,
                       stats.lane_blocks_written, stats.lane_partial_blocks):

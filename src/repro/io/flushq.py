@@ -65,6 +65,13 @@ class EpochReport:
     #: modeled SSD time of those evictions (drained concurrently with the
     #: PMem lane work in a real system; reported separately, not summed)
     spill_ns: float = 0.0
+    #: device (HBM) bytes the save-path scan kernels read to classify and
+    #: pack this epoch's pages (noted via :meth:`FlushQueue.note_scan`;
+    #: one live-buffer read with the fused flush_pack kernel, up to three
+    #: with the staged chain)
+    scan_read_bytes: int = 0
+    #: modeled device time of that scan traffic (included in modeled_ns)
+    scan_ns: float = 0.0
 
 
 class FlushQueue:
@@ -101,6 +108,8 @@ class FlushQueue:
         self.placer = placer
         # pid -> (latest page image, dirty line set | None=all dirty)
         self._pending: Dict[int, Tuple[np.ndarray, Optional[Set[int]]]] = {}
+        # HBM bytes the save-path scan read for the pages now pending
+        self._scan_bytes = 0
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -132,6 +141,15 @@ class FlushQueue:
             dirty = set(int(i) for i in dirty_lines) if dirty_lines is not None else None
         self._pending[int(pid)] = (page, dirty)
 
+    def note_scan(self, nbytes: int) -> None:
+        """Record device (HBM) bytes the save-path scan kernels read on
+        behalf of pages being enqueued for the next epoch. The next
+        :meth:`flush_epoch` folds the accumulated traffic into its
+        modeled time (``engine_time_ns(scan_read_bytes=…)``) and reports
+        it on :class:`EpochReport` — the fused flush_pack pass notes each
+        live buffer once, the staged chain notes every extra pass."""
+        self._scan_bytes += int(nbytes)
+
     # ------------------------------------------------- buffer-manager hooks
 
     def pending_image(self, pid: int
@@ -157,8 +175,12 @@ class FlushQueue:
         Returns exact counts for the epoch plus the modeled wall-clock
         under ``engine_time_ns`` (burst curve — page flushes are large
         sequential writes, Fig. 5(b))."""
+        scan_bytes, self._scan_bytes = self._scan_bytes, 0
+        scan_ns = self.cost_model.scan_read_ns(scan_bytes)
         if not self._pending:
-            return EpochReport()
+            # an all-clean save still paid the scan that proved it clean
+            return EpochReport(scan_read_bytes=scan_bytes, scan_ns=scan_ns,
+                               modeled_ns=scan_ns)
         items = list(self._pending.items())
         self._pending.clear()
         active = max(1, min(self.lanes, len(items)))
@@ -220,6 +242,9 @@ class FlushQueue:
         delta = pm.stats.delta(before)
         rep.barriers = delta.barriers
         rep.blocks_written = delta.blocks_written
+        rep.scan_read_bytes = scan_bytes
+        rep.scan_ns = scan_ns
         rep.modeled_ns = self.cost_model.engine_time_ns(
-            delta, active_lanes=active, burst=True)
+            delta, active_lanes=active, burst=True,
+            scan_read_bytes=scan_bytes)
         return rep

@@ -4,6 +4,9 @@ The paper optimizes I/O; the on-device work of its adapted primitives is:
   - dirty_diff       — block-granular dirty bitmap (µLog dirty tracking)
   - popcnt_checksum  — Zero-log validity word (popcount, §3.3.1)
   - delta_pack       — gather/scatter dirty blocks (µLog content/replay)
+  - flush_scan       — fused dirty bitmap + popcounts (two facts, one read)
+  - flush_pack       — the whole save pass fused: diff+pack+checksum plus
+                       on-device prefix-sum compaction, one HBM read
 
 Each subpackage has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 dispatch wrapper: Pallas on TPU, ref elsewhere), ref.py (pure-jnp oracle).
@@ -11,7 +14,8 @@ Kernels are validated in interpret mode against the oracles with
 hypothesis-driven shape/dtype sweeps (tests/test_kernels.py).
 """
 
-from repro.kernels.delta_pack import apply_delta, pack_delta  # noqa: F401
+from repro.kernels.delta_pack import apply_delta, pack_delta, pack_dirty  # noqa: F401
 from repro.kernels.dirty_diff import dirty_blocks  # noqa: F401
-from repro.kernels.popcnt_checksum import popcount_blocks, popcount_checksum  # noqa: F401
+from repro.kernels.flush_pack import FlushPack, flush_pack  # noqa: F401
 from repro.kernels.flush_scan import flush_scan  # noqa: F401
+from repro.kernels.popcnt_checksum import popcount_blocks, popcount_checksum  # noqa: F401

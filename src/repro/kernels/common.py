@@ -55,8 +55,27 @@ def as_blocks(flat: jax.Array, block_bytes: int = TPU_TILE) -> Tuple[jax.Array, 
 
 
 def from_blocks(blocked: jax.Array, orig_len: int) -> jax.Array:
+    """Inverse of :func:`as_blocks`: flatten and drop the zero padding."""
     return blocked.reshape(-1)[:orig_len]
 
 
 def pad_blocks_to_tile(nblocks: int, tile: int = TILE_BLOCKS) -> int:
+    """Round a block count up to the kernel grid's tile multiple."""
     return -(-nblocks // tile) * tile
+
+
+def blocked_for_tiles(flat: jax.Array, block_bytes: int = TPU_TILE,
+                      tile: int = TILE_BLOCKS) -> Tuple[jax.Array, int, int]:
+    """``as_blocks`` plus tile-multiple padding along the block axis.
+
+    Returns ``(blocked, nblocks, orig_len)`` where ``blocked`` has a
+    first dimension padded up to a multiple of ``tile`` (extra blocks are
+    zero, hence clean) and ``nblocks`` is the count BEFORE tile padding —
+    slice kernel outputs back to ``[:nblocks]``.
+    """
+    blocked, orig_len = as_blocks(flat, block_bytes)
+    nblocks = blocked.shape[0]
+    padded = pad_blocks_to_tile(nblocks, tile)
+    if padded != nblocks:
+        blocked = jnp.pad(blocked, ((0, padded - nblocks), (0, 0), (0, 0)))
+    return blocked, nblocks, orig_len

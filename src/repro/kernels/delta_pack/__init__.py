@@ -1,1 +1,8 @@
-from repro.kernels.delta_pack.ops import apply_delta, pack_delta  # noqa: F401
+"""Delta pack/apply kernels: gather dirty blocks into a dense delta and
+scatter a delta back onto a base buffer (the µLog replay primitive)."""
+
+from repro.kernels.delta_pack.ops import (  # noqa: F401
+    apply_delta,
+    pack_delta,
+    pack_dirty,
+)

@@ -42,6 +42,30 @@ def pack_delta(
     return delta_pack_blocked(blocked, idx, interpret=jax.default_backend() != "tpu")
 
 
+def pack_dirty(
+    buf: jax.Array,
+    flags: jax.Array,
+    *,
+    block_bytes: int = TPU_TILE,
+    impl: Impl = "auto",
+) -> Tuple[jax.Array, jax.Array, int]:
+    """Pack the dirty blocks of a flat buffer given its dirty bitmap.
+
+    The index build is the shared on-device prefix-sum compaction from
+    ``flush_pack`` (no host ``np.flatnonzero``): only the scalar dirty
+    count crosses to the host, to size the gather. Returns
+    ``(delta (k, rows, 128), idx (k,) int32, k)`` — the same compaction
+    story the fused kernel uses, so staged and fused paths agree
+    bit-for-bit on packing order (ascending block id).
+    """
+    from repro.kernels.flush_pack.ref import compact_index
+
+    index, total = compact_index(flags)
+    k = int(total)
+    idx = index[:k]
+    return pack_delta(buf, idx, block_bytes=block_bytes, impl=impl), idx, k
+
+
 def apply_delta(
     buf: jax.Array,
     delta: jax.Array,

@@ -7,8 +7,10 @@ import jax.numpy as jnp
 
 
 def delta_pack_blocked_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather the blocks named by ``idx`` into a dense (k, rows, 128) delta."""
     return jnp.take(src, idx, axis=0)
 
 
 def delta_apply_blocked_ref(base: jax.Array, upd: jax.Array, idx: jax.Array) -> jax.Array:
+    """Scatter delta blocks ``upd`` onto ``base`` at block ids ``idx``."""
     return base.at[idx].set(upd)

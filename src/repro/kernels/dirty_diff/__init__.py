@@ -1,1 +1,4 @@
+"""Dirty-diff kernel: per-block changed/clean flags of a live buffer vs
+its last-flushed snapshot."""
+
 from repro.kernels.dirty_diff.ops import dirty_blocks  # noqa: F401

@@ -1,0 +1,17 @@
+"""Fused flush pipeline: one-pass diff + pack + checksum (µLog in one read).
+
+``flush_pack`` is the checkpoint hot path's single device pass: it reads a
+parameter buffer's current bytes from HBM exactly once (and the snapshot
+once) and emits everything the save epoch needs — dirty flags, per-block
+popcount checksums, an exclusive prefix sum of the dirty counts, the dirty
+block ids, and the packed delta blocks already compacted at their
+prefix-sum offsets. It replaces the staged dirty_diff → delta_pack →
+popcnt_checksum chain (three reads of the live buffer) and the host-side
+``np.flatnonzero`` compaction.
+"""
+
+from repro.kernels.flush_pack.ops import FlushPack, flush_pack  # noqa: F401
+from repro.kernels.flush_pack.ref import (  # noqa: F401
+    compact_index,
+    exclusive_prefix_sum,
+)

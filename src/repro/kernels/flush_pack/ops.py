@@ -1,0 +1,79 @@
+"""Public op: fused one-pass diff + pack + checksum of a flat buffer.
+
+``flush_pack`` is the save path's single device pass: everything the
+checkpoint epoch needs about a buffer — dirty flags, popcount checksums,
+prefix-sum offsets, packed delta blocks, dirty block ids — from one read
+of the live bytes. Replaces the staged flush_scan → host flatnonzero →
+delta_pack chain.
+"""
+
+from __future__ import annotations
+
+from typing import Literal, NamedTuple
+
+import jax
+
+from repro.core.blocks import TPU_TILE
+from repro.kernels.common import as_blocks, blocked_for_tiles
+from repro.kernels.flush_pack.kernel import flush_pack_blocked
+from repro.kernels.flush_pack.ref import flush_pack_blocked_ref
+
+Impl = Literal["auto", "pallas", "fused", "ref"]
+
+#: the oracle is jitted so the off-TPU fallback is still ONE dispatch per
+#: buffer (diff+popcount+compaction+pack fused by XLA) — the save path's
+#: staged chain pays three dispatches and a host round-trip per buffer
+_ref_jit = jax.jit(flush_pack_blocked_ref)
+
+
+class FlushPack(NamedTuple):
+    """Everything one fused device pass yields about a buffer.
+
+    ``flags``: (nblocks,) int32 dirty bitmap vs the snapshot.
+    ``counts``: (nblocks,) uint32 per-block popcounts of the live bytes.
+    ``offsets``: (nblocks,) int32 exclusive prefix sum of ``flags`` —
+    block b's slot in ``packed`` when dirty.
+    ``packed``: (nblocks, rows, 128) live-dtype; the first ``total``
+    blocks are the dirty blocks in ascending block order (tail zeroed).
+    ``index``: (nblocks,) int32; first ``total`` entries are the dirty
+    block ids (tail zeroed).
+    ``total``: python int dirty-block count (the only host sync).
+    """
+
+    flags: jax.Array
+    counts: jax.Array
+    offsets: jax.Array
+    packed: jax.Array
+    index: jax.Array
+    total: int
+
+
+def flush_pack(cur: jax.Array, snap: jax.Array, *,
+               block_bytes: int = TPU_TILE,
+               impl: Impl = "auto") -> FlushPack:
+    """Fused diff+pack+checksum of flat ``cur`` vs ``snap`` → FlushPack.
+
+    ``impl="fused"`` is an alias for ``"pallas"`` (the fused kernel IS
+    the pallas path); ``"auto"`` picks pallas on TPU and the jnp oracle
+    elsewhere, like every other kernel in this package.
+    """
+    if cur.shape != snap.shape or cur.dtype != snap.dtype:
+        raise ValueError("cur and snap must match in shape and dtype")
+    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+        cur_b, _ = as_blocks(cur, block_bytes)
+        snap_b, _ = as_blocks(snap, block_bytes)
+        nblocks = cur_b.shape[0]
+        flags, counts, off, packed, index = _ref_jit(cur_b, snap_b)
+    else:
+        interpret = jax.default_backend() != "tpu"
+        cur_b, nblocks, _ = blocked_for_tiles(cur, block_bytes)
+        snap_b, _, _ = blocked_for_tiles(snap, block_bytes)
+        flags, counts, off, packed, index = flush_pack_blocked(
+            cur_b, snap_b, interpret=interpret)
+        flags = flags[:nblocks]
+        counts = counts[:nblocks]
+        off = off[:nblocks]
+        packed = packed[:nblocks]
+        index = index[:nblocks]
+    total = int(off[-1] + flags[-1]) if nblocks else 0
+    return FlushPack(flags, counts, off, packed, index, total)

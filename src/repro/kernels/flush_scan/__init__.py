@@ -1,1 +1,5 @@
+"""Fused flush scan: dirty flags + popcount checksums in one pass
+(subsumed by :mod:`repro.kernels.flush_pack` on the save path; kept as
+the two-output primitive and for A/B comparison)."""
+
 from repro.kernels.flush_scan.ops import flush_scan  # noqa: F401

@@ -9,6 +9,7 @@ _UINT_FOR = {4: jnp.uint32, 2: jnp.uint16, 1: jnp.uint8}
 
 
 def flush_scan_blocked_ref(cur: jax.Array, snap: jax.Array):
+    """(nblocks, rows, 128) ×2 → per-block (dirty flags, popcounts)."""
     dirty = jnp.any(cur != snap, axis=(1, 2)).astype(jnp.int32)
     udt = _UINT_FOR[cur.dtype.itemsize]
     bits = jax.lax.population_count(jax.lax.bitcast_convert_type(cur, udt))

@@ -1,3 +1,7 @@
+"""Popcount checksum kernels: the Zero-log validity argument at page
+scale (per-block bit counts; buffer checksum = sum + 1 so zero = never
+written)."""
+
 from repro.kernels.popcnt_checksum.ops import (  # noqa: F401
     popcount_blocks,
     popcount_checksum,

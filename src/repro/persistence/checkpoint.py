@@ -22,12 +22,16 @@ Consistency story (the non-trivial part):
   barrier, and recovery picks the last manifest whose pages still verify
   (slot pvn match + popcount checksum — the same validity argument as
   Zero logging, at page scale).
-* Dirtiness is *computed*, not intercepted: the Pallas ``dirty_diff``
-  kernel compares live parameters against the last-flushed snapshot at
-  4 KiB TPU-tile granularity; ``HybridPolicy`` (threads-aware, §3.2.3)
-  picks CoW vs µLog per page. A delta onto the shadow slot must cover the
-  change since v-1, so the dirty set is the union of the last two saves'
-  dirty blocks.
+* Dirtiness is *computed*, not intercepted: the fused ``flush_pack``
+  Pallas kernel compares live parameters against the last-flushed
+  snapshot at 4 KiB TPU-tile granularity and, in the SAME device pass,
+  emits the per-block popcount checksums and the prefix-sum-compacted
+  dirty block ids — the live bytes cross HBM once per save
+  (``kernel_impl="staged"`` keeps the pre-fusion dirty_diff → popcnt →
+  compaction chain for A/B benchmarking and crash-parity checks).
+  ``HybridPolicy`` (threads-aware, §3.2.3) picks CoW vs µLog per page.
+  A delta onto the shadow slot must cover the change since v-1, so the
+  dirty set is the union of the last two saves' dirty blocks.
 * The last-flushed snapshot lives in the pool's DRAM buffer manager
   (``pool.cache``), one clean frame per page, written through
   :meth:`~repro.cache.BufferManager.writeback` — the save epoch leaves
@@ -55,7 +59,7 @@ from repro.core.persist import AccessPattern, FlushKind
 from repro.core.pmem import PMem, PMemStats
 from repro.pool import LogHandle, PagesHandle, Pool
 from repro.kernels.dirty_diff import dirty_blocks
-from repro.kernels.flush_scan import flush_scan
+from repro.kernels.flush_pack import compact_index, flush_pack
 from repro.kernels.popcnt_checksum import popcount_blocks
 
 __all__ = ["CheckpointConfig", "CheckpointManager", "SaveReport"]
@@ -75,7 +79,12 @@ class CheckpointConfig:
     manifest_capacity: int = 1 << 20
     delta: bool = True               # enable µLog shadow-slot deltas
     threads: int = 1                 # writer threads (G4: bounded; feeds policy)
-    kernel_impl: str = "auto"        # dirty_diff dispatch
+    #: save-scan kernel dispatch: "auto"/"fused"/"pallas"/"ref" run the
+    #: one-pass flush_pack kernel (auto = pallas on TPU, jnp oracle off);
+    #: "staged" keeps the pre-fusion dirty_diff → popcnt → compaction
+    #: chain (three live-buffer reads) for A/B benchmarks and the crash
+    #: corpus' byte-parity case
+    kernel_impl: str = "auto"
     extra_slots: int = 4             # beyond the 2-per-page steady state
     #: PMem page-slot budget for the shard. None = classic sizing (two
     #: slots per page: current + shadow). A smaller budget makes the
@@ -128,6 +137,11 @@ class SaveReport:
     pages_spilled: int = 0
     #: modeled SSD time of those evictions (overlappable with PMem work)
     spill_ns: float = 0.0
+    #: device (HBM) bytes the save's scan kernels read — one live-buffer
+    #: pass with the fused flush_pack kernel, up to three when staged
+    scan_read_bytes: int = 0
+    #: modeled device time of that scan traffic (included in modeled_ns)
+    scan_ns: float = 0.0
 
     @property
     def bytes_device(self) -> int:
@@ -275,25 +289,48 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- save
 
+    def _note_scan(self, nbytes: int) -> None:
+        """Attribute save-scan HBM traffic to the epoch being built (the
+        flush queue folds it into the epoch's modeled time)."""
+        if self._flushq is not None:
+            self._flushq.note_scan(nbytes)
+
     def _dirty_lines_per_page(
         self, name: str, cur: jax.Array | np.ndarray,
     ) -> Tuple[Optional[Dict[int, set]], np.ndarray, np.ndarray]:
-        """One fused device pass (flush_scan kernel): dirty (page → line
+        """One fused device pass (flush_pack kernel): dirty (page → line
         set) vs the snapshot (None = everything dirty) AND per-block
-        popcounts for the page checksums."""
+        popcounts for the page checksums. The dirty block ids come out of
+        the kernel's on-device prefix-sum compaction — no host-side
+        ``flatnonzero`` over the flag vector. ``kernel_impl="staged"``
+        runs the pre-fusion chain instead (dirty_diff + popcnt + the
+        shared compaction), reading the live buffer thrice."""
         buf = self._leaf_bytes(cur)
         snap = self._leaf_snapshot(name)
         cl = self.cfg.geometry.cache_line
+        impl = self.cfg.kernel_impl
+        jbuf = jax.numpy.asarray(buf)
         if snap is None or not self.cfg.delta:
             counts = np.asarray(popcount_blocks(
-                jax.numpy.asarray(buf), block_bytes=cl,
-                impl=self.cfg.kernel_impl))
+                jbuf, block_bytes=cl,
+                impl="auto" if impl in ("fused", "staged") else impl))
+            self._note_scan(buf.size)   # full rewrite: one pass, no diff
             return None, buf, counts
-        flags, counts = flush_scan(
-            jax.numpy.asarray(buf), jax.numpy.asarray(snap),
-            block_bytes=cl, impl=self.cfg.kernel_impl)
-        flags, counts = np.asarray(flags), np.asarray(counts)
-        dirty_idx = np.flatnonzero(flags)
+        jsnap = jax.numpy.asarray(snap)
+        if impl == "staged":
+            flags = dirty_blocks(jbuf, jsnap, block_bytes=cl)
+            counts = np.asarray(popcount_blocks(jbuf, block_bytes=cl))
+            index, total = compact_index(flags)
+            k = int(total)
+            dirty_idx = np.asarray(index[:k])
+            # dirty_diff read the live bytes, popcnt read them again, and
+            # the delta gather re-reads each dirty block
+            self._note_scan(2 * buf.size + k * cl)
+        else:
+            fp = flush_pack(jbuf, jsnap, block_bytes=cl, impl=impl)
+            dirty_idx = np.asarray(fp.index[: fp.total])
+            counts = np.asarray(fp.counts)
+            self._note_scan(buf.size)   # the whole point: one pass
         per_page: Dict[int, set] = {}
         lpp = self.cfg.blocks_per_page
         for b in dirty_idx.tolist():
@@ -370,6 +407,8 @@ class CheckpointManager:
         report.active_lanes = max(1, epoch.active_lanes)
         report.pages_spilled = epoch.pages_spilled
         report.spill_ns = epoch.spill_ns
+        report.scan_read_bytes = epoch.scan_read_bytes
+        report.scan_ns = epoch.scan_ns
         self._prev_dirty.update(self._epoch_prev_dirty)
 
         # Pass 3 — manifest records from the post-epoch page table. A
@@ -392,7 +431,8 @@ class CheckpointManager:
         report.blocks_written = delta.blocks_written
         report.modeled_ns = COST_MODEL.engine_time_ns(
             delta, active_lanes=report.active_lanes, kind=FlushKind.NT,
-            pattern=AccessPattern.SEQUENTIAL, burst=True)
+            pattern=AccessPattern.SEQUENTIAL, burst=True,
+            scan_read_bytes=report.scan_read_bytes)
         return report
 
     def _page_record(self, pid: int) -> List[int]:

@@ -34,7 +34,11 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.persistence.checkpoint import CheckpointManager, SaveReport
+from repro.persistence.checkpoint import (
+    CheckpointConfig,
+    CheckpointManager,
+    SaveReport,
+)
 
 __all__ = ["AsyncFlusher"]
 
@@ -47,7 +51,8 @@ class AsyncFlusher:
                  *, max_pending: int = 2,
                  sockets: Optional[int] = None,
                  cache_frames: Optional[int] = None,
-                 cache_admit_k: Optional[int] = None) -> None:
+                 cache_admit_k: Optional[int] = None,
+                 kernel_impl: Optional[str] = None) -> None:
         """``sockets`` (when > 1) interleaves the shards' home sockets
         round-robin across the host's NUMA sockets, so each shard's
         worker lane flushes near-socket instead of funneling every
@@ -65,7 +70,12 @@ class AsyncFlusher:
         state size — per-shard snapshot frames are the shard pool's
         :class:`~repro.cache.BufferManager` (``pool.cache``), not an
         unbounded host-RAM mirror. Shards whose pools are already built
-        or whose configs pin their own values keep them."""
+        or whose configs pin their own values keep them.
+
+        ``kernel_impl`` propagates a save-scan dispatch (e.g. ``"fused"``
+        or ``"staged"``) into every shard config still at ``"auto"`` —
+        each worker lane's saves then run the one-pass flush_pack kernel
+        (or the staged A/B chain) per shard."""
         if isinstance(managers, CheckpointManager):
             managers = [managers]
         self.managers: List[CheckpointManager] = list(managers)
@@ -92,6 +102,11 @@ class AsyncFlusher:
                     kw["cache_admit_k"] = int(cache_admit_k)
                 if kw:
                     mgr.cfg = dataclasses.replace(mgr.cfg, **kw)
+        if kernel_impl is not None:
+            for mgr in self.managers:
+                if mgr.pool is None and mgr.cfg.kernel_impl == "auto":
+                    mgr.cfg = dataclasses.replace(mgr.cfg,
+                                                  kernel_impl=str(kernel_impl))
         #: first shard's manager — kept for the single-shard call sites
         self.manager = self.managers[0]
         self._queues: List["queue.Queue"] = [

@@ -12,6 +12,8 @@ stays a regression test forever, and the two suites can never assert
 different things.
 """
 
+import os
+
 import numpy as np
 
 from repro.cache import BufferManager
@@ -31,6 +33,7 @@ __all__ = [
     "run_generation_spill_crash",
     "run_page_spill_crash",
     "run_cache_crash",
+    "run_ckpt_fused_crash",
     "run_serve_crash",
 ]
 
@@ -396,6 +399,74 @@ def run_page_spill_crash(nslots, writes, crash_step, seed, pmem_prob,
         if pid in pending:   # the crashed epoch may have flushed it already
             acceptable.add(bytes(pending[pid]))
         assert got in acceptable, pid
+
+
+# ============================================= crash-mid-fused-flush (ckpt)
+
+def run_ckpt_fused_crash(tmpdir, sparse_positions, crash_step, seed, prob):
+    """Kill a checkpoint save's epoch drain after ``crash_step - 1`` page
+    flushes, then crash the device with an arbitrary eviction subset —
+    once with the fused ``flush_pack`` scan (``kernel_impl="fused"``) and
+    once with the staged dirty_diff → popcnt → compaction chain
+    (``"staged"``). Both runs must recover the SAME committed step with
+    byte-identical state: the fused kernel changes how dirtiness is
+    computed, never what the shadow-slot protocol makes durable.
+
+    The save sequence is full → full rewrite → sparse → sparse, so the
+    armed save (the second sparse one) takes the µLog shadow-slot path
+    and the crash lands mid-delta, not just mid-CoW."""
+    from repro.persistence import CheckpointConfig, CheckpointManager
+
+    def one_run(impl):
+        path = os.path.join(tmpdir, "ckpt-%s.pmem" % impl)
+        # 128 KiB pages (32 dirty lines each): the geometry where the
+        # hybrid policy actually has a µLog region below the crossover
+        cfg = CheckpointConfig(page_size=128 * 1024,
+                               manifest_capacity=1 << 16, kernel_impl=impl)
+        m = CheckpointManager(path, cfg)
+        base = np.random.default_rng(7).standard_normal(131072)
+        s = {"w": base.astype(np.float32)}           # 512 KiB → 4 pages
+        m.save(0, s)
+        s = {"w": s["w"] + 1.0}                      # full rewrite
+        m.save(1, s)
+        s = {"w": s["w"].copy()}                     # sparse #1 (CoW: the
+        for p in sparse_positions:                   # delta unions with the
+            s["w"][p] += 1.0                         # full-rewrite dirt)
+        m.save(2, s)
+        committed = {k: v.copy() for k, v in s.items()}
+        s = {"w": s["w"].copy()}                     # sparse #2 → µLog
+        for p in sparse_positions:
+            s["w"][p] += 1.0
+        fp = CrashAt(crash_step)
+        orig = m._flushq._flush_fn
+        def failing(pid, page, dirty, active):
+            fp("ckpt_page_flush")
+            return orig(pid, page, dirty, active)
+        m._flushq._flush_fn = failing
+        crashed = False
+        try:
+            rep = m.save(3, s)
+        except SimCrash:
+            crashed = True
+        m.pmem.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+
+        m2 = CheckpointManager(path, cfg)
+        step, got = m2.restore()
+        if crashed:
+            # uncommitted save: exactly the last committed cut comes back
+            assert step == 2
+            want = committed
+        else:
+            assert step == 3 and rep.pages_mulog >= 1
+            want = s
+        for k in want:
+            assert np.array_equal(got[k], want[k]), (impl, step, k)
+        return crashed, step, {k: got[k].tobytes() for k in sorted(got)}
+
+    fused = one_run("fused")
+    staged = one_run("staged")
+    assert fused == staged, \
+        "recovery diverged between the fused and staged scan pipelines"
 
 
 # ================================================ crash-mid-request-batch

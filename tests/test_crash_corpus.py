@@ -17,6 +17,7 @@ import pytest
 
 from corpus_runner import (
     run_cache_crash,
+    run_ckpt_fused_crash,
     run_generation_spill_crash,
     run_kv_crash,
     run_multilog_crash,
@@ -192,6 +193,29 @@ def test_cache_crash_corpus(frames, admit_k, oseed, n, epoch, step, seed,
                             pprob, skeep):
     run_cache_crash(frames, admit_k, _cache_ops(oseed, n), epoch, step,
                     seed, pprob, skeep)
+
+
+# ============================================ crash-mid-fused-flush (ckpt)
+# (sparse-positions, crash_step, crash-seed, evict_prob) — arms a
+# failpoint on the checkpoint flush queue so the µLog save's epoch drain
+# dies after crash_step-1 page flushes, then runs the SAME scenario under
+# kernel_impl="fused" and "staged" and asserts byte-identical recovery
+# (see corpus_runner.run_ckpt_fused_crash). Positions index a 512 KiB
+# float32 leaf split into 128 KiB pages (32768 elements each); the huge
+# step is the no-crash control.
+
+CKPT_FUSED_CORPUS = [
+    ((0, 40000), 1, 5001, 0.5),      # die on the first page flush
+    ((0, 40000), 2, 5002, 1.0),      # second flush, every line evicted
+    ((13000,), 1, 5003, 0.0),        # single dirty page, nothing evicted
+    ((5, 70000, 131071), 2, 5004, 0.4),   # three pages dirty
+    ((0, 40000), 60, 5005, 0.5),     # no crash: clean fused µLog save
+]
+
+
+@pytest.mark.parametrize("positions,step,seed,prob", CKPT_FUSED_CORPUS)
+def test_ckpt_fused_crash_corpus(tmp_path, positions, step, seed, prob):
+    run_ckpt_fused_crash(str(tmp_path), positions, step, seed, prob)
 
 
 # ============================================ crash-mid-request-batch

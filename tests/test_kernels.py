@@ -18,6 +18,8 @@ from repro.kernels.dirty_diff.ops import dirty_blocks
 from repro.kernels.popcnt_checksum.kernel import popcnt_blocked
 from repro.kernels.popcnt_checksum.ref import popcnt_blocked_ref
 from repro.kernels.popcnt_checksum.ops import popcount_blocks, popcount_checksum
+from repro.kernels.delta_pack.ops import pack_dirty
+from repro.kernels.flush_pack import compact_index, flush_pack
 
 DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8, jnp.uint32]
 
@@ -120,3 +122,130 @@ def test_flush_scan_consistent_with_separate_kernels(dtype):
     c2 = popcount_blocks(cur, impl="ref")
     np.testing.assert_array_equal(np.asarray(d), np.asarray(d2))
     np.testing.assert_array_equal(np.asarray(c), np.asarray(c2))
+
+
+# ----------------------------------------------------------- flush_pack
+
+def _dirtied(rng, snap, positions):
+    """Copy of ``snap`` with new random values at ``positions``."""
+    cur = np.asarray(snap).copy()
+    for p in positions:
+        cur[p] = np.asarray(rand(rng, (1,), snap.dtype))[0]
+    return jnp.asarray(cur)
+
+
+def _assert_flush_pack_equal(a, b):
+    assert a.total == b.total
+    for f in ("flags", "counts", "offsets", "packed", "index"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flush_pack_ref_vs_pallas_dtypes(dtype):
+    """The fused Pallas kernel (interpret mode) matches the jnp oracle on
+    every FlushPack field, for every checkpointable dtype."""
+    rng = np.random.default_rng(7)
+    snap = rand(rng, (9000,), dtype)
+    cur = _dirtied(rng, snap, [0, 4097, 8000])
+    _assert_flush_pack_equal(flush_pack(cur, snap, impl="pallas"),
+                             flush_pack(cur, snap, impl="ref"))
+
+
+@pytest.mark.parametrize("block_bytes", [4096, 8192, 16384])
+@pytest.mark.parametrize("n", [4096, 5000, 13000])
+def test_flush_pack_block_sizes_and_ragged_tails(block_bytes, n):
+    """Parity across block sizes and buffer lengths that are not block
+    (or grid-tile) multiples — the zero-padded tail must never read as
+    dirty or perturb the prefix-sum offsets."""
+    rng = np.random.default_rng(block_bytes + n)
+    snap = rand(rng, (n,), jnp.float32)
+    cur = _dirtied(rng, snap, [1, n // 2, n - 1])
+    fp_pal = flush_pack(cur, snap, block_bytes=block_bytes, impl="pallas")
+    fp_ref = flush_pack(cur, snap, block_bytes=block_bytes, impl="ref")
+    _assert_flush_pack_equal(fp_pal, fp_ref)
+    nblocks = -(-n * 4 // block_bytes)
+    assert fp_pal.flags.shape[0] == nblocks
+    assert 1 <= fp_pal.total <= 3
+    # offsets are the exclusive prefix sum of the flags
+    f = np.asarray(fp_pal.flags)
+    np.testing.assert_array_equal(np.asarray(fp_pal.offsets),
+                                  np.cumsum(f) - f)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas", "fused"])
+def test_flush_pack_all_clean_and_all_dirty(impl):
+    """The two extremes: identical buffers pack nothing (flags, packed
+    and index all zero); fully-rewritten buffers pack every block in
+    ascending order, so ``packed`` is just the blocked live buffer."""
+    rng = np.random.default_rng(11)
+    snap = rand(rng, (6000,), jnp.float32)
+    clean = flush_pack(snap, snap, impl=impl)
+    assert clean.total == 0
+    assert int(np.asarray(clean.flags).sum()) == 0
+    assert not np.asarray(clean.packed).any()
+    assert not np.asarray(clean.index).any()
+
+    cur = rand(rng, (6000,), jnp.float32)   # independent draw: all blocks differ
+    full = flush_pack(cur, snap, impl=impl)
+    nblocks = full.flags.shape[0]
+    assert full.total == nblocks
+    np.testing.assert_array_equal(np.asarray(full.flags), np.ones(nblocks))
+    np.testing.assert_array_equal(np.asarray(full.index),
+                                  np.arange(nblocks, dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(full.packed),
+                                  np.asarray(as_blocks(cur)[0]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_flush_pack_matches_staged_oracles(dtype):
+    """One fused pass == the staged chain composed: dirty_diff flags,
+    popcnt checksums, flatnonzero compaction, delta_pack gather."""
+    rng = np.random.default_rng(13)
+    snap = rand(rng, (7000,), dtype)
+    cur = _dirtied(rng, snap, [5, 2048, 6999])
+    fp = flush_pack(cur, snap, impl="pallas")
+    flags = dirty_blocks(cur, snap, impl="ref")
+    counts = popcount_blocks(cur, impl="ref")
+    idx = np.flatnonzero(np.asarray(flags)).astype(np.int32)
+    delta = pack_delta(cur, jnp.asarray(idx), impl="ref")
+    np.testing.assert_array_equal(np.asarray(fp.flags), np.asarray(flags))
+    np.testing.assert_array_equal(np.asarray(fp.counts), np.asarray(counts))
+    assert fp.total == idx.size
+    np.testing.assert_array_equal(np.asarray(fp.index[: fp.total]), idx)
+    np.testing.assert_array_equal(np.asarray(fp.packed[: fp.total]),
+                                  np.asarray(delta))
+    # ...and the packed delta replays: apply onto snap reproduces cur
+    restored = apply_delta(snap, fp.packed[: fp.total],
+                           fp.index[: fp.total], impl="ref")
+    np.testing.assert_array_equal(np.asarray(restored), np.asarray(cur))
+
+
+def test_compact_index_matches_flatnonzero():
+    """On-device prefix-sum compaction == np.flatnonzero, including the
+    empty, full, and single-flag patterns."""
+    for pattern in ([0] * 16, [1] * 16, [0] * 15 + [1], [1] + [0] * 15,
+                    [0, 1, 1, 0, 1, 0, 0, 1], [1, 0] * 8):
+        flags = jnp.asarray(pattern, dtype=jnp.int32)
+        index, total = compact_index(flags)
+        k = int(total)
+        want = np.flatnonzero(np.asarray(pattern))
+        assert k == want.size
+        np.testing.assert_array_equal(np.asarray(index[:k]), want)
+
+
+def test_pack_dirty_shares_compaction():
+    """delta_pack's flag-driven entry point (the staged fallback) uses
+    the same on-device compaction — no host flatnonzero — and agrees
+    with the explicit-index pack_delta."""
+    rng = np.random.default_rng(17)
+    snap = rand(rng, (8192,), jnp.float32)
+    cur = _dirtied(rng, snap, [100, 3000, 8000])
+    flags = dirty_blocks(cur, snap, impl="ref")
+    delta, idx, k = pack_dirty(cur, flags, impl="ref")
+    want_idx = np.flatnonzero(np.asarray(flags)).astype(np.int32)
+    assert k == want_idx.size
+    np.testing.assert_array_equal(np.asarray(idx), want_idx)
+    np.testing.assert_array_equal(
+        np.asarray(delta),
+        np.asarray(pack_delta(cur, jnp.asarray(want_idx), impl="ref")))
