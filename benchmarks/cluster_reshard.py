@@ -1,0 +1,196 @@
+"""Cluster reshard under load: p99 during migration vs quiesced, and
+bytes moved == the migrating ranges only.
+
+The view-change protocol claims two things worth numbers:
+
+1. **Migration traffic is bounded by the moving ranges.** A reshard
+   after a checkpoint moves exactly ``len(moving_ranges) x
+   pages_per_range x page_size`` page bytes and zero WAL bytes — the
+   non-moving ranges contribute nothing. The check computes the
+   prediction from the shard map alone and compares it to the measured
+   ``ReshardReport``.
+2. **Foreground p99 degrades boundedly while migrating.** The same
+   deterministic op stream is priced twice on per-shard engine-time
+   horizons (arrival vs completion on the ``engine_time_ns`` clock):
+   once quiesced, once with one migration step interleaved every
+   ``STEP_EVERY`` ops, each step's modeled cost (engine deltas + the
+   ``cluster_transfer_ns`` interconnect term) charged to the source and
+   target shards' horizons. Ops behind a migration step queue, but only
+   behind ONE step: steps are spaced widely enough that backlogs drain,
+   so p99 may exceed quiesced by at most one step's cost (and the max
+   by ``P99_BOUND`` steps).
+
+All numbers are modeled (exact sim op counts x calibrated constants);
+both runs are bit-deterministic from the literal seed, which the last
+check asserts by running the migrating sweep twice.
+
+The ``cluster.p99.reshard`` row is the regression gate:
+``benchmarks/compare.py`` fails CI if a PR regresses the
+p99-under-migration by more than the threshold (default 10%).
+"""
+
+from __future__ import annotations
+
+from repro.cluster import ClusterConfig, ClusterKV
+from repro.core import KVConfig
+from repro.core.costmodel import COST_MODEL
+from repro.pool import Pool
+
+from benchmarks.common import check, emit
+
+N_OPS = 1200
+STEP_EVERY = 150          # one migration step every this many foreground ops
+INTERARRIVAL_NS = 1200.0  # open-loop arrival spacing (global stream)
+P99_BOUND = 3.0           # max latency bound, in units of one step's cost
+SEED = 12345
+
+
+def _build():
+    cfg = ClusterConfig(kv=KVConfig(npages=32, page_size=1024, value_size=64,
+                                    log_capacity=1 << 17),
+                        n_ranges=32)
+    meta = Pool.create(None, ClusterKV.meta_pool_bytes(cfg))
+    pools = {sid: Pool.create(None, ClusterKV.shard_pool_bytes(cfg))
+             for sid in range(4)}
+    c = ClusterKV(meta, pools, cfg, shards=range(3))
+    for k in range(cfg.nkeys):
+        c.put(k, bytes([k % 256]) * cfg.kv.value_size)
+    c.commit()
+    c.checkpoint()          # migration source = page images, WAL empty
+    return cfg, c
+
+
+def _op_stream(cfg, n):
+    """Deterministic LCG mix: 70% get / 30% put over the key space."""
+    x, ops = SEED, []
+    for i in range(n):
+        x = (1103515245 * x + 12345) & 0x7FFFFFFF
+        key = x % cfg.nkeys
+        ops.append(("put" if x % 10 < 3 else "get", key,
+                    bytes(((x >> 7) + j) % 256 for j in range(64))))
+    return ops
+
+
+def _service_ns(c, sid, op, key, value):
+    """Run one op on its owner engine and price the deltas it caused."""
+    eng = c.engine(sid)
+    p0 = c.pool(sid).stats.snapshot()
+    c0 = eng.cache.stats.snapshot()
+    if op == "put":
+        c.put(key, value)
+    else:
+        c.get(key)
+    return COST_MODEL.engine_time_ns(c.pool(sid).stats.delta(p0),
+                                     cache=eng.cache.stats.delta(c0))
+
+
+def _migration_step(c, vc, free, now_ns, expect):
+    """One vc.step(); charge its modeled cost to the source and target
+    shards' horizons and fold the flipped ranges' expected traffic
+    (durable pages + WAL records committed before the flip) into
+    ``expect``."""
+    owners0 = dict(c.map.owners())
+    cost0 = vc.engine_ns + vc.transfer_ns
+    more = vc.step()
+    step_ns = (vc.engine_ns + vc.transfer_ns) - cost0
+    moved = [r for r, s in c.map.owners().items() if owners0[r] != s]
+    expect["max_step_ns"] = max(expect["max_step_ns"], step_ns)
+    for r in moved:
+        expect["pages"] += c.cfg.pages_per_range
+        expect["wal_records"] += expect["puts"].get(r, 0)
+        for s in (owners0[r], c.map.owners()[r]):
+            free[s] = max(free[s], now_ns) + step_ns / len(moved)
+    return more
+
+
+def _sweep(migrate: bool):
+    """Price the op stream on per-shard horizons; optionally interleave
+    one migration step (cluster 3 shards -> 4) every STEP_EVERY ops.
+    Returns (sorted latencies us, ReshardReport or None, cluster,
+    expected-traffic dict)."""
+    cfg, c = _build()
+    ops = _op_stream(cfg, N_OPS)
+    vc = c.begin_reshard([0, 1, 2, 3]) if migrate else None
+    free = {sid: 0.0 for sid in range(4)}
+    # per-range count of WAL records committed and not yet migrated:
+    # the exact traffic a flip of that range must move on top of pages
+    expect = {"pages": 0, "wal_records": 0, "puts": {}, "max_step_ns": 0.0}
+    lats, more = [], True
+    for i, (op, key, value) in enumerate(ops):
+        if vc is not None and more and i and i % STEP_EVERY == 0:
+            more = _migration_step(c, vc, free, i * INTERARRIVAL_NS, expect)
+        arrival = i * INTERARRIVAL_NS
+        sid = c.owner_of(key)
+        ns = _service_ns(c, sid, op, key, value)
+        if op == "put":
+            r = c.range_of(key)
+            expect["puts"][r] = expect["puts"].get(r, 0) + 1
+        start = max(arrival, free[sid])
+        free[sid] = start + ns
+        lats.append((free[sid] - arrival) / 1000.0)
+    while vc is not None and more:    # drain remaining migration steps
+        more = _migration_step(c, vc, free, N_OPS * INTERARRIVAL_NS, expect)
+    return sorted(lats), (vc.report() if vc else None), c, expect
+
+
+def _p(lats, q):
+    return lats[min(len(lats) - 1, int(q * (len(lats) - 1)))]
+
+
+def run() -> bool:
+    ok = True
+
+    quiesced, _, _, _ = _sweep(migrate=False)
+    migrating, rep, c, expect = _sweep(migrate=True)
+    p99_q, p99_m = _p(quiesced, 0.99), _p(migrating, 0.99)
+
+    emit("cluster.reshard.p99_quiesced", p99_q,
+         f"p50={_p(quiesced, 0.5):.3f}us max={quiesced[-1]:.3f}us n={N_OPS}")
+    emit("cluster.p99.reshard", p99_m,
+         f"p50={_p(migrating, 0.5):.3f}us max={migrating[-1]:.3f}us "
+         f"step_every={STEP_EVERY}")
+    emit("cluster.reshard.transfer", rep.transfer_ns / 1000.0,
+         f"bytes={rep.bytes_moved} ranges={len(rep.ranges_moved)} "
+         f"view={rep.view}")
+
+    # -------- bytes moved == the migrating ranges, exactly --------------
+    cfg = c.cfg
+    pred_pages = expect["pages"] * cfg.kv.page_size
+    ok &= check("cluster: reshard moved only the migrating ranges' bytes",
+                rep.pages_moved == expect["pages"]
+                and rep.page_bytes == pred_pages
+                and rep.wal_records_moved == expect["wal_records"],
+                f"pages {rep.pages_moved} == {expect['pages']}, wal "
+                f"records {rep.wal_records_moved} == "
+                f"{expect['wal_records']} (committed pre-flip puts)")
+    ok &= check("cluster: the new shard won ranges (view advanced)",
+                len(rep.ranges_moved) >= 1 and c.shards == (0, 1, 2, 3),
+                f"moved {sorted(rep.ranges_moved)}")
+
+    # -------- tail under migration: visible but bounded ------------------
+    step_us = expect["max_step_ns"] / 1000.0
+    ok &= check("cluster: migration is visible in the max latency",
+                migrating[-1] > quiesced[-1],
+                f"{migrating[-1]:.2f}us vs {quiesced[-1]:.2f}us quiesced")
+    # any op waits at most ~one migration step: steps are spaced widely
+    # enough (STEP_EVERY x interarrival >> step cost) that backlogs drain
+    ok &= check("cluster: p99 interference bounded by one migration step",
+                p99_m <= p99_q + step_us,
+                f"p99 {p99_m:.2f}us <= {p99_q:.2f}us + step {step_us:.2f}us")
+    ok &= check("cluster: max interference bounded by "
+                f"{P99_BOUND:.0f}x one migration step",
+                migrating[-1] <= quiesced[-1] + P99_BOUND * step_us,
+                f"max {migrating[-1]:.2f}us <= {quiesced[-1]:.2f}us + "
+                f"{P99_BOUND:.0f} x {step_us:.2f}us")
+
+    # -------- determinism ------------------------------------------------
+    migrating2, rep2, c2, _ = _sweep(migrate=True)
+    ok &= check("cluster: sweep bit-stable across identical runs",
+                migrating2 == migrating and rep2 == rep
+                and c2.digest() == c.digest(),
+                f"digest {c.digest()[:16]} both runs")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -30,6 +30,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        cluster_reshard,
         fig1_bandwidth,
         fig2_threads,
         fig3_read_latency,
@@ -56,6 +57,8 @@ def main() -> None:
         (numa_placement, "NUMA lane placement: near vs far socket", True),
         (readpath, "Read path: DRAM cache hit-ratio x admission-k", True),
         (serve_load, "Serving: throughput vs p99, admission + isolation",
+         True),
+        (cluster_reshard, "Cluster: reshard under load, bytes moved + p99",
          True),
         # in smoke so CI's BENCH_results.json carries the kernels.fused.*
         # rows for compare.py's cross-PR regression gate

@@ -703,6 +703,32 @@ class BufferManager:
             self._dirty_order.pop(key, None)
             self._owner_frames[owner] -= 1
 
+    def drop(self, pid: int, store=None) -> None:
+        """Discard one page's DRAM state without flushing it: its frame
+        (clean *or* dirty) and any image parked in the flush queue's
+        pending set. This is the cross-shard invalidation primitive
+        (repro.cluster): by the time a range's source engine drops a
+        page, the new owner already holds its content durably, so the
+        dirty bytes die here on purpose. Unlike :meth:`invalidate` the
+        admission touch count resets too — the page's access history
+        moved with it. No-op if the page is unframed and unparked;
+        refuses pinned frames."""
+        owner, _ = self._resolve(store)
+        key = (owner, int(pid))
+        f = self._frames.get(key)
+        if f is not None:
+            if f.pins > 0:
+                raise ValueError(f"page {pid} is pinned")
+            self._frames.pop(key)
+            idx = self._ring.index(key)
+            del self._ring[idx]
+            if idx < self._hand:
+                self._hand -= 1
+            self._dirty_order.pop(key, None)
+            self._owner_frames[owner] -= 1
+        self._fq[owner].pop_pending(int(pid))
+        self._touches.pop(key, None)
+
     def install(self, pid: int, page: np.ndarray, store=None) -> None:
         """Install a *clean* frame holding ``page`` (restore/adopt paths
         seeding snapshots). No touch, no dirty marking."""

@@ -1,0 +1,469 @@
+"""``ClusterKV``: N independent engines behind one durable shard map,
+with crash-consistent live view changes.
+
+Each shard is a full :class:`~repro.core.recovery.PersistentKV` engine
+on its **own pool** — its own WAL lanes, flush queue, spill tier and
+DRAM frames — exactly as ``repro.serve`` builds per-tenant engines. The
+router owns no data: it routes every ``put``/``get`` by the durable
+per-range ownership record in the :class:`~repro.cluster.shardmap.ShardMap`
+(on a small dedicated *meta pool*), so "who answers this key" has a
+single point of truth at every instant, including mid-reshard.
+
+**Life of a view change** (``reshard``), per moving range, generalizing
+the spill protocol's down-tier-first ordering to cross-shard handoff::
+
+    copy   — durable page images + committed WAL records stream from
+             the source engine into the target's frames and WAL
+    flush  — the target writes the range back and commits its WAL: the
+             bytes are durable on the new owner, but unreachable (the
+             ownership record still names the old one)
+    own    — ONE Zero-log barrier flips the range's ownership record:
+             the atomic per-range commit point
+    inval  — the source durably discards its copies (frames, parked
+             images, PMem slots, SSD extents)
+
+A crash strictly before ``own`` recovers exactly-old-owner (the copy
+never mutated the source); at or after it, exactly-new-owner (the
+source's leftovers are unreachable and scrubbed at reopen). Never both,
+never neither — the crash-corpus invariant. Resuming an interrupted
+view change re-runs only the not-yet-flipped ranges (the copy step is
+idempotent: it re-ships the same durable cut) and converges.
+
+Migration traffic is charged on the modeled clock: each range's step
+prices the PMem/SSD/cache deltas it caused on *both* engines through
+``engine_time_ns`` and adds the interconnect term
+``cluster_transfer_ns(bytes_moved)`` on the receiving side, so
+``benchmarks/cluster_reshard.py`` can race resharding against
+foreground traffic deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import struct
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.costmodel import COST_MODEL, SSD_COST_MODEL
+from repro.core.recovery import KVConfig, PersistentKV, _REC
+from repro.cluster.shardmap import ShardMap
+
+__all__ = ["ClusterConfig", "ClusterKV", "CausalSession", "ReshardReport",
+           "ViewChange"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Shape of a sharded KV: the per-shard engine config plus the range
+    geometry of the shard map.
+
+    ``kv.npages`` spans the **global** key space (every engine can host
+    any page; which pages it actually materializes is decided by
+    ownership), carved into ``n_ranges`` equal page-aligned ranges —
+    the granule of migration and of ownership records."""
+
+    kv: KVConfig = dataclasses.field(default_factory=KVConfig)
+    n_ranges: int = 8
+    map_capacity: int = 1 << 14
+
+    def __post_init__(self) -> None:
+        if self.n_ranges < 1 or self.kv.npages % self.n_ranges:
+            raise ValueError(
+                f"n_ranges={self.n_ranges} must divide npages="
+                f"{self.kv.npages} (ranges are page-aligned)")
+
+    @property
+    def pages_per_range(self) -> int:
+        """Pages per migration granule."""
+        return self.kv.npages // self.n_ranges
+
+    @property
+    def nkeys(self) -> int:
+        """Global key space size (== the per-engine key space)."""
+        return self.kv.nkeys
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardReport:
+    """What one view change did, on the modeled clock.
+
+    ``engine_ns`` is the full modeled cost of the migration steps (PMem
+    + SSD + cache work on both sides, interconnect term included);
+    ``transfer_ns`` is the interconnect term alone."""
+
+    view: int
+    shards: Tuple[int, ...]
+    ranges_moved: Tuple[int, ...]
+    pages_moved: int
+    page_bytes: int
+    wal_records_moved: int
+    wal_bytes: int
+    engine_ns: float
+    transfer_ns: float
+
+    @property
+    def bytes_moved(self) -> int:
+        """Total migration payload: page images + WAL records."""
+        return self.page_bytes + self.wal_bytes
+
+
+class ViewChange:
+    """One in-flight view change, migrated range-at-a-time.
+
+    Callers that interleave foreground traffic (the reshard-under-load
+    benchmark, a serving loop) drive :meth:`step` themselves; the last
+    step commits the view. :meth:`run` drives it to completion."""
+
+    def __init__(self, cluster: "ClusterKV", shards: Iterable[int]) -> None:
+        """Durably start the view change toward ``shards`` (re-entrant
+        for resume — see ``ShardMap.begin_view``)."""
+        ids = tuple(sorted(int(s) for s in shards))
+        unknown = set(ids) - set(cluster._engines)
+        if unknown:
+            raise ValueError(f"no engines for shards {sorted(unknown)}")
+        self._c = cluster
+        self.view = cluster.map.begin_view(ids)
+        cluster._fp("view:started")
+        self.target_shards = ids
+        self.target = cluster.map.assignment(ids)
+        #: ranges still to migrate, in range order (deterministic)
+        self.todo: List[int] = cluster.map.moving_ranges(ids)
+        self.moved: List[int] = []
+        self.pages_moved = 0
+        self.page_bytes = 0
+        self.wal_records_moved = 0
+        self.wal_bytes = 0
+        self.engine_ns = 0.0
+        self.transfer_ns = 0.0
+        self._done = False
+
+    def step(self) -> bool:
+        """Migrate the next moving range (commit the view once none
+        remain). Returns True while more steps are pending."""
+        if self._done:
+            return False
+        if self.todo:
+            r = self.todo.pop(0)
+            self._c._migrate_range(r, self.view, self.target[r], self)
+            self.moved.append(r)
+        if not self.todo:
+            self._c._scrub_all()
+            self._c.map.commit_view()
+            self._c._fp("view:committed")
+            self._done = True
+            return False
+        return True
+
+    def run(self) -> ReshardReport:
+        """Drive the view change to completion and report it."""
+        while self.step():
+            pass
+        return self.report()
+
+    def report(self) -> ReshardReport:
+        """The migration's byte/time accounting so far."""
+        return ReshardReport(
+            view=self.view, shards=self.target_shards,
+            ranges_moved=tuple(self.moved), pages_moved=self.pages_moved,
+            page_bytes=self.page_bytes,
+            wal_records_moved=self.wal_records_moved,
+            wal_bytes=self.wal_bytes, engine_ns=self.engine_ns,
+            transfer_ns=self.transfer_ns)
+
+
+class CausalSession:
+    """A client session with cross-shard causal consistency.
+
+    Within a session, before a write lands on a shard every *other*
+    shard holding one of the session's earlier-not-yet-committed writes
+    is group-committed first. Each shard's WAL recovers a contiguous
+    durable prefix, so after any crash a surviving write implies all its
+    causal predecessors survive too — across shards, not just within
+    one — which is the acceptance suite's causal-chain invariant.
+    Reads go through the owners' frames: read-your-writes for free."""
+
+    def __init__(self, cluster: "ClusterKV") -> None:
+        """Bind to a router; sessions are cheap, make one per client."""
+        self._c = cluster
+        self._uncommitted: set = set()
+
+    def put(self, key: int, value: bytes) -> int:
+        """Causally ordered durable upsert (see class docstring)."""
+        sid = self._c.owner_of(key)
+        for dep in sorted(self._uncommitted - {sid}):
+            self._c._commit_shard(dep)
+            self._uncommitted.discard(dep)
+        lsn = self._c.put(key, value)
+        self._uncommitted.add(sid)
+        return lsn
+
+    def get(self, key: int) -> bytes:
+        """Read through the owning engine's frames."""
+        return self._c.get(key)
+
+    def flush(self) -> None:
+        """Commit every shard this session still has in flight."""
+        for sid in sorted(self._uncommitted):
+            self._c._commit_shard(sid)
+        self._uncommitted.clear()
+
+
+class ClusterKV:
+    """Sharded PersistentKV: route by durable ownership, reshard live.
+
+    Open-or-create over a meta pool (shard map) plus one pool per shard
+    (engines, named ``s<sid>`` on their pool). Tiered configs need each
+    shard pool's SSD attached **before** construction. ``shards=``
+    restricts the *initial view* to a subset of the provided pools —
+    spare pools idle until a reshard pulls them in (the add-shard
+    scenario). On reopen the constructor recovers every engine and the
+    map, then scrubs non-owner leftovers of every range (frames the
+    engines' WAL replay resurrected for keys they no longer own, and
+    durable copies an interrupted invalidation left behind) — reopening
+    is therefore self-healing, and resuming an interrupted view change
+    is just ``resume()``."""
+
+    def __init__(self, meta_pool, shard_pools: Dict[int, object],
+                 cfg: Optional[ClusterConfig] = None, *,
+                 shards: Optional[Iterable[int]] = None) -> None:
+        """Open-or-create; see the class docstring."""
+        cfg = cfg or ClusterConfig()
+        self.cfg = cfg
+        self.meta_pool = meta_pool
+        self._pools = dict(sorted(shard_pools.items()))
+        if len({id(p) for p in self._pools.values()}) != len(self._pools):
+            raise ValueError("each shard needs its own pool")
+        #: test-only failpoint hook — called with a protocol point name;
+        #: raising aborts mid-protocol exactly like a crash would
+        self.failpoints = None
+        recover = meta_pool.directory.lookup("sm.hd") is not None
+        ids = tuple(sorted(int(s) for s in (shards if shards is not None
+                                            else self._pools)))
+        if set(ids) - set(self._pools):
+            raise ValueError(f"shards {ids} not all backed by pools")
+        self.map = ShardMap(meta_pool, n_ranges=cfg.n_ranges,
+                            nkeys=cfg.nkeys, shards=ids,
+                            map_capacity=cfg.map_capacity)
+        if (self.map.n_ranges, self.map.nkeys) != (cfg.n_ranges, cfg.nkeys):
+            raise ValueError(
+                f"map geometry ({self.map.n_ranges} ranges, "
+                f"{self.map.nkeys} keys) does not match the config "
+                f"({cfg.n_ranges}, {cfg.nkeys})")
+        self._engines: Dict[int, PersistentKV] = {
+            sid: pool.kv(f"s{sid}", cfg.kv)
+            for sid, pool in self._pools.items()}
+        missing = set(self.map.owners().values()) - set(self._engines)
+        if missing:
+            raise ValueError(f"map names owners {sorted(missing)} but no "
+                             f"pool was provided for them")
+        if recover:
+            self._scrub_all()
+
+    def pool(self, sid: int):
+        """The pmem pool backing shard ``sid`` (for pricing its deltas
+        through ``engine_time_ns`` and for test assertions)."""
+        return self._pools[int(sid)]
+
+    @classmethod
+    def open(cls, meta_pool, shard_pools: Dict[int, object],
+             cfg: Optional[ClusterConfig] = None) -> "ClusterKV":
+        """Reopen after a restart (same as the constructor on existing
+        pools — provided for symmetry with ``PersistentKV.open``)."""
+        return cls(meta_pool, shard_pools, cfg)
+
+    # ----------------------------------------------------------- failpoint
+
+    def _fp(self, point: str) -> None:
+        if self.failpoints is not None:
+            self.failpoints(point)
+
+    # -------------------------------------------------------------- sizing
+
+    @staticmethod
+    def shard_pool_bytes(cfg: ClusterConfig) -> int:
+        """Pool bytes one shard's engine needs (directory included)."""
+        return PersistentKV.region_bytes(cfg.kv) + (1 << 14)
+
+    @staticmethod
+    def meta_pool_bytes(cfg: ClusterConfig) -> int:
+        """Pool bytes the shard map's meta pool needs."""
+        from repro.pool import DEFAULT_MAX_REGIONS, Pool
+        g = cfg.kv.geometry
+        return (Pool.overhead_bytes(g, DEFAULT_MAX_REGIONS)
+                + ShardMap.region_bytes(g, cfg.map_capacity) + (1 << 12))
+
+    # ------------------------------------------------------------- routing
+
+    def range_of(self, key: int) -> int:
+        """The page-aligned range a key belongs to."""
+        if not (0 <= key < self.cfg.nkeys):
+            raise KeyError(key)
+        return (key // self.cfg.kv.recs_per_page) // self.cfg.pages_per_range
+
+    def owner_of(self, key: int) -> int:
+        """The shard whose durable ownership record answers this key."""
+        return self.map.owner_of_range(self.range_of(key))
+
+    def engine(self, sid: int) -> PersistentKV:
+        """A shard's engine (tests and benchmarks poke at internals)."""
+        return self._engines[sid]
+
+    @property
+    def view(self) -> int:
+        """Last committed view number."""
+        return self.map.view
+
+    @property
+    def shards(self) -> Tuple[int, ...]:
+        """Shard ids of the committed view."""
+        return self.map.shards
+
+    def _range_pids(self, r: int) -> range:
+        ppr = self.cfg.pages_per_range
+        return range(r * ppr, (r + 1) * ppr)
+
+    # ----------------------------------------------------------------- api
+
+    def put(self, key: int, value: bytes) -> int:
+        """Durable upsert on the owning shard; returns its engine LSN."""
+        return self._engines[self.owner_of(key)].put(key, value)
+
+    def get(self, key: int) -> bytes:
+        """Read from the owning shard — exactly one engine ever answers
+        a key under a given map state."""
+        return self._engines[self.owner_of(key)].get(key)
+
+    def commit(self) -> None:
+        """Group-commit every engine's WAL tail."""
+        for sid in sorted(self._engines):
+            self._commit_shard(sid)
+
+    def checkpoint(self) -> None:
+        """Checkpoint every engine (flush + WAL truncation)."""
+        for sid in sorted(self._engines):
+            self._engines[sid].checkpoint()
+
+    def session(self) -> CausalSession:
+        """A causally consistent client session (see CausalSession)."""
+        return CausalSession(self)
+
+    def _commit_shard(self, sid: int) -> None:
+        commit = getattr(self._engines[sid].wal, "commit", None)
+        if commit is not None:
+            commit()
+
+    def digest(self) -> str:
+        """sha256 over the committed view, every ownership record and
+        every key's current value — the bit-determinism witness the
+        acceptance suite compares across identically seeded runs."""
+        h = hashlib.sha256()
+        h.update(struct.pack("<QI", self.map.view, len(self.map.shards)))
+        for sid in self.map.shards:
+            h.update(struct.pack("<I", sid))
+        for r in range(self.cfg.n_ranges):
+            h.update(struct.pack("<II", r, self.map.owner_of_range(r)))
+        for key in range(self.cfg.nkeys):
+            try:
+                h.update(self.get(key))
+            except KeyError:
+                h.update(b"\x00absent")
+        return h.hexdigest()
+
+    # -------------------------------------------------------- view changes
+
+    def begin_reshard(self, shards: Iterable[int]) -> ViewChange:
+        """Durably start a view change toward ``shards`` and hand back
+        the step-at-a-time driver."""
+        return ViewChange(self, shards)
+
+    def reshard(self, shards: Iterable[int]) -> ReshardReport:
+        """Run a full view change to ``shards`` (see module docstring
+        for the per-range protocol) and report what moved."""
+        return self.begin_reshard(shards).run()
+
+    def resume(self) -> Optional[ReshardReport]:
+        """Finish a view change a crash interrupted, if any: re-runs the
+        not-yet-flipped ranges and commits. Returns None when no view is
+        pending."""
+        if self.map.pending is None:
+            return None
+        return self.reshard(self.map.pending[1])
+
+    def _migrate_range(self, r: int, view: int, dst_sid: int,
+                       vc: ViewChange) -> None:
+        """One range's copy → flush → ownership record → invalidate (the
+        module docstring's protocol), priced on the modeled clock."""
+        src_sid = self.map.owner_of_range(r)
+        src, dst = self._engines[src_sid], self._engines[dst_sid]
+        src_pool, dst_pool = self._pools[src_sid], self._pools[dst_sid]
+        s0 = src_pool.stats.snapshot()
+        d0 = dst_pool.stats.snapshot()
+        m0 = self.meta_pool.stats.snapshot()
+        sc0 = src.cache.stats.snapshot()
+        dc0 = dst.cache.stats.snapshot()
+        sssd0 = src_pool.ssd_dev.stats.snapshot() if src_pool.ssd_dev else None
+        dssd0 = dst_pool.ssd_dev.stats.snapshot() if dst_pool.ssd_dev else None
+
+        # --- copy: the source's durable cut. Commit its WAL tail first
+        # so the cut covers every applied write, then ship page images
+        # (checkpoint-age) and committed WAL records (newer, replayed
+        # through dst.put so they land in the target's own WAL *after*
+        # the images they supersede — recovery order stays valid).
+        self._commit_shard(src_sid)
+        page_bytes = wal_bytes = wal_records = 0
+        for pid in self._range_pids(r):
+            img = src.durable_page_image(pid)
+            if img is None:
+                continue
+            dst.cache.put(pid, img, store=dst.store)
+            vc.pages_moved += 1
+            page_bytes += int(img.size)
+            self._fp("copy:page")
+        for key, value in src.committed_wal_records():
+            if self.range_of(key) != r:
+                continue
+            dst.put(key, value)
+            wal_records += 1
+            wal_bytes += _REC.size + len(value)
+            self._fp("copy:wal")
+        # --- flush: durable on the target, still unreachable
+        dst.cache.writeback(dst.store)
+        self._commit_shard(dst_sid)
+        self._fp("flush:done")
+        # --- ownership record: the atomic per-range commit point
+        self.map.record_owner(r, view, dst_sid)
+        self._fp("own:committed")
+        # --- invalidate: the source durably forgets the range
+        for pid in self._range_pids(r):
+            src.discard_page(pid)
+        self._fp("invalidate:done")
+
+        moved = page_bytes + wal_bytes
+        vc.page_bytes += page_bytes
+        vc.wal_bytes += wal_bytes
+        vc.wal_records_moved += wal_records
+        eng = COST_MODEL.engine_time_ns(src_pool.stats.delta(s0),
+                                        cache=src.cache.stats.delta(sc0))
+        eng += COST_MODEL.engine_time_ns(dst_pool.stats.delta(d0),
+                                         cache=dst.cache.stats.delta(dc0),
+                                         cluster_transfer_bytes=moved)
+        eng += COST_MODEL.engine_time_ns(self.meta_pool.stats.delta(m0))
+        if sssd0 is not None:
+            eng += SSD_COST_MODEL.time_ns(src_pool.ssd_dev.stats.delta(sssd0))
+        if dssd0 is not None:
+            eng += SSD_COST_MODEL.time_ns(dst_pool.ssd_dev.stats.delta(dssd0))
+        vc.engine_ns += eng
+        vc.transfer_ns += COST_MODEL.cluster_transfer_ns(moved)
+
+    def _scrub_all(self) -> None:
+        """Discard every non-owner copy of every range — idempotent
+        convergence sweep (reopen + view-change tail). Quietly drops
+        frames an engine's WAL replay resurrected for keys that migrated
+        away, and finishes any invalidation a crash interrupted."""
+        owners = self.map.owners()
+        for r, own_sid in owners.items():
+            for sid, eng in self._engines.items():
+                if sid == own_sid:
+                    continue
+                for pid in self._range_pids(r):
+                    eng.discard_page(pid)

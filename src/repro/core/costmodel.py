@@ -229,6 +229,27 @@ class PMemCostModel:
 
     # ----------------------------------------------------------- helpers
 
+    def cluster_transfer_ns(self, nbytes: int) -> float:
+        """Modeled wall-clock of moving ``nbytes`` between shards during a
+        view change (repro.cluster).
+
+        A migration streams page images and WAL records from the source
+        engine's pool into the target's over the interconnect. The bytes
+        are charged at the NT-store peak derated by the far-socket block
+        multiplier — Izraelevitz (arXiv:1903.05714) measures remote
+        streaming stores at ~1/2.3 the near rate, and a cross-*node* hop
+        cannot beat the cross-socket one — plus one remote-latency setup
+        round trip per transfer. ``engine_time_ns(cluster_transfer_bytes=…)``
+        adds this term to the receiving engine's serialized remainder, so
+        resharding competes with foreground I/O on the same modeled clock
+        (Wu arXiv:2005.07658: migration scheduling against foreground
+        traffic decides partitioned-engine tail latency)."""
+        if nbytes <= 0:
+            return 0.0
+        bw = self.store_bw_nt_gbps / self.numa_remote_block_mult
+        setup = self.barrier_ns * self.numa_remote_barrier_mult
+        return setup + nbytes / bw   # B / (GB/s) = ns
+
     def persist_latency_ns(
         self, kind: FlushKind, pattern: AccessPattern
     ) -> float:
@@ -382,6 +403,7 @@ class PMemCostModel:
         burst: bool = False,
         cache=None,
         scan_read_bytes: int = 0,
+        cluster_transfer_bytes: int = 0,
     ) -> float:
         """Wall-clock of a lane-partitioned engine (repro.io).
 
@@ -417,6 +439,12 @@ class PMemCostModel:
         charged at :meth:`scan_read_ns` and added to the serialized
         remainder — the epoch's lanes cannot start on a page before its
         scan has classified it.
+
+        ``cluster_transfer_bytes`` is cross-shard migration traffic
+        received during the window (repro.cluster view changes), charged
+        at :meth:`cluster_transfer_ns` and likewise serialized — the
+        engine cannot acknowledge a migrated range before its bytes have
+        landed.
         """
         dram_ns = 0.0
         if cache is not None:
@@ -424,6 +452,8 @@ class PMemCostModel:
                                              cache.dram_hit_bytes)
         if scan_read_bytes:
             dram_ns += self.scan_read_ns(scan_read_bytes)
+        if cluster_transfer_bytes:
+            dram_ns += self.cluster_transfer_ns(cluster_transfer_bytes)
         lanes = set()
         for field in (stats.lane_barriers, stats.lane_lines,
                       stats.lane_blocks_written, stats.lane_partial_blocks):

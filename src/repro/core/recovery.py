@@ -364,3 +364,55 @@ class PersistentKV:
     @classmethod
     def open(cls, pool_or_pmem, cfg: KVConfig, *, name: str = "kv") -> "PersistentKV":
         return cls(pool_or_pmem, cfg, name=name, _recover=True)
+
+    # ------------------------------------------------- cross-shard handoff
+    # (repro.cluster view changes: a migration's "copy" step reads the
+    # source engine's *durable* cut — page images + committed WAL records
+    # — so the bytes it ships are exactly what the source's own recovery
+    # would reconstruct, and re-running an interrupted copy is idempotent.)
+
+    def durable_page_image(self, pid: int):
+        """The page's newest *flushed* content, read from whichever tier
+        holds it (cross-tier max-pvn rule), or ``None`` if the page was
+        never flushed. Never promotes, never touches DRAM frames — this
+        is the migration copy source, not a read path."""
+        if self._spill is not None:
+            if self._spill.residency(self.store, pid) is None:
+                return None
+            return self._spill.read_page(self.store, pid, promote=False)
+        if pid not in self.store.table:
+            return None
+        data, _pvn = self.store.fill_page(pid)
+        return data
+
+    def committed_wal_records(self):
+        """``(key, value)`` pairs of every redo record a restart right
+        now would replay, oldest first: sealed-but-unretired generations
+        (rare — checkpoint retires them in the same epoch), then the
+        durable prefix of the live generation re-read from PMem. Applied
+        through the target's own ``put`` during a migration, so each
+        record lands in the target's WAL *after* the page images it
+        supersedes."""
+        out = []
+        if getattr(self.wal, "generational", False):
+            sealed = self.wal.sealed_generations()
+            for gen in sorted(sealed):
+                for entry in sealed[gen]:
+                    key, vlen = _REC.unpack_from(entry, 0)
+                    out.append((key, bytes(entry[_REC.size:_REC.size + vlen])))
+        for entry in self.wal.recover().entries:
+            key, vlen = _REC.unpack_from(entry, 0)
+            out.append((key, bytes(entry[_REC.size:_REC.size + vlen])))
+        return out
+
+    def discard_page(self, pid: int) -> None:
+        """Drop every copy of a page this engine holds — DRAM frame,
+        parked flush-queue image, PMem slot, SSD extent. The view-change
+        invalidation step: only call when the page's content is durably
+        owned elsewhere (the ownership record has flipped), because the
+        bytes are gone from this engine afterwards."""
+        self.cache.drop(pid, store=self.store)
+        if self._spill is not None:
+            self._spill.discard_page(self.store, pid)
+        elif pid in self.store.table:
+            self.store.release(pid)

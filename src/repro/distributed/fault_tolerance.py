@@ -12,43 +12,24 @@ The orchestration loop for a 1000-node job:
 This container is single-process, so hosts are simulated actors; the logic
 (detection, quorum, restore orchestration) is real and tested — it is the
 part that must be correct, the transport is jax.distributed in deployment.
+Failure detection itself (``HeartbeatRegistry``) lives in
+``repro.cluster.membership`` — the sharded-KV cluster uses it to plan
+view changes — and is re-exported here unchanged.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+# Failure detection moved to the storage-cluster membership layer, where
+# it feeds view planning; re-exported here for the training-loop callers.
+from repro.cluster.membership import HeartbeatRegistry
 from repro.persistence.checkpoint import CheckpointConfig, CheckpointManager
 from repro.persistence.restore import assemble_global, reshard_state
 
-
-@dataclasses.dataclass
-class HeartbeatRegistry:
-    deadline_s: float = 10.0
-
-    def __post_init__(self) -> None:
-        self._last: Dict[int, float] = {}
-        self.dead: Set[int] = set()
-
-    def beat(self, host: int, now: Optional[float] = None) -> None:
-        if host in self.dead:
-            return
-        self._last[host] = time.monotonic() if now is None else now
-
-    def sweep(self, now: Optional[float] = None) -> List[int]:
-        now = time.monotonic() if now is None else now
-        newly = [h for h, t in self._last.items()
-                 if h not in self.dead and now - t > self.deadline_s]
-        self.dead.update(newly)
-        return newly
-
-    @property
-    def alive(self) -> List[int]:
-        return sorted(h for h in self._last if h not in self.dead)
+__all__ = ["HeartbeatRegistry", "ElasticCoordinator"]
 
 
 class ElasticCoordinator:

@@ -11,47 +11,24 @@ this container — the *decision logic* is what's tested):
   - ``QuorumPolicy``: proceed when K of N microbatch gradients arrived;
     late gradients are dropped and the contribution renormalized by K/N
     (unbiased in expectation for i.i.d. microbatches).
+
+``BackupStepPolicy`` lives in ``repro.cluster.membership`` — the
+sharded-KV cluster uses it to plan view changes — and is re-exported
+here unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
+# EWMA straggler cordoning moved to the storage-cluster membership
+# layer, where it feeds view planning; re-exported for training callers.
+from repro.cluster.membership import BackupStepPolicy
 
-@dataclasses.dataclass
-class BackupStepPolicy:
-    threshold: float = 1.8       # × median EWMA step time
-    patience: int = 3
-    ewma: float = 0.3
-
-    def __post_init__(self) -> None:
-        self._t: Dict[int, float] = {}
-        self._flags: Dict[int, int] = {}
-        self.cordoned: Set[int] = set()
-
-    def observe(self, host: int, step_time: float) -> None:
-        prev = self._t.get(host, step_time)
-        self._t[host] = (1 - self.ewma) * prev + self.ewma * step_time
-
-    def evaluate(self) -> List[int]:
-        """Returns hosts newly cordoned this round."""
-        active = {h: t for h, t in self._t.items() if h not in self.cordoned}
-        if len(active) < 2:
-            return []
-        med = float(np.median(list(active.values())))
-        newly = []
-        for h, t in active.items():
-            if t > self.threshold * med:
-                self._flags[h] = self._flags.get(h, 0) + 1
-                if self._flags[h] >= self.patience:
-                    self.cordoned.add(h)
-                    newly.append(h)
-            else:
-                self._flags[h] = 0
-        return newly
+__all__ = ["BackupStepPolicy", "QuorumPolicy"]
 
 
 @dataclasses.dataclass(frozen=True)

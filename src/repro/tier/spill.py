@@ -530,6 +530,31 @@ class SpillScheduler:
             self.stats.pages_promoted += 1
         return data
 
+    def discard_page(self, store, pid: int) -> None:
+        """Durably forget a page from *both* tiers — the cross-shard
+        invalidation step of a view change (repro.cluster): by the time
+        the source engine discards a range, its new owner already holds
+        the content durably behind a committed ownership record, so
+        ordering within the discard is not a commit point. The SSD copy
+        is superseded by the same ``PAGE_BACK`` tombstone a promotion
+        writes (the extent is reusable once the tombstone is durable);
+        the PMem slot is released through the store's durable
+        header-invalidate, with the version floor pinned so a later
+        re-migration back cannot resurrect the stale history."""
+        owner = self._owner_of(store)
+        pid = int(pid)
+        rec = self._page_map.pop((owner, pid), None)
+        if rec is not None:
+            off, length, pvn, _crc = rec
+            self._map_append(self._encode(
+                _REC_PAGE_BACK, owner, _PAGE_BACK.pack(pid, pvn)))
+            self._free_extents.append((off, length))
+        if pid in store.table:
+            slot_pvn = store.table[pid][1]
+            store.release(pid)
+            store.pvn_floor[pid] = max(store.pvn_floor.get(pid, 0), slot_pvn)
+        self._last_use.pop((owner, pid), None)
+
     def read_spilled(self, owner: str, pid: int,
                      pvn: Optional[int] = None) -> np.ndarray:
         """Checksum-verified read of a spilled page *by owner name*,

@@ -35,6 +35,7 @@ __all__ = [
     "run_cache_crash",
     "run_ckpt_fused_crash",
     "run_serve_crash",
+    "run_cluster_crash",
 ]
 
 
@@ -534,4 +535,125 @@ def run_serve_crash(n_requests, wl_seed, crash_step, seed, prob, *,
                 # uncommitted (or shed) puts recover as never-written —
                 # values are request-unique, so any leak would show here
                 assert got == zero, (tname, k)
+    return crashed
+
+
+# ================================================== crash-mid-reshard
+
+def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
+                      prob, *, tiered=False, ssd_keep=1.0):
+    """Crash a live view change at an arbitrary protocol point (the
+    router's failpoints: view:started, then per moving range copy:page*,
+    copy:wal*, flush:done, own:committed, invalidate:done, finally
+    view:committed), then crash every device with arbitrary eviction
+    subsets. The recovered cluster must answer every committed put with
+    its last committed value, from a map in which every range is owned
+    by EXACTLY its pre-reshard owner or exactly its rendezvous target —
+    never both tiers of the handoff, never neither. Resuming the
+    interrupted reshard must converge to the target view, re-migrating
+    only the ranges whose ownership record had not flipped, and must
+    leave the sources durably scrubbed."""
+    from repro.cluster import ClusterConfig, ClusterKV
+
+    kv_kw = dict(npages=8, page_size=512, value_size=32,
+                 log_capacity=1 << 15)
+    if tiered:
+        kv_kw["slot_budget"] = 4
+    cfg = ClusterConfig(kv=KVConfig(**kv_kw), n_ranges=8)
+    all_sids = range(max(nshards, new_nshards))
+    meta = Pool.create(None, ClusterKV.meta_pool_bytes(cfg))
+    pools, ssds = {}, {}
+    for sid in all_sids:
+        pools[sid] = Pool.create(None, ClusterKV.shard_pool_bytes(cfg)
+                                 + (1 << 18 if tiered else 0))
+        if tiered:
+            ssds[sid] = SSD(1 << 23)
+            pools[sid].attach_ssd(ssds[sid])
+    c = ClusterKV(meta, pools, cfg, shards=range(nshards))
+
+    # committed workload, deterministic from the seed (LCG, no numpy rng
+    # in value generation — the corpus rows must replay bit-exact)
+    expected = {}
+    x = (seed & 0x7FFFFFFF) or 1
+    for i in range(n_ops):
+        x = (1103515245 * x + 12345) & 0x7FFFFFFF
+        k = x % cfg.nkeys
+        value = bytes(((x >> 7) + i + j) % 256 for j in range(32))
+        c.put(k, value)
+        expected[k] = value
+        if ckpt and (i + 1) % ckpt == 0:
+            c.checkpoint()
+    c.commit()
+
+    target = sorted(range(new_nshards))
+    pre_owner = dict(c.map.owners())
+    goal = c.map.assignment(target)
+    c.failpoints = CrashAt(crash_step)
+    crashed = False
+    try:
+        c.reshard(target)
+    except SimCrash:
+        crashed = True
+    c.failpoints = None
+
+    rng = np.random.default_rng(seed)
+    meta.pmem.crash(rng=rng, evict_prob=prob)
+    for sid in sorted(pools):
+        pools[sid].pmem.crash(rng=rng, evict_prob=prob)
+        if tiered:
+            ssds[sid].crash(rng=rng, keep_prob=ssd_keep)
+
+    meta2 = Pool.open(pmem=meta.pmem)
+    pools2 = {}
+    for sid, p in pools.items():
+        pools2[sid] = Pool.open(pmem=p.pmem)
+        if tiered:
+            pools2[sid].attach_ssd(ssds[sid])
+    c2 = ClusterKV.open(meta2, pools2, cfg)
+
+    # --- exactly-old-owner or exactly-new-owner, per range
+    owners_after_crash = dict(c2.map.owners())
+    for r in range(cfg.n_ranges):
+        assert owners_after_crash[r] in (pre_owner[r], goal[r]), \
+            (r, owners_after_crash[r], pre_owner[r], goal[r])
+    if not crashed:
+        assert owners_after_crash == goal
+        assert c2.map.pending is None
+
+    # --- every committed put answers with its last committed value,
+    # from the single owner the map names; no key leaks foreign bytes
+    zero = bytes(cfg.kv.value_size)
+    for k in range(cfg.nkeys):
+        if k in expected:
+            assert c2.get(k) == expected[k], k
+        else:
+            try:
+                got = c2.get(k)
+            except KeyError:
+                continue        # tiered: never-written page in no tier
+            assert got == zero, k
+
+    # --- resume: converge to the target view, re-moving only the
+    # not-yet-flipped ranges
+    rep = c2.resume()
+    if rep is not None:
+        already_flipped = {r for r in range(cfg.n_ranges)
+                           if owners_after_crash[r] == goal[r]
+                           and pre_owner[r] != goal[r]}
+        assert set(rep.ranges_moved).isdisjoint(already_flipped)
+    assert c2.map.pending is None
+    assert dict(c2.map.owners()) == goal
+    assert tuple(c2.map.shards) == tuple(target)
+    for k, value in expected.items():
+        assert c2.get(k) == value, k
+
+    # --- sources durably scrubbed: a moved range's old owner holds no
+    # copy in either tier
+    ppr = cfg.pages_per_range
+    for r in range(cfg.n_ranges):
+        if goal[r] == pre_owner[r]:
+            continue
+        eng = c2.engine(pre_owner[r])
+        for pid in range(r * ppr, (r + 1) * ppr):
+            assert eng.durable_page_image(pid) is None, (r, pid)
     return crashed

@@ -18,6 +18,7 @@ import pytest
 from corpus_runner import (
     run_cache_crash,
     run_ckpt_fused_crash,
+    run_cluster_crash,
     run_generation_spill_crash,
     run_kv_crash,
     run_multilog_crash,
@@ -242,3 +243,42 @@ SERVE_CORPUS = [
 def test_serve_crash_corpus(n, wseed, step, seed, prob, admission, slo):
     run_serve_crash(n, wseed, step, seed, prob,
                     admission=admission, slo_us=slo)
+
+
+# ================================================== crash-mid-reshard
+# (nshards, new_nshards, n_ops, ckpt_every, crash_step, crash-seed,
+#  evict_prob, tiered, ssd_keep) — crash steps land on the router's
+# view-change failpoints. The step numbers below were chosen against
+# the deterministic failpoint traces of each scenario (seed 12345 LCG
+# workload): the checkpointed 2→3 grow migrates one range as
+#   1 view:started · 2 copy:page · 3 flush:done · 4 own:committed ·
+#   5 invalidate:done · 6 view:committed,
+# the 4→2 shrink moves two ranges (steps 2-6 first range incl. a
+# copy:wal, 7-10 second), and the never-checkpointed 2→4 grow ships
+# WAL records only (steps 2-13 copy:wal). Each case asserts
+# exactly-old-owner or exactly-new-owner recovery per range (never
+# both/neither), last-committed-value reads, convergence on resume
+# with only unflipped ranges re-moved, and durably scrubbed sources
+# (see corpus_runner.run_cluster_crash).
+
+CLUSTER_CORPUS = [
+    (2, 3, 40, 10, 2, 7101, 0.5, False, 1.0),   # mid-copy: page image shipped
+    (2, 3, 40, 10, 3, 7102, 1.0, False, 1.0),   # after target flush, pre-own
+    (2, 3, 40, 10, 4, 7103, 0.0, False, 1.0),   # at the ownership flip
+    (2, 3, 40, 10, 5, 7104, 0.5, False, 1.0),   # after source invalidation
+    (4, 2, 48, 10, 6, 7105, 0.5, False, 1.0),   # range 1 flipped, range 2 not
+    (4, 2, 48, 10, 9, 7106, 1.0, False, 1.0),   # mid-second-range ownership
+    (2, 4, 48, 0, 7, 7107, 0.5, False, 1.0),    # mid-WAL-only copy stream
+    (2, 4, 48, 0, 15, 7108, 0.0, False, 1.0),   # second range's flush step
+    (3, 4, 48, 8, 4, 7109, 0.5, True, 0.5),     # tiered source, own flip
+    (3, 4, 48, 8, 5, 7110, 0.5, True, 0.0),     # tiered, SSD loses all
+    (2, 3, 40, 10, 99, 7111, 0.5, False, 1.0),  # no crash: clean control
+]
+
+
+@pytest.mark.parametrize(
+    "nsh,new,n,ckpt,step,seed,prob,tiered,skeep", CLUSTER_CORPUS)
+def test_cluster_crash_corpus(nsh, new, n, ckpt, step, seed, prob,
+                              tiered, skeep):
+    run_cluster_crash(nsh, new, n, ckpt, step, seed, prob,
+                      tiered=tiered, ssd_keep=skeep)

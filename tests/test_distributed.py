@@ -13,9 +13,10 @@ from repro.distributed.compression import (
     compressed_bytes_ratio,
     init_error_state,
 )
-from repro.distributed.fault_tolerance import ElasticCoordinator, HeartbeatRegistry
+from repro.cluster.membership import BackupStepPolicy, HeartbeatRegistry
+from repro.distributed.fault_tolerance import ElasticCoordinator
 from repro.distributed.sharding import batch_specs, param_spec, state_specs
-from repro.distributed.straggler import BackupStepPolicy, QuorumPolicy
+from repro.distributed.straggler import QuorumPolicy
 
 
 # ------------------------------------------------------------- sharding

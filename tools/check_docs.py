@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """Docs gate for CI: fail on (a) public symbols in ``repro.pool``,
-``repro.io``, ``repro.tier``, ``repro.cache``, ``repro.serve`` and
-``repro.kernels`` missing docstrings, and (b) broken intra-repo links
-in README.md and docs/.
+``repro.io``, ``repro.tier``, ``repro.cache``, ``repro.serve``,
+``repro.kernels`` and ``repro.cluster`` missing docstrings, and
+(b) broken intra-repo links in README.md and docs/.
 
 Pure stdlib (ast + re): runs before any dependency is installed.
 
@@ -25,7 +25,8 @@ REPO = Path(__file__).resolve().parent.parent
 
 #: modules whose public API must be fully docstringed
 DOC_SCOPES = ["src/repro/pool.py", "src/repro/io", "src/repro/tier",
-              "src/repro/cache", "src/repro/serve", "src/repro/kernels"]
+              "src/repro/cache", "src/repro/serve", "src/repro/kernels",
+              "src/repro/cluster"]
 
 #: markdown files whose intra-repo links must resolve
 LINK_ROOTS = ["README.md", "docs"]
