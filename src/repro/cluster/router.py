@@ -218,10 +218,13 @@ class ClusterKV:
     spare pools idle until a reshard pulls them in (the add-shard
     scenario). On reopen the constructor recovers every engine and the
     map, then scrubs non-owner leftovers of every range (frames the
-    engines' WAL replay resurrected for keys they no longer own, and
-    durable copies an interrupted invalidation left behind) — reopening
-    is therefore self-healing, and resuming an interrupted view change
-    is just ``resume()``."""
+    engines' WAL replay resurrected for keys they no longer own, durable
+    copies an interrupted invalidation left behind, and — via a
+    checkpoint of any engine whose WAL holds records for ranges it does
+    not own — stale WAL residue that would otherwise replay over newer
+    page images on a later restart) — reopening is therefore
+    self-healing, and resuming an interrupted view change is just
+    ``resume()``."""
 
     def __init__(self, meta_pool, shard_pools: Dict[int, object],
                  cfg: Optional[ClusterConfig] = None, *,
@@ -459,11 +462,28 @@ class ClusterKV:
         """Discard every non-owner copy of every range — idempotent
         convergence sweep (reopen + view-change tail). Quietly drops
         frames an engine's WAL replay resurrected for keys that migrated
-        away, and finishes any invalidation a crash interrupted."""
+        away, finishes any invalidation a crash interrupted, and fences
+        stale WAL residue (below)."""
         owners = self.map.owners()
+        owned: Dict[int, set] = {sid: set() for sid in self._engines}
         for r, own_sid in owners.items():
+            owned.setdefault(own_sid, set()).add(r)
             for sid, eng in self._engines.items():
                 if sid == own_sid:
                     continue
                 for pid in self._range_pids(r):
                     eng.discard_page(pid)
+        # WAL fence: an engine whose WAL still holds committed records
+        # for ranges it does NOT own would replay them unconditionally on
+        # a later restart — over newer page images shipped by a re-run
+        # copy (the migration target after a crash-interrupted copy) or
+        # by a reshard that moves the range back (the migration source,
+        # whose records outlive the invalidate step) — reverting
+        # committed writes. Checkpoint such engines now: the non-owned
+        # frames were dropped above, so the checkpoint flushes only owned
+        # data and truncates the stale records away.
+        for sid in sorted(self._engines):
+            eng = self._engines[sid]
+            if any(self.range_of(key) not in owned[sid]
+                   for key, _ in eng.committed_wal_records()):
+                eng.checkpoint()

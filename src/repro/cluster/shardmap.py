@@ -92,7 +92,12 @@ class ShardMap:
     to create (the initial view 1 commits an ownership record for every
     range up front — the map is total from birth), or reopen an
     existing map and recover the committed view, the per-range owners,
-    and any view change that was started but never committed."""
+    and any view change that was started but never committed. Creation
+    is itself crash-recoverable: it is judged complete only once the
+    initial view's commit record is durable, so reopening after a crash
+    anywhere inside creation (regions allocated but genesis missing, or
+    ownership records partly written) re-runs the remainder
+    idempotently rather than misreading the pool as corrupt."""
 
     def __init__(self, pool, *, n_ranges: Optional[int] = None,
                  nkeys: Optional[int] = None,
@@ -102,7 +107,6 @@ class ShardMap:
         self.pool = pool
         self.name = name
         cl = pool.geometry.cache_line
-        recover = pool.directory.lookup(f"{name}.hd") is not None
         self._hd = pool.raw(f"{name}.hd", nbytes=2 * cl)
         self._maps = []
         for j in (0, 1):
@@ -126,16 +130,41 @@ class ShardMap:
         for raw in self._maps[self._active].recovered.entries:
             self._replay(bytes(raw))
 
-        if not recover:
+        # Creation is detected from the recovered *record* state, not
+        # from region presence: the head/log regions come into being
+        # before the genesis record does, so a crash during creation can
+        # leave the regions allocated with the records partly (or not at
+        # all) appended. Reopening such a pool re-runs creation
+        # idempotently instead of misreading it as a corrupt map.
+        if self.n_ranges == 0:
+            # no durable genesis: a fresh map, or a creation the crash
+            # cut before its first record — (re-)create from scratch
             if not n_ranges or not nkeys or not shards:
                 raise ValueError(
                     "creating a ShardMap needs n_ranges, nkeys and shards")
-            ids = tuple(sorted(int(s) for s in shards))
             self._append(bytes([_T_GENESIS])
                          + _GENESIS.pack(int(n_ranges), int(nkeys)))
+        if self.view == 0:
+            # the initial view never committed: creation was interrupted
+            # somewhere between genesis and the view-1 commit. Finish it
+            # idempotently — ``begin_view`` is re-entrant, ranges whose
+            # ownership record already landed keep it (same rendezvous
+            # answer), the rest get theirs now. The log's prefix
+            # guarantee makes the commit record the creation barrier: if
+            # it recovered, every record before it did too.
+            if self.pending is not None:
+                ids = self.pending[1]
+            elif shards:
+                ids = tuple(sorted(int(s) for s in shards))
+            else:
+                raise ValueError(
+                    f"shard map {self.name!r} creation was interrupted "
+                    f"before its shard set became durable; pass shards= "
+                    f"to re-create it")
             view = self.begin_view(ids)
             for r in range(self.n_ranges):
-                self.record_owner(r, view, rendezvous_owner(r, ids))
+                if r not in self._owner:
+                    self.record_owner(r, view, rendezvous_owner(r, ids))
             self.commit_view()
 
     # ------------------------------------------------------ durable layer
@@ -183,8 +212,13 @@ class ShardMap:
         try:
             self._maps[self._active].append(raw)
         except RuntimeError:
-            self._compact()
+            # Compaction itself can overflow (the live set alone no
+            # longer fits a buffer); surface that exactly like a
+            # post-compaction append failure — one capacity diagnostic,
+            # not the log's generic error. Durably benign either way:
+            # the head only flips after a complete rewrite.
             try:
+                self._compact()
                 self._maps[self._active].append(raw)
             except RuntimeError:
                 raise RuntimeError(

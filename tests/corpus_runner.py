@@ -541,7 +541,8 @@ def run_serve_crash(n_requests, wl_seed, crash_step, seed, prob, *,
 # ================================================== crash-mid-reshard
 
 def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
-                      prob, *, tiered=False, ssd_keep=1.0):
+                      prob, *, tiered=False, ssd_keep=1.0,
+                      resume_interleave=False):
     """Crash a live view change at an arbitrary protocol point (the
     router's failpoints: view:started, then per moving range copy:page*,
     copy:wal*, flush:done, own:committed, invalidate:done, finally
@@ -552,7 +553,19 @@ def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
     never both tiers of the handoff, never neither. Resuming the
     interrupted reshard must converge to the target view, re-migrating
     only the ranges whose ownership record had not flipped, and must
-    leave the sources durably scrubbed."""
+    leave the sources durably scrubbed.
+
+    ``resume_interleave`` arms the stale-WAL-residue scenario: between
+    the reopen and ``resume()``, every key of every still-moving range
+    is overwritten through its recovered owner (covering exactly the
+    keys a crash-interrupted copy may already have replayed into the
+    migration target's WAL), and those *source* engines checkpoint —
+    the new values move into page images and the sources' WALs empty,
+    so the re-run copy ships images only, while the targets' WALs are
+    deliberately left alone. After convergence, every device crashes
+    AGAIN and the cluster reopens: any record the interrupted copy left
+    in a target's WAL would now replay over the newer images and revert
+    a committed write — the reopen scrub must have fenced it away."""
     from repro.cluster import ClusterConfig, ClusterKV
 
     kv_kw = dict(npages=8, page_size=512, value_size=32,
@@ -633,6 +646,24 @@ def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
                 continue        # tiered: never-written page in no tier
             assert got == zero, k
 
+    # --- stale-WAL arm: overwrite every key of every still-moving range
+    # and checkpoint their current owners before resuming, so the re-run
+    # copy ships the new values as page images with no WAL records (see
+    # the docstring; same LCG stream, continued)
+    if resume_interleave:
+        still_moving = [r for r in range(cfg.n_ranges)
+                        if owners_after_crash[r] != goal[r]]
+        keys_per_range = cfg.pages_per_range * cfg.kv.recs_per_page
+        for r in still_moving:
+            for k in range(r * keys_per_range, (r + 1) * keys_per_range):
+                x = (1103515245 * x + 12345) & 0x7FFFFFFF
+                value = bytes(((x >> 9) + k + j) % 256 for j in range(32))
+                c2.put(k, value)
+                expected[k] = value
+        c2.commit()
+        for sid in sorted({owners_after_crash[r] for r in still_moving}):
+            c2.engine(sid).checkpoint()
+
     # --- resume: converge to the target view, re-moving only the
     # not-yet-flipped ranges
     rep = c2.resume()
@@ -656,4 +687,25 @@ def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
         eng = c2.engine(pre_owner[r])
         for pid in range(r * ppr, (r + 1) * ppr):
             assert eng.durable_page_image(pid) is None, (r, pid)
+
+    # --- second crash + reopen: nothing a crash-interrupted copy left
+    # in any WAL may replay over the resumed migration's newer images
+    if resume_interleave:
+        rng2 = np.random.default_rng(seed + 1)
+        meta.pmem.crash(rng=rng2, evict_prob=prob)
+        for sid in sorted(pools):
+            pools[sid].pmem.crash(rng=rng2, evict_prob=prob)
+            if tiered:
+                ssds[sid].crash(rng=rng2, keep_prob=ssd_keep)
+        meta3 = Pool.open(pmem=meta.pmem)
+        pools3 = {}
+        for sid, p in pools.items():
+            pools3[sid] = Pool.open(pmem=p.pmem)
+            if tiered:
+                pools3[sid].attach_ssd(ssds[sid])
+        c3 = ClusterKV.open(meta3, pools3, cfg)
+        assert c3.map.pending is None
+        assert dict(c3.map.owners()) == goal
+        for k, value in expected.items():
+            assert c3.get(k) == value, ("post-resume restart", k)
     return crashed

@@ -175,6 +175,67 @@ def test_shard_map_pending_view_survives_reopen():
     assert sm2.view == 1                 # still routing on the old view
 
 
+def test_shard_map_creation_crash_before_genesis():
+    """A crash between the map's region allocation and its first record
+    leaves the head region present but the logs empty — reopening with
+    the create arguments must re-run creation, not misread the pool as
+    a corrupt existing map."""
+    pool = Pool.create(None, 1 << 18)
+    pool.raw("sm.hd", nbytes=2 * pool.geometry.cache_line)
+    sm = ShardMap(pool, n_ranges=8, nkeys=64, shards=[0, 1, 2])
+    assert sm.view == 1 and sm.pending is None
+    assert sm.owners() == sm.assignment([0, 1, 2])
+    # ...and the same partial state under ClusterKV (which keys its
+    # reopen scrub off the hard-coded "sm.hd" directory entry)
+    cfg = small_cfg()
+    meta = Pool.create(None, ClusterKV.meta_pool_bytes(cfg))
+    meta.raw("sm.hd", nbytes=2 * meta.geometry.cache_line)
+    pools = {sid: Pool.create(None, ClusterKV.shard_pool_bytes(cfg))
+             for sid in range(2)}
+    c = ClusterKV(meta, pools, cfg)
+    assert c.view == 1
+    c.put(0, val(0, "a"))
+    assert c.get(0) == val(0, "a")
+
+
+@pytest.mark.parametrize("crash_after", [0, 1, 5])
+def test_shard_map_creation_crash_mid_owners(crash_after):
+    """Cut creation after ``crash_after`` ownership records (plus an
+    arbitrary eviction subset): reopening with the create arguments
+    finishes the initial view idempotently — every range owned by its
+    rendezvous shard, view 1 committed, nothing pending."""
+
+    class CrashingCreate(ShardMap):
+        def record_owner(self, r, view, sid):
+            if len(self._owner) >= crash_after:
+                raise SimCrash("create")
+            super().record_owner(r, view, sid)
+
+    pool = Pool.create(None, 1 << 18)
+    with pytest.raises(SimCrash):
+        CrashingCreate(pool, n_ranges=8, nkeys=64, shards=[0, 1, 2])
+    pool.pmem.crash(rng=np.random.default_rng(crash_after), evict_prob=0.5)
+    sm = ShardMap(Pool.open(pmem=pool.pmem),
+                  n_ranges=8, nkeys=64, shards=[0, 1, 2])
+    assert sm.view == 1 and sm.pending is None
+    assert (sm.n_ranges, sm.nkeys) == (8, 64)
+    assert sm.owners() == sm.assignment([0, 1, 2])
+    # the completed creation is durable: a plain reopen recovers it
+    sm2 = ShardMap(Pool.open(pmem=pool.pmem))
+    assert (sm2.view, sm2.owners()) == (1, sm.owners())
+
+
+def test_shard_map_capacity_overflow_diagnostic():
+    """A live record set that cannot fit a map buffer even after
+    compaction surfaces the map_capacity diagnostic, not the log's
+    generic error — including when the overflow happens *inside* the
+    compaction rewrite."""
+    pool = Pool.create(None, 1 << 20)
+    with pytest.raises(RuntimeError, match="map_capacity"):
+        ShardMap(pool, n_ranges=256, nkeys=2048, shards=[0, 1, 2],
+                 map_capacity=1 << 10)
+
+
 def test_ownership_map_compaction_ping_pong():
     cfg = ClusterConfig(kv=KVConfig(npages=8, page_size=512, value_size=64,
                                     log_capacity=1 << 15),

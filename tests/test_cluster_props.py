@@ -62,3 +62,25 @@ def test_reshard_crash_tiered_source(crash_step, seed, prob, ssd_keep):
     crash may also drop an arbitrary subset of unflushed SSD writes."""
     run_cluster_crash(3, 4, 48, 8, crash_step, seed, prob,
                       tiered=True, ssd_keep=ssd_keep)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    shape=st.sampled_from([(2, 3), (2, 4), (4, 2)]),
+    ckpt=st.sampled_from([0, 10]),
+    crash_step=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+    prob=st.sampled_from([0.0, 0.5]),
+)
+def test_reshard_crash_no_stale_wal_replay(shape, ckpt, crash_step, seed,
+                                           prob):
+    """The stale-WAL-residue arm: after the crash + reopen, overwrite
+    the still-moving ranges' keys through their recovered owners and
+    checkpoint them (new values live only in page images), resume, then
+    crash and reopen AGAIN — no record a crash-interrupted copy left in
+    a migration target's WAL may replay over the newer images (the
+    reopen scrub must fence it)."""
+    nsh, new = shape
+    run_cluster_crash(nsh, new, 48, ckpt, crash_step, seed, prob,
+                      resume_interleave=True)

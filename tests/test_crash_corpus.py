@@ -282,3 +282,32 @@ def test_cluster_crash_corpus(nsh, new, n, ckpt, step, seed, prob,
                               tiered, skeep):
     run_cluster_crash(nsh, new, n, ckpt, step, seed, prob,
                       tiered=tiered, ssd_keep=skeep)
+
+
+# Stale-WAL fence: crash mid-copy AFTER copy:wal replayed committed
+# source records into the migration target's WAL, reopen (the scrub
+# must checkpoint the target, truncating that residue), then overwrite
+# the still-moving ranges' keys and checkpoint their owners — source
+# WALs empty, the new values live only in page images — resume, and
+# crash + reopen once more. Without the fence the target's leftover
+# records replay over the newer images on that second restart and
+# revert committed writes (run_cluster_crash resume_interleave arm).
+# The never-checkpointed rows ship WAL records only, so any mid-copy
+# step lands inside the copy:wal stream; the ckpt=10 rows mix page
+# images and WAL records.
+CLUSTER_STALE_WAL_CORPUS = [
+    (2, 4, 48, 0, 3, 7201, 0.5, False, 1.0),    # early in the WAL stream
+    (2, 4, 48, 0, 9, 7202, 0.0, False, 1.0),    # deep in the WAL stream
+    (2, 4, 48, 0, 15, 7203, 0.5, False, 1.0),   # past one range's flip
+    (2, 3, 40, 10, 3, 7204, 0.5, False, 1.0),   # images + WAL tail mixed
+    (4, 2, 48, 10, 5, 7205, 0.5, False, 1.0),   # shrink, first range mid-copy
+    (3, 4, 48, 8, 3, 7206, 0.5, True, 1.0),     # tiered source mid-copy
+]
+
+
+@pytest.mark.parametrize(
+    "nsh,new,n,ckpt,step,seed,prob,tiered,skeep", CLUSTER_STALE_WAL_CORPUS)
+def test_cluster_stale_wal_corpus(nsh, new, n, ckpt, step, seed, prob,
+                                  tiered, skeep):
+    run_cluster_crash(nsh, new, n, ckpt, step, seed, prob,
+                      tiered=tiered, ssd_keep=skeep, resume_interleave=True)
