@@ -97,6 +97,124 @@ def zipf_stream(n: int):
     return perm[ranks]
 
 
+# All-near Zipf k=3 total from the pre-NUMA cost model: with zero remote
+# fills the surcharge term is exactly 0.0, so the unified model must
+# reproduce this value BIT-identically (not approximately).
+ALL_NEAR_GOLDEN_NS = 50701019.22264716
+
+
+def fill_heavy(socket: int):
+    """A fill-dominated read stream against a region homed on ``socket``
+    of a two-socket pool (every get misses: 48 pages, 8 frames, no
+    re-touch), priced by the unified model. The only difference between
+    socket 0 and socket 1 is where the fills come from."""
+    pool = Pool.create(None, 1 << 25, sockets=2)
+    pages = pool.pages("r", npages=48, page_size=PAGE, socket=socket)
+    fq = FlushQueue(pages, lanes=2)
+    cache = BufferManager(pool, frames=8, local_socket=0)
+    cache.attach_pages(pages, flushq=fq)
+    for pid in range(48):
+        cache.put(pid, np.full(PAGE, 3, dtype=np.uint8))
+        if pid % 8 == 7:
+            cache.writeback()
+    cache.writeback()
+    cache.invalidate()
+    pm0, c0 = pool.stats.snapshot(), cache.stats.snapshot()
+    for pid in range(48):
+        cache.get(pid)
+    pm, c = pool.stats.delta(pm0), cache.stats.delta(c0)
+    return COST_MODEL.engine_time_ns(pm, active_lanes=1, cache=c), c
+
+
+def numa_sweep(numa_evict: bool):
+    """Mixed-socket sweep: a Zipf-style hot head on the near socket is
+    read under a cold far-socket ingest sweep (RMW writes fault far
+    pages in, periodic epoch drains keep them clean and evictable). The
+    socket-blind clock churns the near hot set; far-first eviction
+    recycles the far-filled frames instead. Returns the modeled engine
+    total, the remote penalty actually charged, the stat delta and the
+    hot-set hit ratio."""
+    hot_n, frames, passes, epoch_every = 16, 24, 2, 8
+    pool = Pool.create(None, 1 << 25, sockets=2)
+    near = pool.pages("near", npages=32, page_size=PAGE, socket=0)
+    far = pool.pages("far", npages=128, page_size=PAGE, socket=1)
+    fq_n = FlushQueue(near, lanes=2)
+    fq_f = FlushQueue(far, lanes=2)
+    cache = BufferManager(pool, frames=frames, local_socket=0)
+    cache.numa_evict = numa_evict
+    cache.attach_pages(near, flushq=fq_n)
+    cache.attach_pages(far, flushq=fq_f)
+    for pid in range(32):
+        cache.put(pid, np.full(PAGE, 1, dtype=np.uint8), store=near)
+        if pid % 8 == 7:
+            cache.writeback(store=near)
+    for pid in range(128):
+        cache.put(pid, np.full(PAGE, 2, dtype=np.uint8), store=far)
+        if pid % 8 == 7:
+            cache.writeback(store=far)
+    cache.writeback(store=near)
+    cache.writeback(store=far)
+    cache.invalidate(store=near)
+    cache.invalidate(store=far)
+    for pid in range(hot_n):                  # warm + graduate the hot set
+        cache.get(pid, store=near)
+        cache.get(pid, store=near)
+    pm0, c0 = pool.stats.snapshot(), cache.stats.snapshot()
+    hot_hits = hot_tot = hi = dirt = 0
+    for _ in range(passes):
+        for spid in range(128):
+            pid = hi % hot_n
+            hi += 1
+            before = cache.stats.dram_hits
+            cache.get(pid, store=near)
+            hot_tot += 1
+            hot_hits += cache.stats.dram_hits - before
+            cache.write(spid, 64, b"\xbb" * 64, store=far)
+            dirt += 1
+            if dirt % epoch_every == 0:
+                cache.writeback(store=far)
+    cache.writeback(store=far)
+    cache.writeback(store=near)
+    pm, c = pool.stats.delta(pm0), cache.stats.delta(c0)
+    eng = COST_MODEL.engine_time_ns(pm, active_lanes=1, cache=c)
+    penalty = COST_MODEL.remote_fill_ns(c.remote_fills, c.remote_fill_bytes)
+    return eng, penalty, c, hot_hits / hot_tot
+
+
+def scan_resist(scan_frac, with_scan: bool = True):
+    """Hot-set hit ratio of a quota'd owner under a 2-pass ingest scan
+    (sequential puts — the access shape that laps the clock). Returns
+    (hot hit ratio, modeled read-path ns)."""
+    quota, hot_n, scan_hi, passes, epoch_every = 16, 8, 64, 2, 24
+    pool = Pool.create(None, 1 << 22)
+    pages = pool.pages("heap", npages=128, page_size=PAGE)
+    fq = FlushQueue(pages, lanes=2)
+    cache = BufferManager(pool, frames=quota, scan_frac=scan_frac)
+    cache.attach_pages(pages, flushq=fq)
+    cache.set_quota("heap", quota)
+    for pid in range(hot_n):                  # warm + graduate the hot set
+        cache.get(pid)
+        cache.get(pid)
+    c0 = cache.stats.snapshot()
+    scan_pids = list(range(hot_n, scan_hi)) * passes if with_scan else []
+    hot_hits = hot_tot = 0
+    dirt = 0
+    for i in range(max(len(scan_pids), (scan_hi - hot_n) * passes)):
+        before = cache.stats.dram_hits
+        cache.get(i % hot_n)
+        hot_tot += 1
+        hot_hits += cache.stats.dram_hits - before
+        if i < len(scan_pids):
+            cache.put(scan_pids[i],
+                      np.full(PAGE, scan_pids[i] % 251, dtype=np.uint8))
+            dirt += 1
+            if dirt % epoch_every == 0:
+                cache.writeback()
+    cache.writeback()
+    c = cache.stats.delta(c0)
+    return hot_hits / hot_tot, COST_MODEL.readpath_time_ns(c)
+
+
 def run() -> bool:
     ok = True
 
@@ -151,6 +269,53 @@ def run() -> bool:
         emit(f"readpath.sweep.zipf_k{k}", t / 1000,
              f"hit={c.hit_ratio:.2f} promos={c.promotions} "
              f"deferred={c.admissions_deferred}")
+
+    # -------- NUMA: remote fills on the Izraelevitz read rung ----------
+    # All-near runs must price BIT-identically to the pre-NUMA model:
+    # the surcharge is (mult-1)*pmem_read_ns(fills, bytes), exactly 0.0
+    # at zero remote fills. The Zipf k=3 run above is single-socket.
+    ok &= check("readpath: all-near fills bit-identical to pre-NUMA model",
+                cz_ktouch.remote_fills == 0
+                and z_ktouch == ALL_NEAR_GOLDEN_NS,
+                f"{z_ktouch!r} vs golden {ALL_NEAR_GOLDEN_NS!r}, "
+                f"remote_fills={cz_ktouch.remote_fills}")
+    t_nearf, c_nearf = fill_heavy(0)
+    t_farf, c_farf = fill_heavy(1)
+    emit("readpath.numa.remote_fill.near", t_nearf / 1000,
+         f"fills={c_nearf.pmem_fills} remote={c_nearf.remote_fills}")
+    emit("readpath.numa.remote_fill.far", t_farf / 1000,
+         f"fills={c_farf.pmem_fills} remote={c_farf.remote_fills}")
+    ok &= check("readpath: far-fill-heavy charged >= 2x the near run",
+                t_farf >= 2.0 * t_nearf, f"{t_farf / t_nearf:.2f}x")
+
+    # -------- NUMA: far-first eviction on a mixed-socket sweep ---------
+    e_blind, pen_blind, c_blind, hit_blind = numa_sweep(numa_evict=False)
+    e_far, pen_far, c_far, hit_far = numa_sweep(numa_evict=True)
+    emit("readpath.numa.sweep.socket_blind", e_blind / 1000,
+         f"hot_hit={hit_blind:.2f} remote={c_blind.remote_fills}")
+    emit("readpath.numa.sweep.far_first", e_far / 1000,
+         f"hot_hit={hit_far:.2f} remote={c_far.remote_fills}")
+    recovered = (e_blind - e_far) / pen_blind
+    ok &= check("readpath: far-first recovers >= 25% of the remote penalty",
+                recovered >= 0.25, f"{recovered:.0%} of "
+                f"{pen_blind / 1000:.1f}us penalty")
+
+    # -------- scan resistance: probationary segment vs the churn -------
+    hit_free, t_free = scan_resist(0.25, with_scan=False)
+    hit_split, t_split = scan_resist(0.25)
+    hit_churn, t_churn = scan_resist(1.0)
+    emit("readpath.scan_resist.scan_free", t_free / 1000,
+         f"hot_hit={hit_free:.2f}")
+    emit("readpath.scan_resist.frac25", t_split / 1000,
+         f"hot_hit={hit_split:.2f}")
+    emit("readpath.scan_resist.frac100", t_churn / 1000,
+         f"hot_hit={hit_churn:.2f}")
+    ok &= check("readpath: scan_frac keeps hot-set hits within 5% of "
+                "scan-free", hit_split >= hit_free - 0.05,
+                f"{hit_split:.2f} vs scan-free {hit_free:.2f}")
+    ok &= check("readpath: the full-quota clock does churn under the scan",
+                hit_churn <= hit_free - 0.25,
+                f"{hit_churn:.2f} vs scan-free {hit_free:.2f}")
     return ok
 
 

@@ -28,11 +28,35 @@ Design points, each load-bearing for crash safety:
   bit-identical with the cache enabled, disabled, or sized to zero
   (``tests/test_crash_corpus.py`` replays the same op stream under
   ``frames=0`` and a warm cache and asserts identical recovered state).
-* **Clock eviction, clean-first.** Frames are recycled by a clock
-  (second-chance) sweep that prefers clean victims; a dirty victim is
-  not flushed synchronously but *parked* in the flush queue's pending
-  set (still DRAM, still coalescing), where the next epoch drain picks
-  it up — eviction never adds a durability point.
+* **Clock eviction, far-first then clean-first.** Frames are recycled
+  by a clock (second-chance) sweep. Every frame records the NUMA
+  socket it was *filled from* (the PMem slot's home-socket tag, or the
+  SSD arena's region home); under pressure the sweep prefers far-filled
+  frames, then clean ones — far-clean → near-clean → far-dirty →
+  near-dirty, pin/ref rules unchanged. A dirty victim is not flushed
+  synchronously but *parked* in the flush queue's pending set (still
+  DRAM, still coalescing), where the next epoch drain picks it up —
+  eviction never adds a durability point. On a single-socket pool every
+  fill is near and the sweep is bit-identical to the socket-blind
+  clock (``numa_evict=False`` restores that order for A/B).
+* **Remote fills are charged the Izraelevitz read rung.** A fill whose
+  source tier lives on a far socket crosses the interconnect; the
+  counts land in ``CacheStats.remote_fills`` / ``remote_fill_bytes``
+  and both ``readpath_time_ns`` and ``engine_time_ns(cache=…)`` add the
+  ``numa_remote_block_mult`` surcharge (arXiv:1903.05714). Zero remote
+  fills add exactly 0.0 — an all-near run is bit-identical to the
+  pre-NUMA model.
+* **2Q scan resistance inside an owner's quota.** Frames enter a
+  *probationary* segment and graduate to *protected* on re-reference
+  (Götze arXiv:2001.02172). For a quota'd owner whose probationary
+  frames have reached ``scan_frac`` of the quota, the quota sweep
+  recycles probationary frames only — one sequential scan cycles the
+  probationary fraction of that owner's budget and leaves its
+  re-referenced hot set resident. ``scan_frac=1.0`` (the default)
+  disables the split; the knob is fixed at ``pool.cache(scan_frac=)``
+  construction like ``admit_k`` and can be overridden per owner
+  (:meth:`BufferManager.set_scan_frac` — the serve layer's per-tenant
+  handle).
 * **Pin/unpin.** A pinned frame is never clock-evicted, and the spill
   scheduler treats pinned pages as protected during ``ensure_slots``,
   so a spill epoch cannot evict the PMem slot of a page whose frame is
@@ -88,6 +112,11 @@ class CacheStats:
     #: frame fills from the SSD spill tier (checksum-verified map reads)
     ssd_fills: int = 0
     ssd_fill_bytes: int = 0
+    #: fills (PMem or SSD) whose source tier is homed on a far NUMA
+    #: socket — a subset of pmem_fills/ssd_fills; the cost models add
+    #: the Izraelevitz remote read surcharge for exactly these
+    remote_fills: int = 0
+    remote_fill_bytes: int = 0
     #: fresh pages materialized as zero frames (resident in no tier yet)
     fresh_pages: int = 0
     #: SSD→PMem promotions the k-touch policy admitted
@@ -98,6 +127,11 @@ class CacheStats:
     evictions_clean: int = 0
     #: dirty frames parked in the flush queue by the clock sweep
     evictions_dirty: int = 0
+    #: installs that overshot an owner's quota because every one of that
+    #: owner's frames was pinned (the best-effort escape hatch of
+    #: :meth:`BufferManager.set_quota`) — the serve layer's isolation
+    #: claims are auditable against this
+    quota_overflows: int = 0
     #: dirty frames pushed through a write-back epoch
     writebacks: int = 0
 
@@ -130,9 +164,11 @@ class CacheStats:
 class _Frame:
     """One DRAM frame: a page image plus its cache state."""
 
-    __slots__ = ("owner", "pid", "data", "dirty", "pins", "ref")
+    __slots__ = ("owner", "pid", "data", "dirty", "pins", "ref",
+                 "socket", "protected")
 
-    def __init__(self, owner: str, pid: int, data: np.ndarray) -> None:
+    def __init__(self, owner: str, pid: int, data: np.ndarray,
+                 socket: int = 0) -> None:
         self.owner = owner
         self.pid = pid
         self.data = data
@@ -141,6 +177,14 @@ class _Frame:
         self.dirty: Optional[Set[int]] = set()
         self.pins = 0
         self.ref = False
+        #: NUMA socket the frame was filled from (the source tier's
+        #: home-socket tag; DRAM-born content — writes, restores,
+        #: fresh pages — carries the cache's local socket)
+        self.socket = int(socket)
+        #: 2Q segment: frames install probationary and graduate on
+        #: re-reference; a quota'd owner's scan recycles only its
+        #: probationary fraction (see ``scan_frac``)
+        self.protected = False
 
     @property
     def is_dirty(self) -> bool:
@@ -151,6 +195,7 @@ class BufferManager:
     """Bounded DRAM frame pool fronting the three-tier page read path."""
 
     def __init__(self, pool=None, *, frames: int = 64, admit_k: int = 2,
+                 scan_frac: float = 1.0, local_socket: int = 0,
                  cost_model: PMemCostModel = COST_MODEL,
                  ssd_cost: SSDCostModel = SSD_COST_MODEL) -> None:
         """Create a manager with ``frames`` DRAM frames.
@@ -166,6 +211,19 @@ class BufferManager:
                 promotion behavior is identical to a warm cache.
             admit_k: touches before an SSD-resident page is promoted
                 into a PMem slot (1 = the legacy promote-on-first-access).
+            scan_frac: probationary fraction of a quota'd owner's frame
+                budget (2Q scan resistance). Once an owner's
+                probationary frames reach ``scan_frac`` of its quota,
+                the quota sweep recycles probationary frames only, so
+                one sequential scan cycles that fraction of the budget
+                and leaves the re-referenced (protected) hot set
+                resident. ``1.0`` disables the split (the legacy
+                clean-first quota sweep). Overridable per owner via
+                :meth:`set_scan_frac`.
+            local_socket: the NUMA socket the cache's consumers fault
+                from; fills sourced from a region homed elsewhere count
+                as ``remote_fills`` and pay the Izraelevitz read
+                surcharge. Single-socket pools leave this at 0.
             cost_model: converts :class:`CacheStats` deltas and PMem op
                 counts to modeled time.
             ssd_cost: flash constants for the SSD rungs of the ladder.
@@ -173,6 +231,15 @@ class BufferManager:
         self.pool = pool
         self.capacity = max(0, int(frames))
         self.admit_k = max(1, int(admit_k))
+        if not 0.0 < float(scan_frac) <= 1.0:
+            raise ValueError("scan_frac must be in (0, 1]")
+        self.scan_frac = float(scan_frac)
+        self.local_socket = int(local_socket)
+        #: socket-aware eviction order (far-clean → near-clean →
+        #: far-dirty → near-dirty). ``False`` restores the socket-blind
+        #: clean-first clock — the A/B knob ``benchmarks/readpath.py``
+        #: uses to price what far-first eviction recovers.
+        self.numa_evict = True
         self.cost_model = cost_model
         self.ssd_cost = ssd_cost
         self.stats = CacheStats()
@@ -199,26 +266,35 @@ class BufferManager:
         self._owner_frames: Dict[str, int] = {}
         #: opt-in per-owner frame ceilings (absent = share freely)
         self._quota: Dict[str, int] = {}
+        #: per-owner scan_frac overrides (absent = the cache-wide value)
+        self._scan_frac: Dict[str, float] = {}
 
     # ------------------------------------------------------------- wiring
 
     @staticmethod
     def for_pool(pool, *, frames: Optional[int] = None,
                  admit_k: Optional[int] = None,
+                 scan_frac: Optional[float] = None,
                  default_frames: Optional[int] = None,
-                 default_admit_k: Optional[int] = None) -> "BufferManager":
+                 default_admit_k: Optional[int] = None,
+                 default_scan_frac: Optional[float] = None
+                 ) -> "BufferManager":
         """Consumer-side get-or-create for ``pool.cache`` distinguishing
         *explicit* configuration from *defaults*: an explicit ``frames``
-        / ``admit_k`` is verified against a pre-existing pool cache (a
-        conflict raises, per :meth:`repro.pool.Pool.cache`); ``None``
-        reuses an existing cache quietly, and only on a cache-less pool
-        falls back to ``default_frames`` / ``default_admit_k`` (e.g.
-        PersistentKV's one-frame-per-page buffer pool)."""
+        / ``admit_k`` / ``scan_frac`` is verified against a pre-existing
+        pool cache (a conflict raises, per :meth:`repro.pool.Pool.cache`);
+        ``None`` reuses an existing cache quietly, and only on a
+        cache-less pool falls back to ``default_frames`` /
+        ``default_admit_k`` / ``default_scan_frac`` (e.g. PersistentKV's
+        one-frame-per-page buffer pool)."""
         if pool._cache is None:
             return pool.cache(
                 frames=frames if frames is not None else default_frames,
-                admit_k=admit_k if admit_k is not None else default_admit_k)
-        return pool.cache(frames=frames, admit_k=admit_k)
+                admit_k=admit_k if admit_k is not None else default_admit_k,
+                scan_frac=(scan_frac if scan_frac is not None
+                           else default_scan_frac))
+        return pool.cache(frames=frames, admit_k=admit_k,
+                          scan_frac=scan_frac)
 
     def attach_pages(self, pages, *, flushq=None, spill=None,
                      name: Optional[str] = None) -> None:
@@ -317,6 +393,24 @@ class BufferManager:
         """The owner's frame cap, or ``None`` if uncapped."""
         return self._quota.get(owner)
 
+    def set_scan_frac(self, owner: str, frac: Optional[float]) -> None:
+        """Override one owner's probationary fraction (``None`` reverts
+        to the cache-wide ``scan_frac``). Only meaningful together with
+        a quota (the 2Q split sizes against the owner's budget); the
+        serve layer exposes it per tenant
+        (:meth:`ServeFrontend.set_cache_scan_frac
+        <repro.serve.frontend.ServeFrontend.set_cache_scan_frac>`)."""
+        if frac is None:
+            self._scan_frac.pop(owner, None)
+            return
+        if not 0.0 < float(frac) <= 1.0:
+            raise ValueError("scan_frac must be in (0, 1]")
+        self._scan_frac[owner] = float(frac)
+
+    def scan_frac_of(self, owner: str) -> float:
+        """The probationary fraction in force for one owner."""
+        return self._scan_frac.get(owner, self.scan_frac)
+
     # -------------------------------------------------------- admission
 
     def _admit(self, owner: str, pid: int) -> bool:
@@ -346,43 +440,97 @@ class BufferManager:
 
     # ------------------------------------------------------- frame pool
 
-    def _install(self, key: Tuple[str, int], data: np.ndarray) -> _Frame:
-        """Install a page image as a frame. An at-quota owner first
-        evicts one of its *own* frames (see :meth:`set_quota`); the
-        shared pool clock-evicts only when globally full."""
+    def _install(self, key: Tuple[str, int], data: np.ndarray,
+                 socket: Optional[int] = None) -> _Frame:
+        """Install a page image as a frame (probationary — it graduates
+        to protected on re-reference). An at-quota owner first evicts
+        one of its *own* frames (see :meth:`set_quota`); the shared
+        pool clock-evicts only when globally full. ``socket`` is the
+        fill-source socket tag (``None`` = DRAM-born content, tagged
+        local)."""
         assert self.capacity > 0
         owner = key[0]
         q = self._quota.get(owner)
         if q is not None and self._owner_frames.get(owner, 0) >= q:
-            self._evict_frame(owner_only=owner)   # best-effort (pins)
+            # best-effort: every frame of this owner may be pinned — the
+            # install then overflows the cap (pins are transient), but
+            # audibly: quota_overflows is the serve layer's isolation
+            # escape-hatch counter
+            if not self._evict_frame(owner_only=owner):
+                self._acct(owner, "quota_overflows")
         if len(self._frames) >= self.capacity:
             self._evict_frame()
-        f = _Frame(owner, key[1], data)
+        f = _Frame(owner, key[1], data,
+                   socket=self.local_socket if socket is None else socket)
         self._frames[key] = f
         self._ring.append(key)
         self._owner_frames[owner] = self._owner_frames.get(owner, 0) + 1
         return f
 
+    def _probation_due(self, owner: str) -> bool:
+        """Whether the owner's probationary segment has reached its
+        ``scan_frac`` share of the quota — the quota sweep then recycles
+        probationary frames only (2Q: a scan cycles inside its own
+        fraction instead of churning the protected hot set)."""
+        q = self._quota.get(owner)
+        if q is None or q <= 0:
+            return False
+        cap = max(1, int(self.scan_frac_of(owner) * q))
+        if cap >= q:
+            return False          # scan_frac=1.0: the split is off
+        nprob = sum(1 for k, f in self._frames.items()
+                    if k[0] == owner and not f.protected)
+        return nprob >= cap
+
     def _evict_frame(self, owner_only: Optional[str] = None) -> bool:
-        """Clock sweep: skip pinned and referenced frames (clearing ref
-        bits), prefer clean victims; take a dirty one — parking its
-        image in the flush queue — only when no clean frame is left.
-        ``owner_only`` restricts the sweep to one owner's frames (quota
-        enforcement; other owners' ref bits are left untouched) and
-        returns ``False`` instead of raising when every candidate is
-        pinned."""
-        for prefer_clean in (True, False):
+        """Evict one frame. ``owner_only`` restricts the sweep to one
+        owner's frames (quota enforcement; other owners' ref bits are
+        left untouched) and returns ``False`` instead of raising when
+        every candidate is pinned. A quota'd owner whose probationary
+        segment is full recycles probationary frames first (2Q)."""
+        if owner_only is not None and self._probation_due(owner_only):
+            if self._sweep(owner_only, probation_only=True):
+                return True
+        if self._sweep(owner_only):
+            return True
+        if owner_only is not None:
+            return False
+        raise RuntimeError(
+            f"buffer manager: all {self.capacity} frames are pinned")
+
+    def _sweep(self, owner_only: Optional[str] = None, *,
+               probation_only: bool = False) -> bool:
+        """Clock sweep in far-first, clean-first preference order:
+        far-clean → near-clean → far-dirty → near-dirty (far = the
+        frame's fill socket differs from ``local_socket``). Pinned and
+        referenced frames are skipped (ref bits cleared on the pass that
+        considers them); a dirty victim parks its image in the flush
+        queue. With no far-filled frames — every single-socket pool —
+        the far passes are no-ops and the sweep is bit-identical to the
+        socket-blind clean-first clock (as it is with
+        ``numa_evict=False``)."""
+        local = self.local_socket
+        has_far = self.numa_evict and any(
+            f.socket != local for f in self._frames.values())
+        for require_clean, require_far in ((True, True), (True, False),
+                                           (False, True), (False, False)):
+            if require_far and not has_far:
+                continue
             swept = 0
             limit = 2 * len(self._ring)   # ref bits all clear after one lap
             while self._ring and swept < limit:
                 if self._hand >= len(self._ring):
                     self._hand = 0
                 key = self._ring[self._hand]
-                if owner_only is not None and key[0] != owner_only:
+                f = self._frames[key]
+                # candidacy filters leave ref bits alone — a pass that
+                # cannot take a frame must not spend its second chance
+                if ((owner_only is not None and key[0] != owner_only)
+                        or (probation_only and f.protected)
+                        or (require_far and f.socket == local)):
                     self._hand += 1
                     swept += 1
                     continue
-                f = self._frames[key]
                 if f.pins > 0:
                     self._hand += 1
                     swept += 1
@@ -392,16 +540,13 @@ class BufferManager:
                     self._hand += 1
                     swept += 1
                     continue
-                if prefer_clean and f.is_dirty:
+                if require_clean and f.is_dirty:
                     self._hand += 1
                     swept += 1
                     continue
                 self._drop_frame(key, park_dirty=True)
                 return True
-        if owner_only is not None:
-            return False
-        raise RuntimeError(
-            f"buffer manager: all {self.capacity} frames are pinned")
+        return False
 
     def _drop_frame(self, key: Tuple[str, int], *, park_dirty: bool) -> None:
         f = self._frames.pop(key)
@@ -443,8 +588,11 @@ class BufferManager:
         return "pmem" if pid in store.table else None
 
     def _fill(self, owner: str, store, pid: int, *,
-              for_write: bool) -> np.ndarray:
+              for_write: bool) -> Tuple[np.ndarray, int]:
         """Read the page from its resident tier (the frame-fill path).
+        Returns ``(data, socket)`` — the source tier's home socket tags
+        the frame and, when it differs from ``local_socket``, the fill
+        counts as remote (the Izraelevitz read surcharge).
 
         Never promotes: read faults had their admission decision taken by
         :meth:`_promote_if_due` before the fill (so an SSD fill here is by
@@ -454,20 +602,30 @@ class BufferManager:
         tier = self._residency(owner, store, pid)
         if tier == "pmem":
             data, _pvn = store.fill_page(pid)
+            slot, _ = store.table[pid]
+            sock = store.pmem.home_socket(store.layout.slot_off(slot))
             self._acct(owner, "pmem_fills")
             self._acct(owner, "pmem_fill_bytes", data.size)
-            return data
+            if sock != self.local_socket:
+                self._acct(owner, "remote_fills")
+                self._acct(owner, "remote_fill_bytes", data.size)
+            return data, sock
         if tier == "ssd":
-            data = sp.read_page(store, pid, promote=False)
+            data = np.asarray(sp.read_page(store, pid, promote=False))
+            sock = sp.fill_socket(store, pid)
             self._acct(owner, "ssd_fills")
             self._acct(owner, "ssd_fill_bytes", data.size)
             if not for_write:
                 self._acct(owner, "admissions_deferred")
-            return np.asarray(data)
+            if sock != self.local_socket:
+                self._acct(owner, "remote_fills")
+                self._acct(owner, "remote_fill_bytes", data.size)
+            return data, sock
         if pid < 0 or pid >= store.layout.npages:
             raise KeyError(pid)
         self._acct(owner, "fresh_pages")
-        return np.zeros(store.layout.page_size, dtype=np.uint8)
+        return (np.zeros(store.layout.page_size, dtype=np.uint8),
+                self.local_socket)
 
     def _promote_if_due(self, owner: str, store, pid: int) -> None:
         """k-touch admission is a property of the *access stream*, not of
@@ -496,6 +654,7 @@ class BufferManager:
         f = self._frames.get(key)
         if f is not None:
             f.ref = True
+            f.protected = True   # 2Q: re-reference graduates the frame
             self._acct(owner, "dram_hits")
             self._acct(owner, "dram_hit_bytes", f.data.size)
             if pin:
@@ -517,10 +676,10 @@ class BufferManager:
             self._acct(owner, "dram_hits")
             self._acct(owner, "dram_hit_bytes", pend[0].size)
             return np.array(pend[0], copy=True)
-        data = self._fill(owner, store, pid, for_write=False)
+        data, sock = self._fill(owner, store, pid, for_write=False)
         if self.capacity == 0:
             return np.array(data, copy=True)
-        f = self._install(key, np.array(data, copy=True))
+        f = self._install(key, np.array(data, copy=True), socket=sock)
         if pin:
             f.pins += 1
         return np.array(f.data, copy=True)
@@ -563,6 +722,7 @@ class BufferManager:
                                  else sorted(parked[1]))
         else:
             f.data[:] = page
+            f.protected = True   # 2Q: re-reference graduates the frame
         f.ref = True
         self._mark_dirty(key, f, dirty_lines)
 
@@ -589,14 +749,16 @@ class BufferManager:
                 img[off : off + buf.size] = buf
                 fq.enqueue(pid, img, list(lines), copy=False, touch=False)
                 return
-            img = np.array(self._fill(owner, store, pid, for_write=True),
-                           copy=True)
+            img = np.array(
+                self._fill(owner, store, pid, for_write=True)[0], copy=True)
             img[off : off + buf.size] = buf
             fq.enqueue(pid, img, list(lines), copy=False, touch=False)
             return
         f = self._frames.get(key)
         if f is None:
             f = self._adopt_or_install(owner, key)
+        else:
+            f.protected = True   # 2Q: re-reference graduates the frame
         f.data[off : off + buf.size] = buf
         f.ref = True
         self._mark_dirty(key, f, list(lines))
@@ -615,8 +777,8 @@ class BufferManager:
             self._mark_dirty(key, f,
                              None if dirty is None else sorted(dirty))
             return f
-        data = self._fill(owner, store, key[1], for_write=True)
-        return self._install(key, np.array(data, copy=True))
+        data, sock = self._fill(owner, store, key[1], for_write=True)
+        return self._install(key, np.array(data, copy=True), socket=sock)
 
     # ------------------------------------------------------ pin / unpin
 
@@ -689,12 +851,22 @@ class BufferManager:
         return report
 
     def invalidate(self, store=None) -> None:
-        """Drop every frame (and dirty marking) of a region — restore
-        paths that rewrite the page table out from under the cache.
-        Admission touch counts survive: they describe the access stream,
-        not frame residency."""
+        """Drop every DRAM image of a region — frames (and their dirty
+        marking) *and* parked pending images in the flush queue — for
+        restore paths that rewrite the page table out from under the
+        cache. A surviving parked image would be flushed by the next
+        epoch drain, resurrecting pre-restore bytes over the restored
+        pages. Refuses to run while any of the region's frames is
+        pinned (like :meth:`drop`): discarding a pinned frame would
+        break the pin contract mid-epoch. Admission touch counts
+        survive: they describe the access stream, not frame residency."""
         owner, _ = self._resolve(store)
-        for key in [k for k in self._frames if k[0] == owner]:
+        keys = [k for k in self._frames if k[0] == owner]
+        pinned = [k[1] for k in keys if self._frames[k].pins > 0]
+        if pinned:
+            raise ValueError(
+                f"cannot invalidate {owner!r}: pages {pinned} are pinned")
+        for key in keys:
             self._frames.pop(key)
             idx = self._ring.index(key)
             del self._ring[idx]
@@ -702,6 +874,9 @@ class BufferManager:
                 self._hand -= 1
             self._dirty_order.pop(key, None)
             self._owner_frames[owner] -= 1
+        fq = self._fq[owner]
+        for pid in list(fq.pending_pids()):
+            fq.pop_pending(pid)
 
     def drop(self, pid: int, store=None) -> None:
         """Discard one page's DRAM state without flushing it: its frame
@@ -731,14 +906,18 @@ class BufferManager:
 
     def install(self, pid: int, page: np.ndarray, store=None) -> None:
         """Install a *clean* frame holding ``page`` (restore/adopt paths
-        seeding snapshots). No touch, no dirty marking."""
-        if self.capacity == 0:
-            return
+        seeding snapshots). No touch, no dirty marking. Supersedes any
+        image parked in the flush queue's pending set, like :meth:`put`
+        — a restore's content must win over a pre-restore parked copy,
+        at ``frames=0`` too."""
         owner, store = self._resolve(store)
         page = np.asarray(page, dtype=np.uint8).ravel()
         if page.size != store.layout.page_size:
             raise ValueError("page size mismatch")
         key = (owner, int(pid))
+        self._fq[owner].pop_pending(int(pid))
+        if self.capacity == 0:
+            return
         f = self._frames.get(key)
         if f is None:
             f = self._install(key, np.array(page, copy=True))

@@ -366,12 +366,28 @@ class PMemCostModel:
         latency (3.2× DRAM) plus transfer at PMem load bandwidth."""
         return self.pmem_read_time_ns(1, nbytes)
 
+    def remote_fill_ns(self, fills: int, nbytes: int) -> float:
+        """Far-socket surcharge for cache fills whose source tier is
+        homed on a remote NUMA node (``CacheStats.remote_fills`` /
+        ``remote_fill_bytes``): the fill's interconnect crossing costs
+        ``numa_remote_block_mult``× the PMem read rung (Izraelevitz,
+        arXiv:1903.05714), so the surcharge is the (mult − 1) excess on
+        top of the base fill already charged by :meth:`readpath_time_ns`.
+        Exactly 0.0 at zero remote counts — an all-near run is
+        bit-identical to the pre-NUMA model."""
+        if not fills and not nbytes:
+            return 0.0
+        return ((self.numa_remote_block_mult - 1.0)
+                * self.pmem_read_time_ns(fills, nbytes))
+
     def readpath_time_ns(self, cache, *, ssd: Optional["SSDCostModel"] = None
                          ) -> float:
         """Modeled read-path time of a ``repro.cache.CacheStats`` delta
         against the Fig. 3 latency ladder: DRAM hits at DRAM
         latency/bandwidth, PMem frame fills at the 3.2× rung, SSD fills
-        per the flash model (``ssd`` defaults to ``SSD_COST_MODEL``).
+        per the flash model (``ssd`` defaults to ``SSD_COST_MODEL``),
+        plus the :meth:`remote_fill_ns` far-socket surcharge for fills
+        sourced from a remote-homed tier.
         Only *read* traffic is charged here — promotion/eviction writes
         are already counted where they execute (``PMemStats`` lane
         work, ``SSDStats`` programs) and costed by :meth:`engine_time_ns`
@@ -381,7 +397,9 @@ class PMemCostModel:
                                        cache.dram_hit_bytes)
                 + self.pmem_read_time_ns(cache.pmem_fills,
                                          cache.pmem_fill_bytes)
-                + ssd.read_time_ns(cache.ssd_fills, cache.ssd_fill_bytes))
+                + ssd.read_time_ns(cache.ssd_fills, cache.ssd_fill_bytes)
+                + self.remote_fill_ns(cache.remote_fills,
+                                      cache.remote_fill_bytes))
 
     def scan_read_ns(self, nbytes: int) -> float:
         """Device time of streaming ``nbytes`` from HBM at the
@@ -432,7 +450,9 @@ class PMemCostModel:
         served at the Fig. 3 DRAM rung and added to the serialized
         remainder (tier *fills* are not added here — they already appear
         in the PMem/SSD op counts this method and
-        :meth:`SSDCostModel.time_ns` charge).
+        :meth:`SSDCostModel.time_ns` charge). Fills sourced from a
+        far-homed tier add their :meth:`remote_fill_ns` interconnect
+        surcharge on top — zero remote counts add exactly 0.0.
 
         ``scan_read_bytes`` is the save-path scan's HBM traffic (device
         bytes the flush kernels read to find/pack/checksum dirty blocks),
@@ -450,6 +470,11 @@ class PMemCostModel:
         if cache is not None:
             dram_ns = self.dram.read_time_ns(cache.dram_hits,
                                              cache.dram_hit_bytes)
+            # far-homed fills cross the interconnect: the (mult − 1)
+            # excess over the base fill (which the PMem/SSD op counts
+            # already carry) serializes with the consumer
+            dram_ns += self.remote_fill_ns(cache.remote_fills,
+                                           cache.remote_fill_bytes)
         if scan_read_bytes:
             dram_ns += self.scan_read_ns(scan_read_bytes)
         if cluster_transfer_bytes:

@@ -290,8 +290,8 @@ class RegionDirectory:
         return rec
 
     def allocate_ssd(self, name: str, length: int, ssd_size: int,
-                     meta: Tuple[int, int, int, int] = (0, 0, 0, 0)
-                     ) -> RegionRecord:
+                     meta: Tuple[int, int, int, int] = (0, 0, 0, 0),
+                     socket: int = 0) -> RegionRecord:
         """Allocate a named range of the pool's SSD address space.
 
         The binding (name → SSD byte range) is committed in this PMem
@@ -307,7 +307,21 @@ class RegionDirectory:
             ssd_size: capacity of the attached SSD device — the bump
                 allocation is bounds-checked against it.
             meta: four consumer-defined ints stored in the entry.
+            socket: the region's NUMA home (the socket whose I/O complex
+                the device hangs off) — same meta[3] packing as
+                :meth:`allocate`; a performance hint only. No
+                ``set_home`` mapping: SSD bases are device-space offsets,
+                not PMem addresses.
         """
+        socket = int(socket)
+        if not 0 <= socket < max(1, self.pmem.sockets):
+            raise ValueError(
+                f"socket {socket} outside the pool's {self.pmem.sockets}"
+                f"-socket topology")
+        if meta[3] >> _SOCKET_SHIFT:
+            raise ValueError("meta[3] high bits are reserved for the socket tag")
+        meta = (meta[0], meta[1], meta[2],
+                (meta[3] & 0xFFFF) | (socket << _SOCKET_SHIFT))
         slot = self._claim_slot(name, length)
         base = self.ssd_data_end
         if base + length > ssd_size:

@@ -122,6 +122,10 @@ class KVConfig:
     #: touches before an SSD-resident page is promoted back into a PMem
     #: slot on read (k-touch admission; 1 = promote on first access)
     cache_admit_k: int = 2
+    #: 2Q probationary fraction of a quota'd owner's frame budget
+    #: (scan resistance; 1.0 disables the split — see
+    #: ``pool.cache(scan_frac=)``)
+    cache_scan_frac: float = 1.0
 
     @property
     def recs_per_page(self) -> int:
@@ -221,7 +225,10 @@ class PersistentKV:
             pmpool, frames=cfg.cache_frames,
             admit_k=None if cfg.cache_admit_k == KVConfig.cache_admit_k
             else cfg.cache_admit_k,
-            default_frames=cfg.npages, default_admit_k=cfg.cache_admit_k)
+            scan_frac=None if cfg.cache_scan_frac == KVConfig.cache_scan_frac
+            else cfg.cache_scan_frac,
+            default_frames=cfg.npages, default_admit_k=cfg.cache_admit_k,
+            default_scan_frac=cfg.cache_scan_frac)
         self.cache.attach_pages(pages, flushq=self._fq, spill=self._spill)
         if recover:
             self._recover_state()

@@ -434,7 +434,8 @@ class Pool:
         return self._placer
 
     def cache(self, frames: Optional[int] = None,
-              admit_k: Optional[int] = None):
+              admit_k: Optional[int] = None,
+              scan_frac: Optional[float] = None):
         """The pool's DRAM :class:`~repro.cache.BufferManager` (cached,
         like :meth:`placer`): one bounded frame pool fronting every page
         region that registers with it
@@ -442,16 +443,21 @@ class Pool:
         read/write path across DRAM frames, PMem slots and the SSD
         spill tier. ``frames`` bounds the pool (0 disables caching;
         reads/writes pass straight through to the tiers); ``admit_k``
-        is the k-touch SSD→PMem promotion threshold. Defaults on first
-        construction: 64 frames, ``admit_k=2``. The first call fixes
-        the configuration; a later call with a *different* explicit
-        value raises (consumers sharing the pool share the cache)."""
+        is the k-touch SSD→PMem promotion threshold; ``scan_frac`` is
+        the 2Q probationary fraction of a quota'd owner's budget (1.0
+        disables scan resistance; per-owner overrides via
+        :meth:`~repro.cache.BufferManager.set_scan_frac`). Defaults on
+        first construction: 64 frames, ``admit_k=2``, ``scan_frac=1.0``.
+        The first call fixes the configuration; a later call with a
+        *different* explicit value raises (consumers sharing the pool
+        share the cache)."""
         if self._cache is None:
             from repro.cache import BufferManager
             self._cache = BufferManager(
                 self,
                 frames=64 if frames is None else int(frames),
-                admit_k=2 if admit_k is None else int(admit_k))
+                admit_k=2 if admit_k is None else int(admit_k),
+                scan_frac=1.0 if scan_frac is None else float(scan_frac))
             return self._cache
         if frames is not None and int(frames) != self._cache.capacity:
             raise ValueError(
@@ -463,6 +469,11 @@ class Pool:
                 f"pool cache admits at k={self._cache.admit_k}, caller "
                 f"asked for {admit_k} — the admission policy is fixed at "
                 f"first construction")
+        if scan_frac is not None and float(scan_frac) != self._cache.scan_frac:
+            raise ValueError(
+                f"pool cache runs scan_frac={self._cache.scan_frac}, caller "
+                f"asked for {scan_frac} — the 2Q split is fixed at first "
+                f"construction (override per owner via set_scan_frac)")
         return self._cache
 
     def regions(self) -> Dict[str, RegionRecord]:
@@ -734,14 +745,19 @@ class Pool:
         self.ssd_dev = ssd
         return ssd
 
-    def ssd_region(self, name: str, nbytes: Optional[int] = None
-                   ) -> SSDRegionHandle:
+    def ssd_region(self, name: str, nbytes: Optional[int] = None,
+                   socket: Optional[int] = None) -> SSDRegionHandle:
         """Open-or-create a named SSD-backed region (``KIND_SSD``).
 
         Requires an attached device (:meth:`attach_ssd`). Creation
         bump-allocates ``nbytes`` of the SSD address space and commits the
         binding as a single-line directory entry; the SSD bytes are not
-        zeroed (consumers gate reads on their own validity metadata)."""
+        zeroed (consumers gate reads on their own validity metadata).
+        ``socket`` tags the region's NUMA home (the socket whose I/O
+        complex the device hangs off — the cache's fill-socket
+        accounting reads it back); like :meth:`log` and :meth:`pages`,
+        home sockets are fixed at creation and a conflicting open
+        raises."""
         if self.ssd_dev is None:
             raise RuntimeError(
                 f"SSD region {name!r} needs a device: call "
@@ -752,12 +768,18 @@ class Pool:
                 raise ValueError(f"creating SSD region {name!r} requires "
                                  f"nbytes=")
             rec = self.directory.allocate_ssd(name, int(nbytes),
-                                              self.ssd_dev.size)
+                                              self.ssd_dev.size,
+                                              socket=socket or 0)
         else:
             rec = self.directory.require(name, KIND_SSD)
             if nbytes is not None and nbytes > rec.length:
                 raise ValueError(f"SSD region {name!r} holds {rec.length} B, "
                                  f"wanted {nbytes}")
+            if socket is not None and socket != rec.socket:
+                raise ValueError(
+                    f"SSD region {name!r} lives on socket {rec.socket}, "
+                    f"caller asked for {socket} — home sockets are fixed "
+                    f"at creation")
         return SSDRegionHandle(self, rec, self.ssd_dev)
 
     # --------------------------------------------------- typed consumers

@@ -200,6 +200,16 @@ class ServeFrontend:
         region; ``None`` lifts the cap)."""
         self.cache.set_quota(self.cache_owner(tenant), frames)
 
+    def set_cache_scan_frac(self, tenant: str, frac: Optional[float]) -> None:
+        """Override one tenant's 2Q probationary fraction
+        (:meth:`repro.cache.BufferManager.set_scan_frac` on its pages
+        region; ``None`` reverts to the pool cache's ``scan_frac``).
+        Only meaningful with a :meth:`set_cache_quota` cap — the split
+        sizes against the tenant's budget. A scan-heavy tenant set to
+        e.g. ``0.25`` cycles a quarter of its quota instead of churning
+        its own hot set."""
+        self.cache.set_scan_frac(self.cache_owner(tenant), frac)
+
     def committed_puts(self, tenant: str) -> int:
         """Puts of this tenant known durably committed (advanced after
         each of its batches' WAL commit — a crash-corpus lower bound on

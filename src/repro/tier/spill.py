@@ -106,6 +106,7 @@ class SpillScheduler:
                  arena_bytes: int = DEFAULT_ARENA_BYTES,
                  map_capacity: int = 1 << 16,
                  keep_generations: int = 8,
+                 arena_socket: int = 0,
                  ssd_cost: SSDCostModel = SSD_COST_MODEL) -> None:
         """Open-or-create the scheduler's durable state on ``pool``.
 
@@ -129,6 +130,10 @@ class SpillScheduler:
                 *correctness* tier for a generation is always the
                 watermark, this only bounds how far back the SSD archive
                 reaches.
+            arena_socket: NUMA home socket for arenas this scheduler
+                *creates* (existing arenas keep their directory-recorded
+                home). The cache's fill-socket accounting reads it back
+                via :meth:`fill_socket`.
             ssd_cost: converts the device's op counts to modeled time.
         """
         self.pool = pool
@@ -143,6 +148,7 @@ class SpillScheduler:
         self.low_watermark = float(low_watermark)
         self.arena_bytes = int(arena_bytes)
         self.keep_generations = int(keep_generations)
+        self.arena_socket = int(arena_socket)
         self.ssd_cost = ssd_cost
         self.stats = SpillStats()
         #: test-only failpoint hook: called with a protocol point name;
@@ -395,7 +401,7 @@ class SpillScheduler:
                 return off
         size = max(self.arena_bytes, nbytes)
         arena = self.pool.ssd_region(f"{self.name}.sx{len(self._arenas)}",
-                                     nbytes=size)
+                                     nbytes=size, socket=self.arena_socket)
         self._arenas.append(arena)
         off = arena.base
         self._bump = off + nbytes
@@ -485,6 +491,30 @@ class SpillScheduler:
                                    or store.table[pid][1] >= rec[2]):
             return "pmem"
         return "ssd" if rec is not None else None
+
+    def _arena_socket_of(self, off: int) -> int:
+        """Home socket of the arena covering an SSD extent offset (the
+        directory-recorded region home; 0 if no arena covers it)."""
+        for a in self._arenas:
+            if a.base <= off < a.base + a.length:
+                return a.record.socket
+        return 0
+
+    def fill_socket(self, store, pid: int) -> int:
+        """The NUMA home socket a cache fill for this page would read
+        from: the PMem slot's home-socket tag when PMem-resident, the
+        covering SSD arena's region home when spilled, 0 for pages in
+        neither tier. The buffer manager tags frames (and counts remote
+        fills) with this."""
+        owner = self._owner_of(store)
+        pid = int(pid)
+        tier = self.residency(store, pid)
+        if tier == "pmem":
+            slot, _ = store.table[pid]
+            return store.pmem.home_socket(store.layout.slot_off(slot))
+        if tier == "ssd":
+            return self._arena_socket_of(self._page_map[(owner, pid)][0])
+        return 0
 
     def read_page(self, store, pid: int, *, promote: bool = True
                   ) -> np.ndarray:

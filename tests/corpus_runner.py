@@ -33,6 +33,7 @@ __all__ = [
     "run_generation_spill_crash",
     "run_page_spill_crash",
     "run_cache_crash",
+    "run_cache_restore_crash",
     "run_ckpt_fused_crash",
     "run_serve_crash",
     "run_cluster_crash",
@@ -339,6 +340,134 @@ def run_cache_crash(frames, admit_k, ops, epoch_every, crash_step, seed,
                 pass    # page in neither tier
         # correctness: every drained page recovers one of its two
         # legitimate images, never a torn mix, never anything older
+        for pid, img in flushed.items():
+            acceptable = {bytes(img)}
+            if pid in pending:
+                acceptable.add(bytes(pending[pid]))
+            assert recovered.get(pid) in acceptable, pid
+        return recovered
+
+    warm = one_run(frames)
+    cold = one_run(0)
+    assert warm == cold, \
+        "recovered state diverged between a warm cache and frames=0"
+
+
+def run_cache_restore_crash(frames, admit_k, epoch_every, n_evict_writes,
+                            crash_step, seed, pmem_prob, ssd_keep):
+    """Restore after dirty eviction: a write burst past the frame budget
+    clock-evicts dirty frames, PARKING their images in the flush queue
+    (still DRAM); then a snapshot restore invalidates the cache and
+    rewrites part of the page table. ``invalidate()`` must pop those
+    parked images along with the frames — a survivor would ride the next
+    epoch drain and flush pre-restore bytes over the restored (or the
+    untouched durable) pages. The crux is the pids the restore does NOT
+    rewrite: ``put()``/``install()`` supersede a parked image for the
+    pids they touch, so only the invalidate-time purge protects the
+    rest.
+
+    A crash failpoint is armed across the whole run (baseline drain,
+    restore drain, post-restore drain), and as in ``run_cache_crash``
+    the SAME scenario runs warm and with ``frames=0`` and must recover
+    IDENTICAL state — and no pid may EVER recover phase-B bytes, since
+    those images never legitimately left DRAM."""
+    npages, page_size, nslots = 16, 512, 4
+
+    def one_run(nframes):
+        pool = Pool.create(None, 1 << 21)
+        ssd = SSD(1 << 22)
+        pool.attach_ssd(ssd)
+        sp = SpillScheduler(pool, name="sp", map_capacity=1 << 13)
+        pages = pool.pages("heap", npages=npages, page_size=page_size,
+                           nslots=nslots)
+        sp.attach_pages(pages)
+        fq = FlushQueue(pages, lanes=2, spill=sp)
+        cache = BufferManager(pool, frames=nframes, admit_k=admit_k)
+        cache.attach_pages(pages, flushq=fq, spill=sp)
+
+        flushed = {}    # pid -> content of the last DRAINED epoch
+        pending = {}    # pid -> content dirty in DRAM (frame or queue)
+        stale = {}      # pid -> phase-B content discarded at restore
+        sp.failpoints = CrashAt(crash_step)
+        try:
+            # Phase A — durable baseline over every pid.
+            for pid in range(npages):
+                img = np.full(page_size, 1 + pid, dtype=np.uint8)
+                cache.put(pid, img)
+                pending[pid] = img
+                if (pid + 1) % epoch_every == 0:
+                    cache.writeback()
+                    flushed.update(pending)
+                    pending.clear()
+            cache.writeback()
+            flushed.update(pending)
+            pending.clear()
+
+            # Phase B — dirty burst past the frame budget. Clock-evicted
+            # dirty frames park in the flush queue; nothing drains.
+            for i in range(n_evict_writes):
+                pid = i % npages
+                img = np.full(page_size, 100 + pid, dtype=np.uint8)
+                cache.put(pid, img)
+                pending[pid] = img
+
+            # Restore — drop ALL DRAM state (frames AND parked images),
+            # rewrite the lower half of the page table from a snapshot,
+            # warm two upper pids with their still-durable baseline, and
+            # leave the REST of the upper half untouched: for those pids
+            # no put/install supersedes the parked image, so only the
+            # invalidate-time purge stands between their phase-B bytes
+            # and the restore drain.
+            stale.update(pending)
+            pending.clear()
+            cache.invalidate()
+            for pid in range(npages // 2):
+                img = np.full(page_size, 200 + pid, dtype=np.uint8)
+                cache.put(pid, img)
+                pending[pid] = img
+            for pid in range(npages // 2, npages // 2 + 2):
+                cache.install(pid, np.full(page_size, 1 + pid,
+                                           dtype=np.uint8))
+            cache.writeback()
+            flushed.update(pending)
+            pending.clear()
+
+            # Phase C — post-restore writes, spanning both halves.
+            for pid in (1, 3, npages - 2):
+                img = np.full(page_size, 60 + pid, dtype=np.uint8)
+                cache.put(pid, img)
+                pending[pid] = img
+            cache.writeback()
+            flushed.update(pending)
+            pending.clear()
+        except SimCrash:
+            pass
+
+        rng = np.random.default_rng(seed)
+        pool.pmem.crash(rng=rng, evict_prob=pmem_prob)
+        ssd.crash(rng=rng, keep_prob=ssd_keep)
+
+        pool2 = Pool.open(pmem=pool.pmem)
+        pool2.attach_ssd(ssd)
+        sp2 = SpillScheduler(pool2, name="sp")
+        pages2 = pool2.pages("heap")
+        sp2.attach_pages(pages2)
+        recovered = {}
+        for pid in range(npages):
+            try:
+                recovered[pid] = bytes(
+                    sp2.read_page(pages2.store, pid, promote=False))
+            except KeyError:
+                pass
+        # Never-resurrect: phase-B bytes only ever existed in DRAM and
+        # were discarded by invalidate() — no crash point may expose
+        # them. (Fill ranges are disjoint: A=1.., B=100.., R=200..,
+        # C=60.., so a match can only be a genuine resurrection.)
+        for pid, img in stale.items():
+            assert recovered.get(pid) != bytes(img), \
+                f"pre-restore bytes resurrected on pid {pid}"
+        # Correctness: every drained page recovers its last drained
+        # epoch's image or the in-flight one, never anything else.
         for pid, img in flushed.items():
             acceptable = {bytes(img)}
             if pid in pending:

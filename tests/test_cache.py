@@ -589,3 +589,244 @@ def test_free_extents_exclude_live_records():
         for loff, lend in live:
             assert foff + fln <= loff or foff >= lend, \
                 "free extent overlaps a live record"
+
+
+# ==================================== DRAM-state invalidation bug sweep
+
+def test_invalidate_pops_parked_pending_images():
+    """A restore that rewrites the page table must not leave pre-restore
+    bytes parked in the flush queue: the next epoch drain would flush
+    them over the restored pages."""
+    pool, pages, fq, cache = plain_rig(frames=2)
+    cache.put(0, page(1))
+    cache.writeback()                      # durable baseline: page 0 = 1
+    cache.put(0, page(7))                  # pre-restore dirty content
+    cache.put(1, page(8))
+    cache.get(5)                           # both frames dirty -> one parks
+    assert fq.pending_pids(), "scenario needs a parked image"
+    cache.invalidate()
+    assert fq.pending_pids() == []
+    assert cache.frames_in_use == 0
+    # "restore": reseed the durable content, then drain an epoch — the
+    # parked pre-restore image must not resurrect
+    cache.install(0, page(1))
+    fq.flush_epoch()
+    assert bytes(pages.store.durable_page(0)) == bytes(page(1))
+
+
+def test_install_supersedes_parked_image():
+    """install() must pop a parked pending image the way put() does —
+    a restore's content wins over a pre-restore parked copy."""
+    pool, pages, fq, cache = plain_rig(frames=2)
+    cache.put(0, page(3))
+    cache.writeback()                      # durable baseline: page 0 = 3
+    cache.put(0, page(5))                  # dirty again (pre-restore)
+    cache.put(1, page(6))
+    cache.get(5)                           # parks page 0's dirty image
+    assert 0 in fq.pending_pids()
+    cache.install(0, page(3))              # restore reseeds page 0
+    assert 0 not in fq.pending_pids()
+    fq.flush_epoch()
+    assert bytes(pages.store.durable_page(0)) == bytes(page(3))
+
+
+def test_install_supersedes_parked_image_frames0():
+    pool, pages, fq, cache = plain_rig(frames=0)
+    cache.put(0, page(3))
+    fq.flush_epoch()                       # durable baseline: page 0 = 3
+    cache.put(0, page(5))                  # parks straight into pending
+    assert 0 in fq.pending_pids()
+    cache.install(0, page(3))              # restore supersedes the park
+    assert 0 not in fq.pending_pids()
+    fq.flush_epoch()
+    assert bytes(pages.store.durable_page(0)) == bytes(page(3))
+
+
+def test_invalidate_refuses_pinned_frames():
+    """Discarding a pinned frame would break the pin contract mid-epoch
+    (spill.pin_guard stops guarding the page, a later unpin raises):
+    invalidate must refuse, like drop()."""
+    pool, pages, fq, cache = plain_rig()
+    cache.put(0, page(1))
+    cache.put(1, page(2))
+    cache.pin(0)
+    with pytest.raises(ValueError, match="pinned"):
+        cache.invalidate()
+    # nothing was dropped by the refused call
+    assert cache.peek(0) is not None
+    assert cache.peek(1) is not None
+    cache.unpin(0)                         # the pin contract still holds
+    cache.invalidate()
+    assert cache.frames_in_use == 0
+
+
+def test_quota_overflow_counter_when_all_pinned():
+    """An owner-restricted sweep that fails because every frame of the
+    owner is pinned overflows the cap best-effort — but audibly, via
+    CacheStats.quota_overflows (globally and under the owner)."""
+    pool, pages, fq, cache = plain_rig(frames=4)
+    cache.set_quota("heap", 1)
+    cache.put(0, page(1))
+    cache.pin(0)
+    cache.put(1, page(2))                  # at quota, only frame pinned
+    assert cache.stats.quota_overflows == 1
+    assert cache.owner_stats("heap").quota_overflows == 1
+    assert cache.frames_of("heap") == 2    # the overshoot really happened
+    cache.unpin(0)
+    cache.put(2, page(3))                  # now evictable: no new overflow
+    assert cache.stats.quota_overflows == 1
+    assert cache.frames_of("heap") <= 2
+
+
+# ================================ NUMA-aware fills + far-first eviction
+
+def numa_rig(*, frames=4, npages=8, page_size=512):
+    """A 2-socket pool with one near-homed and one far-homed page
+    region sharing a cache whose consumers fault from socket 0."""
+    pool = Pool.create(None, 1 << 21, sockets=2)
+    near = pool.pages("near", npages=npages, page_size=page_size, socket=0)
+    far = pool.pages("far", npages=npages, page_size=page_size, socket=1)
+    fq_n = FlushQueue(near, lanes=2)
+    fq_f = FlushQueue(far, lanes=2)
+    cache = BufferManager(pool, frames=frames, local_socket=0)
+    cache.attach_pages(near, flushq=fq_n)
+    cache.attach_pages(far, flushq=fq_f)
+    return pool, near, far, cache
+
+
+def test_remote_fill_accounting():
+    pool, near, far, cache = numa_rig()
+    for h, n in ((near, 0), (far, 0)):
+        cache.put(0, page(9), store=h)
+        cache.writeback(store=h)
+        cache.invalidate(store=h)
+    c0 = cache.stats.snapshot()
+    cache.get(0, store=near)               # near-homed slot: local fill
+    assert cache.stats.delta(c0).remote_fills == 0
+    c1 = cache.stats.snapshot()
+    cache.get(0, store=far)                # far-homed slot: remote fill
+    d = cache.stats.delta(c1)
+    assert d.remote_fills == 1 and d.remote_fill_bytes == 512
+    assert d.pmem_fills == 1               # remote is a subset, not extra
+    # per-owner attribution follows the accessed region
+    assert cache.owner_stats("far").remote_fills == 1
+    assert cache.owner_stats("near").remote_fills == 0
+
+
+def test_remote_fill_charged_izraelevitz_rung():
+    """readpath_time_ns and engine_time_ns(cache=) both add the
+    (numa_remote_block_mult - 1) excess for exactly the remote fills;
+    zero remote counts add exactly 0.0 (all-near bit-parity)."""
+    near = CacheStats(pmem_fills=1, pmem_fill_bytes=512)
+    remote = CacheStats(pmem_fills=1, pmem_fill_bytes=512,
+                        remote_fills=1, remote_fill_bytes=512)
+    surcharge = ((COST_MODEL.numa_remote_block_mult - 1.0)
+                 * COST_MODEL.pmem_read_time_ns(1, 512))
+    assert COST_MODEL.remote_fill_ns(0, 0) == 0.0
+    assert COST_MODEL.remote_fill_ns(1, 512) == surcharge
+    assert (COST_MODEL.readpath_time_ns(remote)
+            == COST_MODEL.readpath_time_ns(near) + surcharge)
+    pm = PMemStats()
+    assert (COST_MODEL.engine_time_ns(pm, active_lanes=1, cache=remote)
+            == COST_MODEL.engine_time_ns(pm, active_lanes=1, cache=near)
+            + surcharge)
+
+
+def test_far_first_eviction_prefers_far_clean():
+    pool, near, far, cache = numa_rig(frames=2)
+    for h in (near, far):
+        cache.put(0, page(4), store=h)
+        cache.writeback(store=h)
+        cache.invalidate(store=h)
+    cache.get(0, store=near)               # near frame (ring slot 0)
+    cache.get(0, store=far)                # far frame  (ring slot 1)
+    cache.get(1, store=near)               # pressure: one must go
+    assert cache.peek(0, store=near) is not None, \
+        "far-first eviction must spare the near frame"
+    assert cache.peek(0, store=far) is None
+    assert cache.stats.evictions_clean == 1
+
+
+def test_numa_evict_off_restores_socket_blind_clock():
+    pool, near, far, cache = numa_rig(frames=2)
+    cache.numa_evict = False
+    for h in (near, far):
+        cache.put(0, page(4), store=h)
+        cache.writeback(store=h)
+        cache.invalidate(store=h)
+    cache.get(0, store=near)
+    cache.get(0, store=far)
+    cache.get(1, store=near)               # clock order: near frame first
+    assert cache.peek(0, store=near) is None
+    assert cache.peek(0, store=far) is not None
+
+
+# ======================================== 2Q scan resistance (scan_frac)
+
+def test_scan_cycles_probationary_fraction_only():
+    """With a quota and scan_frac < 1, an ingest scan (sequential puts —
+    the access shape that actually churns the clock, since put installs
+    carry a ref bit and force the hand to lap) recycles only the
+    probationary fraction of the owner's budget: the re-referenced
+    (protected) hot set stays resident."""
+    pool, pages, fq, cache = plain_rig(frames=8, npages=16)
+    cache.set_quota("heap", 4)
+    cache.set_scan_frac("heap", 0.5)       # probationary segment: 2
+    for pid in (0, 1):                     # hot set: install + graduate
+        cache.get(pid)
+        cache.get(pid)
+    for pid in range(2, 16):               # one sequential ingest pass
+        cache.put(pid, page(pid))
+        if pid % 4 == 1:
+            cache.writeback()              # keep the parked set bounded
+    assert cache.peek(0) is not None, "scan churned the protected hot set"
+    assert cache.peek(1) is not None
+    assert cache.frames_of("heap") <= 5    # quota + at most the overshoot
+
+
+def test_scan_frac_one_disables_the_split():
+    """Same ingest scan, split off (scan_frac=1.0): the clock cycles the
+    whole quota and the hot set churns — the fairness gap scan_frac
+    exists to close."""
+    pool, pages, fq, cache = plain_rig(frames=8, npages=16)
+    cache.set_quota("heap", 4)             # scan_frac defaults to 1.0
+    for pid in (0, 1):
+        cache.get(pid)
+        cache.get(pid)
+    for pid in range(2, 16):
+        cache.put(pid, page(pid))
+        if pid % 4 == 1:
+            cache.writeback()
+    assert cache.peek(0) is None and cache.peek(1) is None
+
+
+def test_scan_frac_validation_and_overrides():
+    pool, pages, fq, cache = plain_rig()
+    with pytest.raises(ValueError):
+        cache.set_scan_frac("heap", 0.0)
+    with pytest.raises(ValueError):
+        cache.set_scan_frac("heap", 1.5)
+    cache.set_scan_frac("heap", 0.25)
+    assert cache.scan_frac_of("heap") == 0.25
+    assert cache.scan_frac_of("other") == 1.0
+    cache.set_scan_frac("heap", None)      # revert to the cache-wide value
+    assert cache.scan_frac_of("heap") == 1.0
+    with pytest.raises(ValueError):
+        BufferManager(None, frames=4, scan_frac=0.0)
+
+
+def test_pool_cache_scan_frac_fixed_at_first_construction():
+    pool = Pool.create(None, 1 << 20)
+    pool.cache(frames=4, scan_frac=0.5)
+    assert pool.cache(scan_frac=0.5) is pool.cache()   # same value: fine
+    with pytest.raises(ValueError, match="scan_frac"):
+        pool.cache(scan_frac=0.25)
+
+
+def test_kv_config_threads_scan_frac():
+    cfg = KVConfig(npages=8, page_size=512, value_size=64,
+                   log_capacity=1 << 15, cache_frames=4,
+                   cache_scan_frac=0.5)
+    pool = Pool.create(None, PersistentKV.region_bytes(cfg))
+    kv = pool.kv("kv", cfg)
+    assert kv.cache.scan_frac == 0.5

@@ -17,6 +17,7 @@ import pytest
 
 from corpus_runner import (
     run_cache_crash,
+    run_cache_restore_crash,
     run_ckpt_fused_crash,
     run_cluster_crash,
     run_generation_spill_crash,
@@ -194,6 +195,38 @@ def test_cache_crash_corpus(frames, admit_k, oseed, n, epoch, step, seed,
                             pprob, skeep):
     run_cache_crash(frames, admit_k, _cache_ops(oseed, n), epoch, step,
                     seed, pprob, skeep)
+
+
+# ================================== restore after dirty eviction (cache)
+# (frames, admit_k, epoch_every, n_evict_writes, crash_step, seed,
+#  pmem_prob, ssd_keep) — a write burst past the frame budget parks
+# clock-evicted dirty images in the flush queue, then a snapshot restore
+# invalidates the cache and rewrites only PART of the page table: the
+# untouched pids are protected against stale-image resurrection solely
+# by invalidate()'s parked-image purge. Crash steps land in the baseline
+# drain, the restore drain, and the post-restore drain, plus no-crash
+# full runs; each case runs warm and frames=0 and must recover identical
+# state with phase-B bytes never resurfacing (see
+# corpus_runner.run_cache_restore_crash).
+
+CACHE_RESTORE_CORPUS = [
+    (8, 2, 6, 24, 99, 4099, 0.5, 0.5),     # no crash: full restore cycle
+    (8, 2, 6, 24, 3, 4003, 0.5, 0.5),      # crash in the baseline drain
+    (8, 2, 6, 24, 12, 4012, 1.0, 0.0),     # crash in the restore drain
+    (8, 2, 6, 24, 20, 4020, 0.0, 1.0),     # crash post-restore drain
+    (6, 1, 4, 32, 9, 4109, 0.5, 1.0),      # promote-on-first-access
+    (6, 3, 8, 24, 16, 4216, 1.0, 0.5),     # high admission threshold
+    (16, 2, 6, 24, 99, 4399, 0.0, 0.0),    # every page fits a frame
+]
+
+
+@pytest.mark.parametrize(
+    "frames,admit_k,epoch,nwrites,step,seed,pprob,skeep",
+    CACHE_RESTORE_CORPUS)
+def test_cache_restore_crash_corpus(frames, admit_k, epoch, nwrites, step,
+                                    seed, pprob, skeep):
+    run_cache_restore_crash(frames, admit_k, epoch, nwrites, step, seed,
+                            pprob, skeep)
 
 
 # ============================================ crash-mid-fused-flush (ckpt)
