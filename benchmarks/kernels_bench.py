@@ -1,10 +1,13 @@
-"""Kernel benchmark: the fused flush pipeline vs the staged chain.
+"""Kernel benchmark: the fused flush + restore pipelines vs the staged
+chains.
 
 Times the persistence kernels at the full 4 MiB benchmark shape — the
 staged dirty_diff → popcnt → delta_pack chain (three dispatches plus a
 host round-trip, the save path before fusion) against the one-pass
-``flush_pack`` kernel — and parity-checks the Pallas kernel against the
-oracles at the same full shape (not a small slice).
+``flush_pack`` kernel, and the staged popcnt-verify → scatter-apply
+restore chain against the one-pass ``apply_unpack`` kernel — and
+parity-checks the Pallas kernels against the oracles at the same full
+shape (not a small slice).
 
 Timed rows are this container's wall-clock (best-of-N, no TPU: Pallas
 runs in interpret mode, ``auto`` dispatches the jitted oracle). The
@@ -25,6 +28,8 @@ import numpy as np
 from repro.core.blocks import TPU_TILE
 from repro.core.costmodel import COST_MODEL
 from repro.kernels import (
+    apply_delta,
+    apply_unpack,
     dirty_blocks,
     flush_pack,
     pack_dirty,
@@ -127,6 +132,60 @@ def run() -> bool:
     ratio = staged_bytes / fused_bytes
     ok &= check("kernels: fused ≥2x fewer device bytes per delta ckpt",
                 ratio >= 2.0, f"{ratio:.2f}x")
+
+    # --- restore direction: staged verify-then-apply vs fused ---------
+    from repro.kernels.common import as_blocks
+    blocked_all, _ = as_blocks(cur, TPU_TILE)      # restore every block
+    k_all = blocked_all.shape[0]
+    base = jnp.zeros_like(cur)
+    idx_all = jnp.arange(k_all, dtype=jnp.int32)
+    exp_all = popcount_blocks(cur, impl="ref")
+
+    def staged_apply():
+        counts = popcount_blocks(cur)              # read 1: verify
+        out = apply_delta(base, blocked_all, idx_all)   # read 2: copy
+        jax.block_until_ready((counts, out))
+        return counts, out
+
+    def fused_apply(impl: str = "auto"):
+        res = apply_unpack(base, blocked_all, idx_all, exp_all, impl=impl)
+        jax.block_until_ready(res.out)
+        return res
+
+    counts_a, out_a = staged_apply()               # warm + oracles
+    res = fused_apply()                            # warm
+    t_astaged = _best_of(staged_apply)
+    t_afused = _best_of(lambda: fused_apply())
+    emit("kernels.apply.staged.4MiB", t_astaged, "2_dispatches")
+    emit("kernels.apply.fused.4MiB", t_afused, "1_dispatch")
+
+    res_pal = fused_apply("pallas")                # interpret off-TPU
+    ok &= check("kernels: apply_unpack == staged chain at 4 MiB",
+                res.nbad == 0
+                and np.array_equal(np.asarray(res.out), np.asarray(out_a))
+                and np.array_equal(np.asarray(res.out), np.asarray(cur))
+                and np.array_equal(np.asarray(res.counts),
+                                   np.asarray(counts_a)))
+    ok &= check("kernels: apply_unpack pallas == oracle at 4 MiB",
+                res_pal.nbad == 0
+                and np.array_equal(np.asarray(res_pal.out),
+                                   np.asarray(res.out))
+                and np.array_equal(np.asarray(res_pal.counts),
+                                   np.asarray(res.counts)))
+    bad_exp = jnp.asarray(exp_all).at[0].add(1)
+    ok &= check("kernels: apply_unpack flags a corrupted block",
+                apply_unpack(base, blocked_all, idx_all, bad_exp).nbad == 1)
+
+    # modeled restore reads: staged = verify pass + copy pass; fused = 1
+    afused_bytes = full_bytes
+    astaged_bytes = 2 * full_bytes
+    emit("kernels.apply.fused.modeled_read.4MiB",
+         COST_MODEL.scan_read_ns(afused_bytes) / 1e3, f"{afused_bytes}B")
+    emit("kernels.apply.staged.modeled_read.4MiB",
+         COST_MODEL.scan_read_ns(astaged_bytes) / 1e3, f"{astaged_bytes}B")
+    aratio = astaged_bytes / afused_bytes
+    ok &= check("kernels: fused apply ≥2x fewer device bytes per restore",
+                aratio >= 2.0, f"{aratio:.2f}x")
     return ok
 
 

@@ -1,0 +1,194 @@
+"""Restore path: fused apply_unpack traffic + parallel recovery wall-clock.
+
+The save path got its numbers (flush_pack: one HBM pass per save); this
+suite gives the restart direction the same treatment — the PR's claim is
+"restarts as fast as saves", and Wu (arXiv:2005.07658) measures restart
+time as dominated by the read-side scan:
+
+1. **Fused restore traffic.** Restoring a 4 MiB checkpoint through the
+   staged chain reads every page twice (popcount-verify, then copy into
+   the assembled image); the fused ``apply_unpack`` kernel verifies and
+   scatters in ONE device pass. ``CheckpointManager.restore`` accounts
+   its own read traffic (``RestoreReport.restore_read_bytes``), so the
+   ≥2x claim is checked on the manager's real restore, not on an
+   abstract model — and both paths must recover bit-identical state
+   (fused is checked against the staged chain AND the jnp oracle).
+
+2. **Concurrent reshard wall-clock.** A ``width=4`` view change flights
+   four ranges through the copy→flush→own→invalidate protocol
+   stage-interleaved; distinct src/dst engine pairs overlap on the
+   modeled clock (``ReshardReport.wall_ns``), so migrating everything
+   off four shards onto four fresh ones takes ≤0.6x the serial wall
+   time — while the migrated bytes and the cluster digest stay
+   byte-identical to the ``width=1`` run.
+
+3. **Lane-parallel WAL replay.** The same committed writes replay on
+   reopen through a 4-lane WAL at max-over-lanes cost vs a single-lane
+   WAL's serial cost (``PersistentKV.last_recovery``) — Izraelevitz
+   (arXiv:1903.05714): PMem read bandwidth scales with threads.
+
+All rows are modeled (deterministic from literal seeds), so
+``restore.fused.modeled_read.4MiB`` and ``restore.reshard.wall.width4``
+are stable ``benchmarks/compare.py`` gate targets for the >10%
+regression threshold.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+from repro.cluster import ClusterConfig, ClusterKV
+from repro.core import KVConfig, PMem, PersistentKV
+from repro.persistence import CheckpointConfig, CheckpointManager
+from repro.pool import Pool
+
+from benchmarks.common import check, emit
+
+STATE_BYTES = 4 << 20          # the 4 MiB benchmark shape
+PAGE_SIZE = 256 * 1024         # 16 pages per restore
+SEED = 20260808
+
+
+def _state():
+    rng = np.random.default_rng(SEED)
+    n = STATE_BYTES // 4
+    return {"params": rng.standard_normal(n).astype(np.float32)}
+
+
+def _restore_once(kernel_impl: str):
+    """Save the 4 MiB state and restore it through one kernel dispatch;
+    returns (restored state, RestoreReport)."""
+    cfg = CheckpointConfig(page_size=PAGE_SIZE, manifest_capacity=1 << 16,
+                           kernel_impl=kernel_impl)
+    m = CheckpointManager(None, cfg)
+    m.save(7, _state())
+    step, got = m.restore()
+    assert step == 7
+    return got, m.last_restore
+
+
+def _bench_restore() -> bool:
+    ok = True
+    want = _state()["params"]
+    got_staged, rep_staged = _restore_once("staged")
+    got_oracle, rep_oracle = _restore_once("auto")     # jnp oracle off-TPU
+    got_pallas, rep_pallas = _restore_once("fused")    # interpret off-TPU
+
+    emit("restore.staged.modeled_read.4MiB", rep_staged.scan_ns / 1e3,
+         f"{rep_staged.restore_read_bytes}B_{rep_staged.pages_total}pages")
+    emit("restore.fused.modeled_read.4MiB", rep_oracle.scan_ns / 1e3,
+         f"{rep_oracle.restore_read_bytes}B_{rep_oracle.pages_total}pages")
+
+    ratio = rep_staged.restore_read_bytes / rep_oracle.restore_read_bytes
+    ok &= check("restore: fused ≥2x less read traffic than staged at 4 MiB",
+                ratio >= 2.0,
+                f"{rep_staged.restore_read_bytes}B vs "
+                f"{rep_oracle.restore_read_bytes}B = {ratio:.2f}x")
+    ok &= check("restore: fused == staged chain (bit-identical recovery)",
+                np.array_equal(got_oracle["params"], got_staged["params"])
+                and np.array_equal(got_staged["params"], want))
+    ok &= check("restore: fused pallas == jnp oracle (bit-identical)",
+                np.array_equal(got_pallas["params"], got_oracle["params"])
+                and rep_pallas.restore_read_bytes
+                == rep_oracle.restore_read_bytes)
+    return ok
+
+
+def _reshard_once(width: int):
+    """Drain four shards onto four fresh ones: every range moves, and
+    the src/dst engine pairs are disjoint — the width>1 overlap case."""
+    cfg = ClusterConfig(kv=KVConfig(npages=64, page_size=2048, value_size=64,
+                                    log_capacity=1 << 18),
+                        n_ranges=16)
+    meta = Pool.create(None, ClusterKV.meta_pool_bytes(cfg))
+    pools = {sid: Pool.create(None, ClusterKV.shard_pool_bytes(cfg))
+             for sid in range(8)}
+    c = ClusterKV(meta, pools, cfg, shards=range(4))
+    for k in range(cfg.nkeys):
+        c.put(k, bytes([(k * 31) % 256]) * cfg.kv.value_size)
+    c.commit()
+    c.checkpoint()
+    for k in range(0, cfg.nkeys, 5):     # post-checkpoint WAL traffic too
+        c.put(k, bytes([(k * 77) % 256]) * cfg.kv.value_size)
+    c.commit()
+    rep = c.reshard([4, 5, 6, 7], width=width)
+    return c.digest(), rep
+
+
+def _bench_reshard() -> bool:
+    ok = True
+    d1, rep1 = _reshard_once(1)
+    d4, rep4 = _reshard_once(4)
+
+    emit("restore.reshard.wall.serial", rep1.wall_ns / 1e3,
+         f"{len(rep1.ranges_moved)}ranges_{rep1.bytes_moved}B")
+    emit("restore.reshard.wall.width4", rep4.wall_ns / 1e3,
+         f"speedup={rep1.wall_ns / rep4.wall_ns:.2f}x")
+
+    ok &= check("reshard: width=4 wall ≤0.6x serial modeled wall-clock",
+                rep4.wall_ns <= 0.6 * rep1.wall_ns,
+                f"{rep4.wall_ns / 1e3:.1f}us vs {rep1.wall_ns / 1e3:.1f}us "
+                f"serial ({rep1.wall_ns / rep4.wall_ns:.2f}x)")
+    ok &= check("reshard: width=4 migrated bytes byte-identical to serial",
+                d4 == d1 and rep4.bytes_moved == rep1.bytes_moved
+                and rep4.pages_moved == rep1.pages_moved
+                and rep4.wal_records_moved == rep1.wal_records_moved
+                and sorted(rep4.ranges_moved) == sorted(rep1.ranges_moved),
+                f"digest {d1[:16]} both, {rep1.bytes_moved}B both")
+    ok &= check("reshard: serial engine work identical at both widths",
+                abs(rep4.engine_ns - rep1.engine_ns) < 1e-6 * rep1.engine_ns,
+                f"{rep1.engine_ns:.0f}ns vs {rep4.engine_ns:.0f}ns")
+    return ok
+
+
+def _replay_once(wal_lanes: int):
+    kw = dict(npages=8, page_size=1024, value_size=64,
+              technique="zero", log_capacity=1 << 17)
+    if wal_lanes > 1:
+        kw["wal_lanes"] = wal_lanes
+    cfg = KVConfig(**kw)
+    pm = PMem(PersistentKV.region_bytes(cfg))
+    pm.memset_zero()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        kv = PersistentKV(pm, cfg)
+    for k in range(cfg.nkeys):
+        kv.put(k, bytes([(k * 13) % 256]) * cfg.value_size)
+    pm.crash(evict=lambda li: False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        kv2 = PersistentKV.open(pm, cfg)
+    state = [kv2.get(k) for k in range(cfg.nkeys)]
+    return state, kv2.last_recovery
+
+
+def _bench_replay() -> bool:
+    ok = True
+    s1, r1 = _replay_once(1)
+    s4, r4 = _replay_once(4)
+
+    emit("restore.replay.wall.1lane", r1.modeled_ns / 1e3,
+         f"{r1.wal_entries}entries_{r1.wal_bytes}B")
+    emit("restore.replay.wall.4lane", r4.modeled_ns / 1e3,
+         f"active_lanes={r4.active_lanes} "
+         f"speedup={r1.modeled_ns / r4.modeled_ns:.2f}x")
+
+    ok &= check("replay: 4-lane WAL replays faster than single-lane",
+                r4.active_lanes == 4 and r4.modeled_ns < r1.modeled_ns,
+                f"{r4.modeled_ns:.0f}ns vs {r1.modeled_ns:.0f}ns")
+    ok &= check("replay: lane-parallel replay recovers identical state",
+                s4 == s1 and r4.wal_entries == r1.wal_entries)
+    return ok
+
+
+def run() -> bool:
+    ok = _bench_restore()
+    ok &= _bench_reshard()
+    ok &= _bench_replay()
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

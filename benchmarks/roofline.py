@@ -61,6 +61,40 @@ def flush_pipeline(sizes=(4 * 2**20, 256 * 2**20, 4 * 2**30),
     return rows
 
 
+def restore_pipeline(sizes=(4 * 2**20, 256 * 2**20, 4 * 2**30)
+                     ) -> List[Dict[str, Any]]:
+    """Modeled HBM traffic of a checkpoint restore: staged vs fused.
+
+    The mirror of :func:`flush_pipeline` for the read-back direction.
+    Per restored buffer of ``nbytes``, the staged restore reads every
+    page once to popcount-verify it and again to copy it into the
+    assembled image — ``2·nbytes`` total; the fused ``apply_unpack``
+    kernel verifies and scatters in ONE pass — ``nbytes``. At v5e HBM
+    bandwidth the 2x ratio is the device-side headroom that makes a
+    restart cost what a save costs (Wu arXiv:2005.07658: restart time
+    is dominated by the read-side scan; Izraelevitz arXiv:1903.05714:
+    PMem read bandwidth is the axis that scales).
+    """
+    rows = []
+    print("buffer_MiB,staged_bytes,fused_bytes,ratio,staged_ms,fused_ms")
+    for nbytes in sizes:
+        staged = int(2 * nbytes)
+        fused = int(nbytes)
+        r = {
+            "buffer_bytes": nbytes,
+            "staged_bytes": staged, "fused_bytes": fused,
+            "ratio": staged / fused,
+            "staged_ms": staged / HBM_BW * 1e3,
+            "fused_ms": fused / HBM_BW * 1e3,
+        }
+        rows.append(r)
+        print(f"{nbytes / 2**20:.0f},{staged},{fused},"
+              f"{r['ratio']:.2f}x,{r['staged_ms']:.3f},{r['fused_ms']:.3f}")
+    print(f"# fused restore pipeline: {rows[0]['ratio']:.2f}x fewer device "
+          f"bytes per restore at any buffer size")
+    return rows
+
+
 def model_flops_per_device(arch: str, shape: str, ndev: int, kind: str) -> float:
     cfg = get_config(arch)
     n_active = cfg.active_param_count()
@@ -154,6 +188,7 @@ def run(art_dir: str = "artifacts/dryrun") -> List[Dict[str, Any]]:
 if __name__ == "__main__":
     import sys
     flush_pipeline()
+    restore_pipeline()
     art = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
     if os.path.isdir(art):
         run(art)

@@ -40,6 +40,7 @@ def main() -> None:
         kernels_bench,
         numa_placement,
         readpath,
+        restore_path,
         serve_load,
         tab_ycsb,
         tier_capacity,
@@ -64,6 +65,10 @@ def main() -> None:
         # rows for compare.py's cross-PR regression gate
         (kernels_bench, "Kernels: fused flush pipeline vs staged chain",
          True),
+        # in smoke: restore.fused.modeled_read.* and restore.reshard.wall.*
+        # are compare.py gate rows too
+        (restore_path, "Restore path: fused apply + parallel recovery",
+         True),
     ]
     from benchmarks import common
 
@@ -80,6 +85,8 @@ def main() -> None:
         print("\n### Roofline: fused flush pipeline (modeled HBM traffic)")
         common.set_suite("roofline")
         roofline.flush_pipeline()
+        print("\n### Roofline: fused restore pipeline (modeled HBM traffic)")
+        roofline.restore_pipeline()
         art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
         if os.path.isdir(art) and any(f.endswith(".json") for f in os.listdir(art)):
             print("\n### Roofline (from dry-run artifacts)")

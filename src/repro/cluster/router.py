@@ -44,6 +44,8 @@ import hashlib
 import struct
 from typing import Dict, Iterable, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.costmodel import COST_MODEL, SSD_COST_MODEL
 from repro.core.recovery import KVConfig, PersistentKV, _REC
 from repro.cluster.shardmap import ShardMap
@@ -65,6 +67,13 @@ class ClusterConfig:
     kv: KVConfig = dataclasses.field(default_factory=KVConfig)
     n_ranges: int = 8
     map_capacity: int = 1 << 14
+    #: migration copy verification: ``"auto"``/``"fused"``/``"ref"`` run
+    #: one ``apply_unpack`` pass per range (checksum-verify + assemble
+    #: the shipped page images in a single device read); ``"staged"``
+    #: keeps the per-page host loop. Bytes landed on the target are
+    #: identical either way — this only picks how the transfer is
+    #: verified and priced.
+    kernel_impl: str = "auto"
 
     def __post_init__(self) -> None:
         if self.n_ranges < 1 or self.kv.npages % self.n_ranges:
@@ -89,7 +98,14 @@ class ReshardReport:
 
     ``engine_ns`` is the full modeled cost of the migration steps (PMem
     + SSD + cache work on both sides, interconnect term included);
-    ``transfer_ns`` is the interconnect term alone."""
+    ``transfer_ns`` is the interconnect term alone. ``wall_ns`` is the
+    modeled *wall clock*: within each batch of concurrently in-flight
+    ranges (``width=`` on ``begin_reshard``), each engine serializes its
+    own work but distinct engines overlap, so a batch costs
+    max-over-engines (plus the serialized shard-map flips) rather than
+    the serial sum. Even at ``width=1`` a range's reader (source) and
+    writer (target) pipeline, so ``wall_ns <= engine_ns`` always; the
+    win from ``width > 1`` is overlapping *different* src/dst pairs."""
 
     view: int
     shards: Tuple[int, ...]
@@ -100,6 +116,7 @@ class ReshardReport:
     wal_bytes: int
     engine_ns: float
     transfer_ns: float
+    wall_ns: float = 0.0
 
     @property
     def bytes_moved(self) -> int:
@@ -108,13 +125,24 @@ class ReshardReport:
 
 
 class ViewChange:
-    """One in-flight view change, migrated range-at-a-time.
+    """One in-flight view change, migrated ``width`` ranges at a time.
 
     Callers that interleave foreground traffic (the reshard-under-load
     benchmark, a serving loop) drive :meth:`step` themselves; the last
-    step commits the view. :meth:`run` drives it to completion."""
+    step commits the view. :meth:`run` drives it to completion.
 
-    def __init__(self, cluster: "ClusterKV", shards: Iterable[int]) -> None:
+    ``width > 1`` flights that many ranges concurrently: one
+    :meth:`step` runs the batch stage-interleaved — every range's copy,
+    then every flush, then every ownership flip, then every invalidate
+    — with each range's failpoints firing independently at its own
+    protocol points. Per-range ordering (copy < flush < own < inval) is
+    exactly the serial protocol's, so the exactly-old-XOR-exactly-new
+    crash invariant is untouched and the migrated bytes are identical
+    to a ``width=1`` run; only the modeled wall clock changes (distinct
+    engines overlap — see ``ReshardReport.wall_ns``)."""
+
+    def __init__(self, cluster: "ClusterKV", shards: Iterable[int], *,
+                 width: int = 1) -> None:
         """Durably start the view change toward ``shards`` (re-entrant
         for resume — see ``ShardMap.begin_view``)."""
         ids = tuple(sorted(int(s) for s in shards))
@@ -122,6 +150,7 @@ class ViewChange:
         if unknown:
             raise ValueError(f"no engines for shards {sorted(unknown)}")
         self._c = cluster
+        self.width = max(1, int(width))
         self.view = cluster.map.begin_view(ids)
         cluster._fp("view:started")
         self.target_shards = ids
@@ -135,17 +164,20 @@ class ViewChange:
         self.wal_bytes = 0
         self.engine_ns = 0.0
         self.transfer_ns = 0.0
+        self.wall_ns = 0.0
         self._done = False
 
     def step(self) -> bool:
-        """Migrate the next moving range (commit the view once none
-        remain). Returns True while more steps are pending."""
+        """Migrate the next batch of up to ``width`` moving ranges
+        (commit the view once none remain). Returns True while more
+        steps are pending."""
         if self._done:
             return False
         if self.todo:
-            r = self.todo.pop(0)
-            self._c._migrate_range(r, self.view, self.target[r], self)
-            self.moved.append(r)
+            batch = self.todo[:self.width]
+            del self.todo[:self.width]
+            self._c._migrate_batch(batch, self.view, self)
+            self.moved.extend(batch)
         if not self.todo:
             self._c._scrub_all()
             self._c.map.commit_view()
@@ -168,7 +200,7 @@ class ViewChange:
             page_bytes=self.page_bytes,
             wal_records_moved=self.wal_records_moved,
             wal_bytes=self.wal_bytes, engine_ns=self.engine_ns,
-            transfer_ns=self.transfer_ns)
+            transfer_ns=self.transfer_ns, wall_ns=self.wall_ns)
 
 
 class CausalSession:
@@ -374,89 +406,168 @@ class ClusterKV:
 
     # -------------------------------------------------------- view changes
 
-    def begin_reshard(self, shards: Iterable[int]) -> ViewChange:
+    def begin_reshard(self, shards: Iterable[int], *,
+                      width: int = 1) -> ViewChange:
         """Durably start a view change toward ``shards`` and hand back
-        the step-at-a-time driver."""
-        return ViewChange(self, shards)
+        the step-at-a-time driver. ``width`` is how many ranges each
+        step flights concurrently (see ``ViewChange``)."""
+        return ViewChange(self, shards, width=width)
 
-    def reshard(self, shards: Iterable[int]) -> ReshardReport:
+    def reshard(self, shards: Iterable[int], *,
+                width: int = 1) -> ReshardReport:
         """Run a full view change to ``shards`` (see module docstring
         for the per-range protocol) and report what moved."""
-        return self.begin_reshard(shards).run()
+        return self.begin_reshard(shards, width=width).run()
 
-    def resume(self) -> Optional[ReshardReport]:
+    def resume(self, *, width: int = 1) -> Optional[ReshardReport]:
         """Finish a view change a crash interrupted, if any: re-runs the
         not-yet-flipped ranges and commits. Returns None when no view is
         pending."""
         if self.map.pending is None:
             return None
-        return self.reshard(self.map.pending[1])
+        return self.reshard(self.map.pending[1], width=width)
 
-    def _migrate_range(self, r: int, view: int, dst_sid: int,
-                       vc: ViewChange) -> None:
-        """One range's copy → flush → ownership record → invalidate (the
-        module docstring's protocol), priced on the modeled clock."""
-        src_sid = self.map.owner_of_range(r)
-        src, dst = self._engines[src_sid], self._engines[dst_sid]
-        src_pool, dst_pool = self._pools[src_sid], self._pools[dst_sid]
-        s0 = src_pool.stats.snapshot()
-        d0 = dst_pool.stats.snapshot()
-        m0 = self.meta_pool.stats.snapshot()
-        sc0 = src.cache.stats.snapshot()
-        dc0 = dst.cache.stats.snapshot()
-        sssd0 = src_pool.ssd_dev.stats.snapshot() if src_pool.ssd_dev else None
-        dssd0 = dst_pool.ssd_dev.stats.snapshot() if dst_pool.ssd_dev else None
+    # ----------------------------------------------- migration internals
 
-        # --- copy: the source's durable cut. Commit its WAL tail first
-        # so the cut covers every applied write, then ship page images
-        # (checkpoint-age) and committed WAL records (newer, replayed
-        # through dst.put so they land in the target's own WAL *after*
-        # the images they supersede — recovery order stays valid).
-        self._commit_shard(src_sid)
-        page_bytes = wal_bytes = wal_records = 0
+    def _snap(self, sid: int):
+        """Stats snapshot of one shard's pool + cache + SSD (pricing)."""
+        pool, eng = self._pools[sid], self._engines[sid]
+        return (pool.stats.snapshot(), eng.cache.stats.snapshot(),
+                pool.ssd_dev.stats.snapshot() if pool.ssd_dev else None)
+
+    def _price(self, sid: int, snap, *, transfer_bytes: int = 0) -> float:
+        """Modeled ns of the work ``sid`` did since ``snap``."""
+        pool, eng = self._pools[sid], self._engines[sid]
+        p0, c0, d0 = snap
+        ns = COST_MODEL.engine_time_ns(pool.stats.delta(p0),
+                                       cache=eng.cache.stats.delta(c0),
+                                       cluster_transfer_bytes=transfer_bytes)
+        if d0 is not None:
+            ns += SSD_COST_MODEL.time_ns(pool.ssd_dev.stats.delta(d0))
+        return ns
+
+    def _copy_pages(self, src: PersistentKV, dst: PersistentKV, r: int,
+                    vc: ViewChange) -> int:
+        """Ship one range's durable page images to the target's frames,
+        verified. Returns the page bytes moved.
+
+        The fused path (``cfg.kernel_impl != "staged"``) runs ONE
+        ``apply_unpack`` pass over the whole range on the receiving
+        side: checksum-verify every shipped image against the source's
+        per-page popcount summary and assemble them in a single device
+        read, instead of a per-page host loop. A mismatch means the
+        transfer corrupted a page — raise rather than land bad bytes.
+        The landed bytes are identical on both paths."""
+        pids: List[int] = []
+        imgs: List[np.ndarray] = []
         for pid in self._range_pids(r):
             img = src.durable_page_image(pid)
             if img is None:
                 continue
+            pids.append(pid)
+            imgs.append(np.ascontiguousarray(img, dtype=np.uint8))
+        ps = self.cfg.kv.page_size
+        if pids and self.cfg.kernel_impl != "staged" and ps % 128 == 0:
+            from repro.kernels.apply_unpack import apply_unpack
+            packed = np.concatenate([i.reshape(-1) for i in imgs])
+            expected = np.array(
+                [int(np.unpackbits(i.reshape(-1)).sum()) for i in imgs],
+                dtype=np.uint32)
+            res = apply_unpack(np.zeros(len(pids) * ps, np.uint8), packed,
+                               np.arange(len(pids), dtype=np.int32),
+                               expected, block_bytes=ps,
+                               impl=self.cfg.kernel_impl)
+            if res.nbad:
+                raise RuntimeError(
+                    f"migration copy of range {r}: checksum mismatch on "
+                    f"{res.nbad} of {len(pids)} page image(s)")
+            out = np.asarray(res.out)
+            imgs = [out[i * ps:(i + 1) * ps] for i in range(len(pids))]
+        page_bytes = 0
+        for pid, img in zip(pids, imgs):
             dst.cache.put(pid, img, store=dst.store)
             vc.pages_moved += 1
             page_bytes += int(img.size)
             self._fp("copy:page")
-        for key, value in src.committed_wal_records():
-            if self.range_of(key) != r:
-                continue
-            dst.put(key, value)
-            wal_records += 1
-            wal_bytes += _REC.size + len(value)
-            self._fp("copy:wal")
-        # --- flush: durable on the target, still unreachable
-        dst.cache.writeback(dst.store)
-        self._commit_shard(dst_sid)
-        self._fp("flush:done")
-        # --- ownership record: the atomic per-range commit point
-        self.map.record_owner(r, view, dst_sid)
-        self._fp("own:committed")
-        # --- invalidate: the source durably forgets the range
-        for pid in self._range_pids(r):
-            src.discard_page(pid)
-        self._fp("invalidate:done")
+        return page_bytes
 
-        moved = page_bytes + wal_bytes
-        vc.page_bytes += page_bytes
-        vc.wal_bytes += wal_bytes
-        vc.wal_records_moved += wal_records
-        eng = COST_MODEL.engine_time_ns(src_pool.stats.delta(s0),
-                                        cache=src.cache.stats.delta(sc0))
-        eng += COST_MODEL.engine_time_ns(dst_pool.stats.delta(d0),
-                                         cache=dst.cache.stats.delta(dc0),
-                                         cluster_transfer_bytes=moved)
-        eng += COST_MODEL.engine_time_ns(self.meta_pool.stats.delta(m0))
-        if sssd0 is not None:
-            eng += SSD_COST_MODEL.time_ns(src_pool.ssd_dev.stats.delta(sssd0))
-        if dssd0 is not None:
-            eng += SSD_COST_MODEL.time_ns(dst_pool.ssd_dev.stats.delta(dssd0))
-        vc.engine_ns += eng
-        vc.transfer_ns += COST_MODEL.cluster_transfer_ns(moved)
+    def _migrate_batch(self, batch: List[int], view: int,
+                       vc: ViewChange) -> None:
+        """Migrate a batch of ranges stage-interleaved: every range's
+        copy, then every flush, then every ownership flip, then every
+        invalidate (each range keeps the module docstring's per-range
+        ordering and failpoints, so crash behavior per range is exactly
+        the serial protocol's), priced on the modeled clock.
+
+        Wall-clock pricing: each range's work is attributed to the
+        engines that did it (source-side ns, target-side ns including
+        the interconnect term, shard-map ns). Within the batch one
+        engine serializes everything it touches, distinct engines
+        overlap — the batch's wall time is the max over engines of
+        their summed work, plus the (serialized) shard-map flips."""
+        moves = []
+        for r in batch:
+            moves.append({"r": r, "src": self.map.owner_of_range(r),
+                          "dst": vc.target[r], "moved": 0,
+                          "ns_src": 0.0, "ns_dst": 0.0, "ns_meta": 0.0})
+
+        # --- copy: each range ships the source's durable cut. Commit
+        # the source WAL tail first so the cut covers every applied
+        # write, then ship page images (checkpoint-age) and committed
+        # WAL records (newer, replayed through dst.put so they land in
+        # the target's own WAL *after* the images they supersede —
+        # recovery order stays valid).
+        for m in moves:
+            src, dst = self._engines[m["src"]], self._engines[m["dst"]]
+            s0, d0 = self._snap(m["src"]), self._snap(m["dst"])
+            self._commit_shard(m["src"])
+            page_bytes = self._copy_pages(src, dst, m["r"], vc)
+            wal_bytes = wal_records = 0
+            for key, value in src.committed_wal_records():
+                if self.range_of(key) != m["r"]:
+                    continue
+                dst.put(key, value)
+                wal_records += 1
+                wal_bytes += _REC.size + len(value)
+                self._fp("copy:wal")
+            m["moved"] = page_bytes + wal_bytes
+            vc.page_bytes += page_bytes
+            vc.wal_bytes += wal_bytes
+            vc.wal_records_moved += wal_records
+            m["ns_src"] += self._price(m["src"], s0)
+            m["ns_dst"] += self._price(m["dst"], d0,
+                                       transfer_bytes=m["moved"])
+        # --- flush: durable on each target, still unreachable
+        for m in moves:
+            d0 = self._snap(m["dst"])
+            self._engines[m["dst"]].cache.writeback(
+                self._engines[m["dst"]].store)
+            self._commit_shard(m["dst"])
+            self._fp("flush:done")
+            m["ns_dst"] += self._price(m["dst"], d0)
+        # --- ownership records: the atomic per-range commit points
+        for m in moves:
+            m0 = self.meta_pool.stats.snapshot()
+            self.map.record_owner(m["r"], view, m["dst"])
+            self._fp("own:committed")
+            m["ns_meta"] += COST_MODEL.engine_time_ns(
+                self.meta_pool.stats.delta(m0))
+        # --- invalidate: each source durably forgets its range
+        for m in moves:
+            s0 = self._snap(m["src"])
+            for pid in self._range_pids(m["r"]):
+                self._engines[m["src"]].discard_page(pid)
+            self._fp("invalidate:done")
+            m["ns_src"] += self._price(m["src"], s0)
+
+        per_engine: Dict[int, float] = {}
+        for m in moves:
+            per_engine[m["src"]] = per_engine.get(m["src"], 0.0) + m["ns_src"]
+            per_engine[m["dst"]] = per_engine.get(m["dst"], 0.0) + m["ns_dst"]
+            vc.engine_ns += m["ns_src"] + m["ns_dst"] + m["ns_meta"]
+            vc.transfer_ns += COST_MODEL.cluster_transfer_ns(m["moved"])
+        vc.wall_ns += (max(per_engine.values(), default=0.0)
+                       + sum(m["ns_meta"] for m in moves))
 
     def _scrub_all(self) -> None:
         """Discard every non-owner copy of every range — idempotent

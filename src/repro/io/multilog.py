@@ -72,6 +72,11 @@ class MultiLogRecovered:
     per_lane: List[int]
     #: durable entries discarded because an earlier global LSN was lost
     discarded: int
+    #: originating lane of each kept entry (parallel to ``entries``) —
+    #: lets replay attribute each record's work to the lane that wrote
+    #: it, so the cost model prices recovery at max-over-lanes instead
+    #: of charging one serial stream
+    lanes: List[int] = dataclasses.field(default_factory=list)
 
 
 class MultiLog:
@@ -581,6 +586,7 @@ class MultiLog:
             next_glsn=m + 1,
             per_lane=[len(r.entries) for r in per_lane],
             discarded=discarded,
+            lanes=[items[g][0] for g in range(1, m + 1)],
         )
 
     def _truncate_lane(self, handle, rec: RecoveredLog, kept: int) -> None:
@@ -717,6 +723,7 @@ class MultiLog:
             next_glsn=m + 1,
             per_lane=[],
             discarded=len(items) - m,
+            lanes=[items[g][0] for g in range(1, m + 1)],
         )
 
     def stats(self):

@@ -7,6 +7,9 @@ The paper optimizes I/O; the on-device work of its adapted primitives is:
   - flush_scan       — fused dirty bitmap + popcounts (two facts, one read)
   - flush_pack       — the whole save pass fused: diff+pack+checksum plus
                        on-device prefix-sum compaction, one HBM read
+  - apply_unpack     — the whole restore pass fused: checksum-verify +
+                       scatter + apply onto the base image, one HBM read
+                       (flush_pack's inverse)
 
 Each subpackage has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 dispatch wrapper: Pallas on TPU, ref elsewhere), ref.py (pure-jnp oracle).
@@ -14,6 +17,7 @@ Kernels are validated in interpret mode against the oracles with
 hypothesis-driven shape/dtype sweeps (tests/test_kernels.py).
 """
 
+from repro.kernels.apply_unpack import ApplyUnpack, apply_unpack  # noqa: F401
 from repro.kernels.delta_pack import apply_delta, pack_delta, pack_dirty  # noqa: F401
 from repro.kernels.dirty_diff import dirty_blocks  # noqa: F401
 from repro.kernels.flush_pack import FlushPack, flush_pack  # noqa: F401

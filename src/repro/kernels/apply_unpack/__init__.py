@@ -1,0 +1,13 @@
+"""Fused restore pipeline: one-pass verify + scatter + apply (flush_pack⁻¹).
+
+``apply_unpack`` is the restore hot path's single device pass: it reads a
+run of packed page/delta blocks from HBM exactly once and, in that one
+pass, popcount-verifies each block against the checksum the manifest
+recorded at save time AND scatters it to its destination block of the
+base image. It replaces the staged popcount-verify → copy chain (two
+reads of the restored bytes), making the restore direction symmetric
+with ``flush_pack``'s save direction.
+"""
+
+from repro.kernels.apply_unpack.ops import ApplyUnpack, apply_unpack  # noqa: F401
+from repro.kernels.apply_unpack.ref import block_popcounts  # noqa: F401

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused one-pass restore pipeline (verify+scatter+apply).
+
+The staged restore path reads the packed page images up to twice — one
+popcount pass to verify each block against its manifest checksum, then a
+second pass that copies the verified bytes onto the base image. This
+kernel is the inverse of ``flush_pack``: each grid step popcounts ONE
+packed block while its bytes are in VMEM and, in the same step, scatters
+it to its destination block of the base image — the packed bytes cross
+HBM exactly once per restore (Wu arXiv:2005.07658: restart time is
+dominated by read-side scan traffic; Izraelevitz arXiv:1903.05714: PMem
+read bandwidth is the scarce, thread-scalable resource).
+
+Grid: one program per packed block, destination driven by a
+scalar-prefetched index vector (the canonical Pallas TPU scatter, same
+shape as ``delta_pack``'s apply kernel). The base image is aliased into
+the output, so unreferenced blocks are never copied; the per-block
+popcounts and checksum verdicts stream out as small column outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import LANES
+
+_UINT_FOR = {4: jnp.uint32, 2: jnp.uint16, 1: jnp.uint8}
+
+
+def _apply_unpack_kernel(idx_ref, upd_ref, exp_ref, base_ref,
+                         out_ref, ok_ref, cnt_ref):
+    # base_ref is aliased into out_ref and never read: the kernel's only
+    # job at this grid step is to land the packed block and its verdict.
+    upd = upd_ref[...]
+    udt = _UINT_FOR[upd.dtype.itemsize]
+    bits = jax.lax.population_count(jax.lax.bitcast_convert_type(upd, udt))
+    cnt = jnp.sum(bits.astype(jnp.uint32), dtype=jnp.uint32)
+    cnt_ref[...] = cnt.reshape(1, 1)
+    ok_ref[...] = (cnt == exp_ref[0, 0]).astype(jnp.int32).reshape(1, 1)
+    out_ref[...] = upd
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_unpack_blocked(base: jax.Array, packed: jax.Array,
+                         idx: jax.Array, expected: jax.Array, *,
+                         interpret: bool = False):
+    """(nblocks, rows, 128) base + (k, rows, 128) packed → (out, ok, counts).
+
+    ``out`` is ``base`` with ``out[idx[i]] = packed[i]`` (in-place via
+    aliasing — blocks outside ``idx`` never move); ``ok[i]`` is 1 iff
+    block i's popcount equals ``expected[i]``; ``counts[i]`` is the
+    actual popcount. ``idx`` must not contain duplicates (each
+    destination block written once).
+    """
+    nblocks, rows, lanes = base.shape
+    k = packed.shape[0]
+    assert lanes == LANES and packed.shape[1:] == (rows, lanes)
+    assert packed.dtype == base.dtype and base.dtype.itemsize in _UINT_FOR
+    assert idx.shape == (k,) and expected.shape == (k,)
+    blk = pl.BlockSpec((1, rows, LANES), lambda i, idx: (i, 0, 0))
+    col = pl.BlockSpec((1, 1), lambda i, idx: (i, 0))
+    dst = pl.BlockSpec((1, rows, LANES), lambda i, idx: (idx[i], 0, 0))
+    out, ok, cnt = pl.pallas_call(
+        _apply_unpack_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k,),
+            in_specs=[blk, col, dst],
+            out_specs=[dst, col, col],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(base.shape, base.dtype),
+            jax.ShapeDtypeStruct((k, 1), jnp.int32),
+            jax.ShapeDtypeStruct((k, 1), jnp.uint32),
+        ],
+        input_output_aliases={3: 0},  # base (after the scalar operand) → out
+        interpret=interpret,
+    )(idx.astype(jnp.int32), packed,
+      expected.astype(jnp.uint32).reshape(k, 1), base)
+    return out, ok[:, 0], cnt[:, 0]

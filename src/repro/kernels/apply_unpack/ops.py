@@ -1,0 +1,84 @@
+"""Public op: fused one-pass verify + scatter + apply of packed blocks.
+
+``apply_unpack`` is the restore path's single device pass and the exact
+inverse of ``flush_pack``: given a flat base image, a flat run of packed
+blocks, their destination block ids and the popcount checksums the
+manifest recorded at save time, it verifies every block AND applies it
+onto the base in one read of the packed bytes. Replaces the staged
+popcount-verify → copy chain (two reads of the restored image).
+"""
+
+from __future__ import annotations
+
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import TPU_TILE
+from repro.kernels.common import LANES, as_blocks, from_blocks
+from repro.kernels.apply_unpack.kernel import apply_unpack_blocked
+from repro.kernels.apply_unpack.ref import apply_unpack_blocked_ref
+
+Impl = Literal["auto", "pallas", "fused", "ref"]
+
+#: the oracle is jitted so the off-TPU fallback is still ONE dispatch per
+#: buffer (popcount+scatter fused by XLA) — the staged restore chain pays
+#: a verify dispatch plus a copy pass per buffer
+_ref_jit = jax.jit(apply_unpack_blocked_ref)
+
+
+class ApplyUnpack(NamedTuple):
+    """Everything one fused restore pass yields about a buffer.
+
+    ``out``: flat array, same shape/dtype as ``base``, with packed block
+    i applied at block ``index[i]`` (all other blocks keep base bytes).
+    ``ok``: (k,) int32; 1 iff packed block i's popcount matched
+    ``expected[i]`` — the caller discards ``out`` if any verdict fails.
+    ``counts``: (k,) uint32 actual popcounts of the packed blocks.
+    ``nbad``: python int count of failed verdicts (the only host sync).
+    """
+
+    out: jax.Array
+    ok: jax.Array
+    counts: jax.Array
+    nbad: int
+
+
+def apply_unpack(base: jax.Array, packed: jax.Array, index, expected, *,
+                 block_bytes: int = TPU_TILE,
+                 impl: Impl = "auto") -> ApplyUnpack:
+    """Fused verify+scatter of flat ``packed`` onto flat ``base``.
+
+    ``packed`` holds k consecutive blocks (``k * block_bytes`` bytes);
+    ``index`` (k,) names each block's destination block of ``base``
+    (duplicate-free); ``expected`` (k,) uint32 holds the popcounts to
+    verify against. ``impl="fused"`` is an alias for ``"pallas"`` (the
+    fused kernel IS the pallas path); ``"auto"`` picks pallas on TPU and
+    the jnp oracle elsewhere, like every other kernel in this package.
+    """
+    if packed.dtype != base.dtype:
+        raise ValueError("base and packed must share a dtype")
+    elems = block_bytes // base.dtype.itemsize
+    if packed.size % elems:
+        raise ValueError(
+            f"packed ({packed.size} elems) is not whole {block_bytes}-byte "
+            f"blocks")
+    k = packed.size // elems
+    if k == 0:
+        return ApplyUnpack(base, jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0,), jnp.uint32), 0)
+    rows = elems // LANES
+    packed_b = jnp.asarray(packed).reshape(k, rows, LANES)
+    idx = jnp.asarray(index, dtype=jnp.int32)
+    exp = jnp.asarray(expected, dtype=jnp.uint32)
+    base_b, orig_len = as_blocks(base, block_bytes)
+    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+        out_b, ok, counts = _ref_jit(base_b, packed_b, idx, exp)
+    else:
+        interpret = jax.default_backend() != "tpu"
+        out_b, ok, counts = apply_unpack_blocked(
+            base_b, packed_b, idx, exp, interpret=interpret)
+    out = from_blocks(out_b, orig_len).reshape(base.shape)
+    nbad = int(k - jnp.sum(ok))
+    return ApplyUnpack(out, ok, counts, nbad)

@@ -58,11 +58,13 @@ from repro.core.pageflush import HybridPolicy, PageStore, PageStoreLayout
 from repro.core.persist import AccessPattern, FlushKind
 from repro.core.pmem import PMem, PMemStats
 from repro.pool import LogHandle, PagesHandle, Pool
+from repro.kernels.apply_unpack import apply_unpack
 from repro.kernels.dirty_diff import dirty_blocks
 from repro.kernels.flush_pack import compact_index, flush_pack
 from repro.kernels.popcnt_checksum import popcount_blocks
 
-__all__ = ["CheckpointConfig", "CheckpointManager", "SaveReport"]
+__all__ = ["CheckpointConfig", "CheckpointManager", "RestoreReport",
+           "SaveReport"]
 
 #: checkpoint geometry: dirty unit = 4 KiB TPU tile, write granule = 16 KiB
 CKPT_GEOMETRY = BlockGeometry(cache_line=TPU_TILE, block=4 * TPU_TILE)
@@ -79,11 +81,15 @@ class CheckpointConfig:
     manifest_capacity: int = 1 << 20
     delta: bool = True               # enable µLog shadow-slot deltas
     threads: int = 1                 # writer threads (G4: bounded; feeds policy)
-    #: save-scan kernel dispatch: "auto"/"fused"/"pallas"/"ref" run the
-    #: one-pass flush_pack kernel (auto = pallas on TPU, jnp oracle off);
-    #: "staged" keeps the pre-fusion dirty_diff → popcnt → compaction
-    #: chain (three live-buffer reads) for A/B benchmarks and the crash
-    #: corpus' byte-parity case
+    #: scan-kernel dispatch, BOTH directions. Save:
+    #: "auto"/"fused"/"pallas"/"ref" run the one-pass flush_pack kernel
+    #: (auto = pallas on TPU, jnp oracle off); "staged" keeps the
+    #: pre-fusion dirty_diff → popcnt → compaction chain (three
+    #: live-buffer reads) for A/B benchmarks and the crash corpus'
+    #: byte-parity case. Restore: the same values route the one-pass
+    #: apply_unpack kernel (verify+scatter+apply, one read of the
+    #: restored image) vs the staged popcount-verify → copy chain (two
+    #: reads) — staged and fused recover bit-identical state.
     kernel_impl: str = "auto"
     extra_slots: int = 4             # beyond the 2-per-page steady state
     #: PMem page-slot budget for the shard. None = classic sizing (two
@@ -148,6 +154,28 @@ class SaveReport:
         return self.blocks_written * CKPT_GEOMETRY.block
 
 
+@dataclasses.dataclass
+class RestoreReport:
+    """What one :meth:`CheckpointManager.restore` did — the read-side
+    mirror of :class:`SaveReport`. ``restore_read_bytes`` is the device
+    bytes the restore scan read over every attempted manifest entry: one
+    pass over the packed page images with the fused ``apply_unpack``
+    kernel, two (verify + copy) when staged. ``scan_ns`` prices that
+    traffic alone; ``modeled_ns`` folds it into the pool's full delta
+    via ``engine_time_ns(scan_read_bytes=)``."""
+
+    step: int = -1
+    #: manifest entries walked (newest-first) before one verified
+    entries_tried: int = 0
+    pages_total: int = 0
+    #: pages read back through the SSD spill map rather than PMem slots
+    pages_spilled: int = 0
+    restore_read_bytes: int = 0
+    scan_ns: float = 0.0
+    modeled_ns: float = 0.0
+    kernel_impl: str = "auto"
+
+
 class CheckpointManager:
     """Checkpoint manager for one shard (one host's slice of the state).
 
@@ -187,6 +215,10 @@ class CheckpointManager:
         self._shadow: Dict[int, int] = {}             # page -> shadow slot
         self._manifest_base = 0
         self._saves = 0
+        #: accounting of the most recent :meth:`restore` (None before one)
+        self.last_restore: Optional[RestoreReport] = None
+        self._restore_read_bytes = 0
+        self._restore_pages_spilled = 0
 
     # ----------------------------------------------------------- layout
 
@@ -500,7 +532,14 @@ class CheckpointManager:
         matches the recorded popcount checksum. Falls back to older
         manifests if a newer one was partially overwritten (can only happen
         beyond the double-buffer guarantee, but verification is cheap
-        insurance at restore time)."""
+        insurance at restore time).
+
+        Checksum verification and image assembly run as ONE device pass
+        per leaf through the fused ``apply_unpack`` kernel (the inverse
+        of the save scan's ``flush_pack``); ``cfg.kernel_impl="staged"``
+        keeps the pre-fusion verify-then-copy chain, which reads the
+        restored bytes twice. Either way the read traffic and modeled
+        time land in :attr:`last_restore` (a :class:`RestoreReport`)."""
         path = path or self.path
         cfg = self.cfg
         if self.pool is None:
@@ -529,46 +568,122 @@ class CheckpointManager:
         # manifests are verified against the untouched image)
         self._layout = self.pool.pages_layout("pages")
         img = self.pmem.durable_view()
+        before: PMemStats = self.pmem.stats.snapshot()
+        report = RestoreReport(kernel_impl=cfg.kernel_impl)
+        self._restore_read_bytes = 0
+        self._restore_pages_spilled = 0
         for raw in reversed(rec.entries):
             entry = json.loads(raw.decode())
+            report.entries_tried += 1
             state = self._try_restore_entry(entry, img, verify)
             if state is not None:
                 self._adopt(entry, state)
+                report.step = entry["step"]
+                report.pages_total = sum(
+                    len(meta["pages"]) for meta in entry["leaves"].values())
+                report.pages_spilled = self._restore_pages_spilled
+                report.restore_read_bytes = self._restore_read_bytes
+                report.scan_ns = COST_MODEL.scan_read_ns(
+                    report.restore_read_bytes)
+                report.modeled_ns = COST_MODEL.engine_time_ns(
+                    self.pmem.stats.delta(before),
+                    active_lanes=max(1, cfg.threads),
+                    scan_read_bytes=report.restore_read_bytes)
+                self.last_restore = report
                 return entry["step"], state
         raise RuntimeError("no manifest entry verifies — checkpoint corrupt")
 
     def _try_restore_entry(self, entry: Dict[str, Any], img: np.ndarray,
                            verify: bool) -> Optional[Dict[str, np.ndarray]]:
+        """One manifest entry → recovered state, or None if it no longer
+        verifies. The slot-header checks are host-side (a 12-byte unpack
+        per page); the data work — checksum verification + image
+        assembly — is one fused ``apply_unpack`` pass per leaf, or the
+        staged verify-then-copy chain under ``kernel_impl="staged"``."""
         import struct as _s
         cfg = self.cfg
         state: Dict[str, np.ndarray] = {}
         layout = self._layout
+        staged = cfg.kernel_impl == "staged" or cfg.page_size % 128 != 0
         for name, meta in entry["leaves"].items():
-            buf = np.zeros(len(meta["pages"]) * cfg.page_size, dtype=np.uint8)
-            for i, ((pid, slot, pvn), csum) in enumerate(
-                    zip(meta["pages"], meta["checksums"])):
+            pages: List[Optional[np.ndarray]] = []
+            spilled: List[Tuple[int, int, int]] = []   # (pos, pid, pvn)
+            for i, (pid, slot, pvn) in enumerate(meta["pages"]):
                 if slot == -1:
                     # SSD-resident page: the manifest pinned its pvn; the
                     # spill map must still hold exactly that version
                     if self._spill is None:
                         return None
-                    try:
-                        page = self._spill.read_spilled("pages", pid, pvn)
-                    except (KeyError, RuntimeError):
-                        return None
-                else:
-                    hdr_pid, hdr_pvn = _s.unpack_from("<IQ", img,
-                                                      layout.slot_off(slot))
-                    if hdr_pid != pid or hdr_pvn != pvn:
-                        return None   # slot was reused; not restorable
-                    off = layout.slot_data_off(slot)
-                    page = img[off : off + cfg.page_size]
-                if verify and csum and int((popcount(page) + 1) & 0xFFFFFFFF) != csum:
+                    spilled.append((i, pid, pvn))
+                    pages.append(None)
+                    continue
+                hdr_pid, hdr_pvn = _s.unpack_from("<IQ", img,
+                                                  layout.slot_off(slot))
+                if hdr_pid != pid or hdr_pvn != pvn:
+                    return None   # slot was reused; not restorable
+                off = layout.slot_data_off(slot)
+                pages.append(img[off : off + cfg.page_size])
+            if spilled:
+                try:
+                    got = self._spill.read_spilled_many(
+                        "pages", [(pid, pvn) for _, pid, pvn in spilled])
+                except (KeyError, RuntimeError):
                     return None
-                buf[i * cfg.page_size : (i + 1) * cfg.page_size] = page
+                for (pos, _, _), page in zip(spilled, got):
+                    pages[pos] = page
+                self._restore_pages_spilled += len(spilled)
+            csums = meta["checksums"]
+            if staged:
+                buf = self._staged_assemble(pages, csums, verify)
+            else:
+                buf = self._fused_assemble(pages, csums, verify)
+            if buf is None:
+                return None
             arr = buf[: meta["nbytes"]].view(np.dtype(meta["dtype"]))
             state[name] = arr.reshape(meta["shape"])
         return state
+
+    def _staged_assemble(self, pages: Sequence[np.ndarray],
+                         csums: Sequence[int],
+                         verify: bool) -> Optional[np.ndarray]:
+        """Pre-fusion restore chain: a popcount pass over every page to
+        verify it, then a second pass copying it into the leaf image —
+        the restored bytes cross the device twice."""
+        cfg = self.cfg
+        buf = np.zeros(len(pages) * cfg.page_size, dtype=np.uint8)
+        for i, (page, csum) in enumerate(zip(pages, csums)):
+            self._restore_read_bytes += (2 if verify else 1) * cfg.page_size
+            if verify and csum and int((popcount(page) + 1) & 0xFFFFFFFF) != csum:
+                return None
+            buf[i * cfg.page_size : (i + 1) * cfg.page_size] = page
+        return buf
+
+    def _fused_assemble(self, pages: Sequence[np.ndarray],
+                        csums: Sequence[int],
+                        verify: bool) -> Optional[np.ndarray]:
+        """Fused restore: ONE ``apply_unpack`` device pass verifies every
+        page's popcount against its manifest checksum AND scatters it to
+        its offset of the leaf image. A manifest checksum of 0 means
+        "never recorded" and is skipped, like the staged chain does."""
+        cfg = self.cfg
+        k = len(pages)
+        packed = (np.concatenate([np.asarray(p, dtype=np.uint8)
+                                  for p in pages])
+                  if k else np.zeros(0, dtype=np.uint8))
+        base = np.zeros(k * cfg.page_size, dtype=np.uint8)
+        # manifest stores popcount+1 (the Zero-log cnt==0 convention)
+        expected = ((np.asarray(csums, dtype=np.int64) - 1)
+                    & 0xFFFFFFFF).astype(np.uint32)
+        res = apply_unpack(base, packed,
+                           np.arange(k, dtype=np.int32), expected,
+                           block_bytes=cfg.page_size,
+                           impl=cfg.kernel_impl)
+        self._restore_read_bytes += k * cfg.page_size   # one pass, fused
+        if verify and res.nbad:
+            skip = np.asarray(csums, dtype=np.uint32) == 0
+            if np.any((np.asarray(res.ok) == 0) & ~skip):
+                return None
+        return np.asarray(res.out)
 
     def _adopt(self, entry: Dict[str, Any], state: Dict[str, np.ndarray]) -> None:
         """Rebuild volatile metadata so saving can continue after restore."""

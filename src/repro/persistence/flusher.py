@@ -72,10 +72,13 @@ class AsyncFlusher:
         unbounded host-RAM mirror. Shards whose pools are already built
         or whose configs pin their own values keep them.
 
-        ``kernel_impl`` propagates a save-scan dispatch (e.g. ``"fused"``
-        or ``"staged"``) into every shard config still at ``"auto"`` —
-        each worker lane's saves then run the one-pass flush_pack kernel
-        (or the staged A/B chain) per shard."""
+        ``kernel_impl`` propagates a scan dispatch (e.g. ``"fused"`` or
+        ``"staged"``) into every shard config still at ``"auto"``, and
+        it governs BOTH directions: each worker lane's saves run the
+        one-pass ``flush_pack`` kernel (or the staged A/B chain), and
+        each shard's ``restore``/``adopt`` runs the one-pass
+        ``apply_unpack`` verify+assemble (or the staged
+        verify-then-copy loop) — see ``CheckpointConfig.kernel_impl``."""
         if isinstance(managers, CheckpointManager):
             managers = [managers]
         self.managers: List[CheckpointManager] = list(managers)
@@ -179,6 +182,27 @@ class AsyncFlusher:
         if self.errors:
             raise self.errors[0]
         return self.reports
+
+    def restore_all(self, *, verify: bool = True):
+        """Restore every shard (drains in-flight saves first) and return
+        ``(step, states)`` — the common committed step and one state
+        dict per shard. Each shard restores through its own manager, so
+        the per-shard ``kernel_impl`` (fused ``apply_unpack`` vs staged)
+        and restore accounting (``manager.last_restore``) apply
+        shard-by-shard. Raises if the shards disagree on the newest
+        committed step — a torn multi-shard save (submit_all + wait
+        makes this impossible in normal operation)."""
+        self.wait()
+        steps, states = [], []
+        for mgr in self.managers:
+            step, state = mgr.restore(verify=verify)
+            steps.append(step)
+            states.append(state)
+        if len(set(steps)) != 1:
+            raise RuntimeError(
+                f"shards restored different steps {steps}: torn "
+                f"multi-shard checkpoint")
+        return steps[0], states
 
     def close(self) -> List[SaveReport]:
         for q in self._queues:

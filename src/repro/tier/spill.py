@@ -606,6 +606,17 @@ class SpillScheduler:
                 f"page {pid} of {owner!r}: SSD copy fails its checksum")
         return data
 
+    def read_spilled_many(self, owner: str,
+                          wants: List[Tuple[int, Optional[int]]]
+                          ) -> List[np.ndarray]:
+        """Batched :meth:`read_spilled`: fetch ``[(pid, pvn), ...]`` in
+        one call, returned in request order. The fused restore path uses
+        this so a leaf's SSD-resident pages arrive together and the
+        whole leaf can be verified+assembled in a single device pass;
+        any page that is missing, version-mismatched or corrupt raises
+        exactly like the single-page read would."""
+        return [self.read_spilled(owner, pid, pvn) for pid, pvn in wants]
+
     def spilled_pages(self, store=None) -> Dict[int, int]:
         """``{pid: pvn}`` of pages currently mapped to SSD (for one
         registered store, or all owners when ``store`` is ``None``)."""

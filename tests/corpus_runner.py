@@ -35,6 +35,7 @@ __all__ = [
     "run_cache_crash",
     "run_cache_restore_crash",
     "run_ckpt_fused_crash",
+    "run_restore_fused_crash",
     "run_serve_crash",
     "run_cluster_crash",
 ]
@@ -599,6 +600,76 @@ def run_ckpt_fused_crash(tmpdir, sparse_positions, crash_step, seed, prob):
         "recovery diverged between the fused and staged scan pipelines"
 
 
+# ============================================ crash-mid-fused-restore
+
+def run_restore_fused_crash(tmpdir, sparse_positions, crash_step, seed,
+                            prob):
+    """Kill a restore mid-apply — after ``crash_step - 1`` leaf
+    assemblies (the per-leaf ``apply_unpack`` dispatch, or the staged
+    verify-then-copy chain) — after the device already crashed with an
+    arbitrary eviction subset. Restore is read-only: the interrupted
+    attempt must leave the durable cut untouched, so a fresh manager
+    recovers the full committed step byte-identically. Run once under
+    ``kernel_impl="fused"`` and once under ``"staged"``; both must
+    produce the SAME (crashed, step, bytes) tuple — the fused kernel
+    changes how verification and assembly are scheduled, never what the
+    manifest protocol can recover.
+
+    Three leaves of different sizes/dtypes give three apply points per
+    manifest entry, so crash steps 1–3 land mid-entry."""
+    from repro.persistence import CheckpointConfig, CheckpointManager
+
+    def one_run(impl):
+        path = os.path.join(tmpdir, "restore-%s.pmem" % impl)
+        cfg = CheckpointConfig(page_size=128 * 1024,
+                               manifest_capacity=1 << 16, kernel_impl=impl)
+        m = CheckpointManager(path, cfg)
+        base = np.random.default_rng(11).standard_normal(131072)
+        s = {"w": base.astype(np.float32),                # 512 KiB
+             "b": np.arange(8192, dtype=np.float32),     # 32 KiB
+             "step_mask": np.arange(4096, dtype=np.uint32)}
+        m.save(0, s)
+        s = {k: v.copy() for k, v in s.items()}
+        for p in sparse_positions:
+            s["w"][p] += 1.0
+        m.save(1, s)
+        committed = {k: v.copy() for k, v in s.items()}
+        m.pmem.crash(rng=np.random.default_rng(seed), evict_prob=prob)
+
+        m2 = CheckpointManager(path, cfg)
+        fp = CrashAt(crash_step)
+        # one failpoint per leaf assembly, whichever chain runs it
+        for name in ("_fused_assemble", "_staged_assemble"):
+            orig = getattr(m2, name)
+            def failing(pages, csums, verify, _orig=orig):
+                fp("restore_apply")
+                return _orig(pages, csums, verify)
+            setattr(m2, name, failing)
+        crashed = False
+        try:
+            step, got = m2.restore()
+        except SimCrash:
+            crashed = True
+        if not crashed:
+            assert step == 1
+            for k in committed:
+                assert np.array_equal(got[k], committed[k]), (impl, k)
+
+        # the aborted restore mutated nothing durable: a fresh manager
+        # recovers the same committed cut, bit for bit
+        m3 = CheckpointManager(path, cfg)
+        step3, got3 = m3.restore()
+        assert step3 == 1
+        for k in committed:
+            assert np.array_equal(got3[k], committed[k]), (impl, k)
+        return crashed, step3, {k: got3[k].tobytes() for k in sorted(got3)}
+
+    fused = one_run("fused")
+    staged = one_run("staged")
+    assert fused == staged, \
+        "restore recovery diverged between fused and staged apply"
+
+
 # ================================================ crash-mid-request-batch
 
 def run_serve_crash(n_requests, wl_seed, crash_step, seed, prob, *,
@@ -671,7 +742,7 @@ def run_serve_crash(n_requests, wl_seed, crash_step, seed, prob, *,
 
 def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
                       prob, *, tiered=False, ssd_keep=1.0,
-                      resume_interleave=False):
+                      resume_interleave=False, width=1):
     """Crash a live view change at an arbitrary protocol point (the
     router's failpoints: view:started, then per moving range copy:page*,
     copy:wal*, flush:done, own:committed, invalidate:done, finally
@@ -694,7 +765,15 @@ def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
     deliberately left alone. After convergence, every device crashes
     AGAIN and the cluster reopens: any record the interrupted copy left
     in a target's WAL would now replay over the newer images and revert
-    a committed write — the reopen scrub must have fenced it away."""
+    a committed write — the reopen scrub must have fenced it away.
+
+    ``width`` flights that many ranges through the concurrent migration
+    driver per batch (stage-interleaved), so a single crash step lands
+    with 2+ ranges at MIXED protocol stages — e.g. one range's pages
+    already written back while its batch-mate is still mid-copy. The
+    exactly-old-XOR-exactly-new invariant and every other assertion
+    here must hold unchanged, because batching never reorders one
+    range's own copy → flush → own → invalidate sequence."""
     from repro.cluster import ClusterConfig, ClusterKV
 
     kv_kw = dict(npages=8, page_size=512, value_size=32,
@@ -733,7 +812,7 @@ def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
     c.failpoints = CrashAt(crash_step)
     crashed = False
     try:
-        c.reshard(target)
+        c.reshard(target, width=width)
     except SimCrash:
         crashed = True
     c.failpoints = None
@@ -794,8 +873,8 @@ def run_cluster_crash(nshards, new_nshards, n_ops, ckpt, crash_step, seed,
             c2.engine(sid).checkpoint()
 
     # --- resume: converge to the target view, re-moving only the
-    # not-yet-flipped ranges
-    rep = c2.resume()
+    # not-yet-flipped ranges (same concurrency as the interrupted run)
+    rep = c2.resume(width=width)
     if rep is not None:
         already_flipped = {r for r in range(cfg.n_ranges)
                            if owners_after_crash[r] == goal[r]

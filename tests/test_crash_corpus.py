@@ -20,6 +20,7 @@ from corpus_runner import (
     run_cache_restore_crash,
     run_ckpt_fused_crash,
     run_cluster_crash,
+    run_restore_fused_crash,
     run_generation_spill_crash,
     run_kv_crash,
     run_multilog_crash,
@@ -252,6 +253,32 @@ def test_ckpt_fused_crash_corpus(tmp_path, positions, step, seed, prob):
     run_ckpt_fused_crash(str(tmp_path), positions, step, seed, prob)
 
 
+# ============================================ crash-mid-fused-restore
+# (sparse-positions, crash_step, crash-seed, evict_prob) — the restore
+# direction of the fused-kernel corpus above: the device crashes with an
+# arbitrary eviction subset, then the restore itself dies after
+# crash_step-1 per-leaf apply dispatches (apply_unpack under
+# kernel_impl="fused", the verify-then-copy chain under "staged").
+# Restore is read-only, so the aborted attempt must leave the durable
+# cut untouched and a fresh manager recovers the committed step
+# byte-identically under BOTH impls (see
+# corpus_runner.run_restore_fused_crash). The state has three leaves,
+# so steps 1-3 land mid-manifest-entry; the huge step is the no-crash
+# control.
+
+RESTORE_FUSED_CORPUS = [
+    ((0, 40000), 1, 6001, 0.5),          # die on the first leaf apply
+    ((13000,), 2, 6002, 1.0),            # mid-entry, every line evicted
+    ((5, 70000, 131071), 3, 6003, 0.0),  # last leaf of the entry
+    ((0, 40000), 60, 6004, 0.4),         # no crash: clean restore control
+]
+
+
+@pytest.mark.parametrize("positions,step,seed,prob", RESTORE_FUSED_CORPUS)
+def test_restore_fused_crash_corpus(tmp_path, positions, step, seed, prob):
+    run_restore_fused_crash(str(tmp_path), positions, step, seed, prob)
+
+
 # ============================================ crash-mid-request-batch
 # (n_requests, workload-seed, crash_step, crash-seed, evict_prob,
 #  admission, slo_us) — crash steps land on ``req_applied`` /
@@ -317,6 +344,40 @@ def test_cluster_crash_corpus(nsh, new, n, ckpt, step, seed, prob,
                       tiered=tiered, ssd_keep=skeep)
 
 
+# Concurrent driver: the same view-change protocol, but width ranges
+# flighted per stage-interleaved batch — so one crash step lands with
+# 2+ ranges at MIXED protocol stages (one range's ownership already
+# flipped while its batch-mate is still pre-own, both mid-copy, etc.).
+# Steps below index the deterministic width>1 failpoint traces: the
+# 4→2 shrink batches both moving ranges (2-3 copy:page, 4-5 copy:wal,
+# 6-7 flush:done, 8-9 own:committed, 10-11 invalidate:done); the 4→1
+# drain moves four ranges as a batch of three (2-15) then one (16-21);
+# the never-checkpointed 2→4 grow ships a batched WAL-only stream
+# (2-11 copy:wal, then 12-17 flush/own/invalidate pairs). Same
+# invariants as the serial corpus — exactly-old-XOR-exactly-new per
+# range, committed reads, resume convergence at the same width,
+# scrubbed sources — because batching never reorders one range's own
+# copy → flush → own → invalidate sequence.
+
+CLUSTER_WIDTH_CORPUS = [
+    (4, 2, 48, 10, 3, 7301, 0.5, 2),   # batch of 2, both mid-page-copy
+    (4, 2, 48, 10, 9, 7302, 1.0, 2),   # range A flipped, batch-mate not
+    (4, 2, 48, 10, 11, 7303, 0.0, 2),  # both owned, one not invalidated
+    (2, 4, 48, 0, 7, 7304, 0.5, 2),    # mid batched WAL-only stream
+    (4, 1, 48, 10, 5, 7305, 0.5, 3),   # batch of 3 at three copy stages
+    (4, 1, 48, 10, 11, 7306, 0.5, 3),  # 2 of 3 flipped inside one batch
+    (4, 1, 48, 10, 17, 7307, 1.0, 3),  # second batch mid-copy
+    (4, 1, 48, 10, 99, 7308, 0.5, 3),  # no crash: clean width=3 control
+]
+
+
+@pytest.mark.parametrize(
+    "nsh,new,n,ckpt,step,seed,prob,width", CLUSTER_WIDTH_CORPUS)
+def test_cluster_width_crash_corpus(nsh, new, n, ckpt, step, seed, prob,
+                                    width):
+    run_cluster_crash(nsh, new, n, ckpt, step, seed, prob, width=width)
+
+
 # Stale-WAL fence: crash mid-copy AFTER copy:wal replayed committed
 # source records into the migration target's WAL, reopen (the scrub
 # must checkpoint the target, truncating that residue), then overwrite
@@ -344,3 +405,12 @@ def test_cluster_stale_wal_corpus(nsh, new, n, ckpt, step, seed, prob,
                                   tiered, skeep):
     run_cluster_crash(nsh, new, n, ckpt, step, seed, prob,
                       tiered=tiered, ssd_keep=skeep, resume_interleave=True)
+
+
+def test_cluster_stale_wal_concurrent_driver():
+    # the stale-WAL-residue scenario under the width=2 driver: the
+    # crash-interrupted batched copy leaves records in TWO targets' WALs
+    # at once, and the reopen scrub must fence both before the
+    # interleaved overwrites + width=2 resume + second restart
+    run_cluster_crash(2, 4, 48, 0, 7, 7309, 0.5,
+                      width=2, resume_interleave=True)

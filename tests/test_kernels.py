@@ -234,6 +234,99 @@ def test_compact_index_matches_flatnonzero():
         np.testing.assert_array_equal(np.asarray(index[:k]), want)
 
 
+# ----------------------------------------------------------- apply_unpack
+
+def _unpack_case(rng, n, dtype, k):
+    """A restore-shaped case: ``k`` packed blocks scattered over an
+    ``n``-element base, plus their true per-block popcounts."""
+    from repro.kernels.apply_unpack import block_popcounts
+    base = rand(rng, (n,), dtype)
+    nblocks = as_blocks(base)[0].shape[0]
+    idx = rng.choice(nblocks, size=min(k, nblocks), replace=False)
+    idx = np.sort(idx).astype(np.int32)
+    rows = block_rows(dtype)
+    packed = rand(rng, (idx.size, rows, LANES), dtype)
+    expected = np.asarray(block_popcounts(packed))
+    return base, packed, jnp.asarray(idx), jnp.asarray(expected)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_apply_unpack_ref_vs_pallas_dtypes(dtype):
+    from repro.kernels.apply_unpack import apply_unpack
+    rng = np.random.default_rng(19)
+    base, packed, idx, exp = _unpack_case(rng, 9000, dtype, 3)
+    res_ref = apply_unpack(base, packed, idx, exp, impl="ref")
+    res_pal = apply_unpack(base, packed, idx, exp, impl="pallas")
+    assert res_ref.nbad == 0 and res_pal.nbad == 0
+    np.testing.assert_array_equal(np.asarray(res_pal.out),
+                                  np.asarray(res_ref.out))
+    np.testing.assert_array_equal(np.asarray(res_pal.counts),
+                                  np.asarray(res_ref.counts))
+    np.testing.assert_array_equal(np.asarray(res_pal.ok),
+                                  np.asarray(res_ref.ok))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_apply_unpack_inverts_flush_pack(impl):
+    """The restore kernel is flush_pack's inverse: scatter the packed
+    dirty blocks onto the snapshot and the live buffer reappears,
+    checksum-verified against flush_pack's own per-block counts."""
+    from repro.kernels.apply_unpack import apply_unpack
+    rng = np.random.default_rng(23)
+    snap = rand(rng, (9000,), jnp.float32)
+    cur = _dirtied(rng, snap, [0, 4097, 8000])
+    fp = flush_pack(cur, snap, impl="ref")
+    k = fp.total
+    exp = np.asarray(fp.counts)[np.asarray(fp.index[:k])]
+    res = apply_unpack(snap, fp.packed[:k], fp.index[:k],
+                       jnp.asarray(exp), impl=impl)
+    assert res.nbad == 0
+    np.testing.assert_array_equal(np.asarray(res.out), np.asarray(cur))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_apply_unpack_detects_corruption(impl):
+    """A wrong expected count flags exactly the corrupted block; the
+    scatter still lands (the caller discards the whole result)."""
+    from repro.kernels.apply_unpack import apply_unpack
+    rng = np.random.default_rng(29)
+    base, packed, idx, exp = _unpack_case(rng, 8192, jnp.float32, 4)
+    bad = jnp.asarray(np.asarray(exp) + np.array([0, 1, 0, 0], np.uint32))
+    res = apply_unpack(base, packed, idx, bad, impl=impl)
+    assert res.nbad == 1
+    np.testing.assert_array_equal(np.asarray(res.ok),
+                                  np.array([1, 0, 1, 1], np.int32))
+
+
+def test_apply_unpack_clean_blocks_preserved():
+    """Blocks outside the scatter index keep the base bytes exactly."""
+    from repro.kernels.apply_unpack import apply_unpack
+    rng = np.random.default_rng(31)
+    base, packed, idx, exp = _unpack_case(rng, 9000, jnp.float32, 2)
+    res = apply_unpack(base, packed, idx, exp, impl="pallas")
+    out_b = np.asarray(as_blocks(jnp.asarray(res.out))[0])
+    base_b = np.asarray(as_blocks(jnp.asarray(base))[0])
+    touched = set(int(i) for i in np.asarray(idx))
+    clean = [b for b in range(base_b.shape[0]) if b not in touched]
+    np.testing.assert_array_equal(out_b[clean], base_b[clean])
+
+
+def test_apply_unpack_empty_and_ragged():
+    """k == 0 is a no-op; a base whose length is not a block multiple
+    round-trips through the padded blocked form unchanged."""
+    from repro.kernels.apply_unpack import apply_unpack
+    rng = np.random.default_rng(37)
+    base = rand(rng, (5000,), jnp.float32)      # ragged: 5000 * 4 % 4096 != 0
+    empty = apply_unpack(base, jnp.zeros((0,), jnp.float32),
+                         jnp.zeros((0,), jnp.int32),
+                         jnp.zeros((0,), jnp.uint32))
+    assert empty.nbad == 0
+    np.testing.assert_array_equal(np.asarray(empty.out), np.asarray(base))
+    b2, packed, idx, exp = _unpack_case(rng, 5000, jnp.float32, 2)
+    res = apply_unpack(b2, packed, idx, exp, impl="pallas")
+    assert res.out.shape == b2.shape and res.nbad == 0
+
+
 def test_pack_dirty_shares_compaction():
     """delta_pack's flag-driven entry point (the staged fallback) uses
     the same on-device compaction — no host flatnonzero — and agrees

@@ -113,6 +113,44 @@ def test_pack_apply_kernels_match_refs(nblocks, rows, seed):
     np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
 
 
+# ---------------------------------------------------------- apply_unpack
+
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    nblocks=st.integers(2, 24),
+    rows=st.sampled_from([8, 16]),
+    seed=st.integers(0, 999),
+    nbad=st.integers(0, 3),
+)
+def test_apply_unpack_kernel_matches_ref(nblocks, rows, seed, nbad):
+    """Restore-direction sweep: the fused verify+scatter kernel matches
+    the jnp oracle on the assembled image, the per-block popcounts and
+    the ok flags — including when ``nbad`` expected counts are wrong."""
+    from repro.kernels.apply_unpack.kernel import apply_unpack_blocked
+    from repro.kernels.apply_unpack.ref import (apply_unpack_blocked_ref,
+                                                block_popcounts)
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, nblocks + 1))
+    idx = jnp.asarray(rng.choice(nblocks, size=k, replace=False).astype(np.int32))
+    packed = rand(rng, (k, rows, LANES), jnp.float32)
+    base = rand(rng, (nblocks, rows, LANES), jnp.float32)
+    expected = np.asarray(block_popcounts(packed)).copy()
+    corrupt = rng.choice(k, size=min(nbad, k), replace=False)
+    expected[corrupt] += 1
+    expected = jnp.asarray(expected)
+    out_k, ok_k, cnt_k = apply_unpack_blocked(base, packed, idx, expected,
+                                              interpret=True)
+    out_r, ok_r, cnt_r = apply_unpack_blocked_ref(base, packed, idx, expected)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_r))
+    np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
+    assert int((1 - np.asarray(ok_k)).sum()) == len(set(corrupt.tolist()))
+    # inverse of delta_pack's scatter on the clean blocks
+    untouched = [b for b in range(nblocks) if b not in set(np.asarray(idx).tolist())]
+    np.testing.assert_array_equal(np.asarray(out_k)[untouched],
+                                  np.asarray(base)[untouched])
+
+
 # ----------------------------------------------------------- flush_scan
 
 @settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
